@@ -1,0 +1,45 @@
+"""Framework integration table: the bespoke FiCCO schedule the heuristic
+assigns to each assigned architecture's data-dependent AG->GEMMs on the
+TPU v5e production mesh (model axis g=16), per input shape.
+
+This is what `overlap.mode = ficco_auto` executes inside the models —
+the paper's "frameworks and runtimes pick bespoke schedules" realized
+over the full architecture pool.
+"""
+
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.core import TPU_V5E, GemmShape, select_schedule
+
+from benchmarks.common import row
+
+
+def _tp_gemms(cfg, shape):
+    """The TP-SP AG->GEMM pairs of one block (global dims)."""
+    b, s = shape.global_batch, shape.seq_len
+    dp = 16  # data axis
+    m = (b // dp if b >= dp else b) * s  # per-replica token rows
+    gemms = {}
+    if cfg.d_ff:
+        gemms["mlp_up"] = GemmShape(m, cfg.d_ff, cfg.d_model)
+    h = cfg.num_heads * cfg.resolved_head_dim
+    gemms["attn_qkv"] = GemmShape(
+        m, h + 2 * cfg.num_kv_heads * cfg.resolved_head_dim, cfg.d_model
+    )
+    if cfg.moe and cfg.moe.num_shared_experts:
+        gemms["shared_expert"] = GemmShape(
+            m, cfg.moe.d_ff_expert * cfg.moe.num_shared_experts, cfg.d_model
+        )
+    return gemms
+
+
+def run() -> list[str]:
+    rows = []
+    shape = SHAPES["train_4k"]
+    for arch in sorted(ARCHS):
+        cfg = get_config(arch)
+        picks = []
+        for name, g in _tp_gemms(cfg, shape).items():
+            dec = select_schedule(g, TPU_V5E)
+            picks.append(f"{name}={dec.schedule.value}")
+        rows.append(row(f"arch_schedules/{arch}", 0.0, " ".join(picks)))
+    return rows

@@ -1,0 +1,36 @@
+"""Paper Fig. 9: contention-inefficiency loss (CIL) under overlap.
+
+GEMM CIL with DMA vs core-driven (RCCL-style) communication, and the
+communication-side CIL, vs the 8-way M-sharded Table I GEMMs.
+"""
+
+from repro.core import MI300X, TABLE_I, comm_cil, gemm_cil, geomean
+
+from benchmarks.common import row, timed
+
+
+def run() -> list[str]:
+    rows = []
+    g_dma, g_rccl, c_vals = [], [], []
+    for sc in TABLE_I:
+        sh = sc.gemm.shard(8, "m")
+        dma, us = timed(gemm_cil, sh, MI300X, degree=3, dma=True)
+        rccl, _ = timed(gemm_cil, sh, MI300X, degree=3, dma=False)
+        cc, _ = timed(comm_cil, sh, MI300X, degree=3, dma=True)
+        g_dma.append(dma)
+        g_rccl.append(rccl)
+        c_vals.append(cc)
+        rows.append(
+            row(f"cil/{sc.name}", us,
+                f"gemm_dma={dma:.3f} gemm_rccl={rccl:.3f} comm={cc:.3f}")
+        )
+    rows.append(row("cil/gemm_dma_geomean", 0.0, f"{geomean(g_dma):.3f}"))
+    rows.append(row("cil/gemm_rccl_geomean", 0.0, f"{geomean(g_rccl):.3f}"))
+    rows.append(row("cil/comm_geomean", 0.0, f"{geomean(c_vals):.3f}"))
+    shard_g = geomean(gemm_cil(s.gemm.shard(8, "m"), MI300X, degree=2)
+                      for s in TABLE_I)
+    shard_c = geomean(comm_cil(s.gemm.shard(8, "m"), MI300X, degree=2)
+                      for s in TABLE_I)
+    rows.append(row("cil/shard_overlap_gemm_geomean", 0.0, f"{shard_g:.3f}"))
+    rows.append(row("cil/shard_overlap_comm_geomean", 0.0, f"{shard_c:.3f}"))
+    return rows

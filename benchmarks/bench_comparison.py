@@ -1,0 +1,69 @@
+"""Paper Fig. 14: geomean speedups across techniques.
+
+serial(=1), shard overlap, FiCCO 1D (DMA), FiCCO 2D where applicable,
+FiCCO-rccl (core-driven comm).
+"""
+
+from repro.core import (
+    MI300X, STUDIED, TABLE_I, Schedule, geomean, simulate,
+)
+
+from benchmarks.common import row
+
+
+def run() -> list[str]:
+    shard, f1d, f2d, frccl = [], [], [], []
+    one_d = [s for s in STUDIED if s is not Schedule.UNIFORM_FUSED_2D]
+    for sc in TABLE_I:
+        shard.append(simulate(sc.gemm, MI300X, Schedule.SHARD_P2P).speedup)
+        f1d.append(max(simulate(sc.gemm, MI300X, s).speedup for s in one_d))
+        f2d.append(
+            max(
+                simulate(sc.gemm, MI300X, s).speedup
+                for s in STUDIED
+            )
+        )
+        frccl.append(
+            max(
+                simulate(sc.gemm, MI300X, s, dma=False).speedup
+                for s in one_d
+            )
+        )
+    rows = [
+        row("comparison/serial", 0.0, "1.00"),
+        row("comparison/shard_overlap_geomean", 0.0, f"{geomean(shard):.3f}"),
+        row("comparison/ficco_rccl_geomean", 0.0, f"{geomean(frccl):.3f}"),
+        row("comparison/ficco_1d_geomean", 0.0, f"{geomean(f1d):.3f}"),
+        row("comparison/ficco_best_geomean", 0.0, f"{geomean(f2d):.3f}"),
+    ]
+    # beyond-paper: fused DMA-into-place kernel (no gather/scatter streams)
+    fused = [
+        max(
+            simulate(sc.gemm, MI300X, s, dma_into_place=True).speedup
+            for s in STUDIED
+        )
+        for sc in TABLE_I
+    ]
+    rows.append(
+        row("comparison/ficco_dma_into_place_geomean", 0.0,
+            f"{geomean(fused):.3f}")
+    )
+    # TPU v5e torus: ring P2P is no longer catastrophic, FiCCO still wins
+    from repro.core import TPU_V5E
+
+    tp_shard = [
+        simulate(sc.gemm, TPU_V5E, Schedule.SHARD_P2P).speedup
+        for sc in TABLE_I
+    ]
+    tp_ficco = [
+        max(simulate(sc.gemm, TPU_V5E, s).speedup for s in STUDIED)
+        for sc in TABLE_I
+    ]
+    rows.append(
+        row("comparison/tpu_shard_overlap_geomean", 0.0,
+            f"{geomean(tp_shard):.3f}")
+    )
+    rows.append(
+        row("comparison/tpu_ficco_geomean", 0.0, f"{geomean(tp_ficco):.3f}")
+    )
+    return rows

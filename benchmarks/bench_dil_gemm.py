@@ -1,0 +1,37 @@
+"""Paper Fig. 7: GEMM decomposition-inefficiency loss (DIL).
+
+8-way and 64-way row (M) / column (K) sharding over the Table I GEMMs;
+validates the paper's two observations: (1) 64-way > 8-way DIL, (2)
+row-sharding hurts when M < K and column-sharding when M > K.
+"""
+
+from repro.core import MI300X, TABLE_I, gemm_dil, geomean
+
+from benchmarks.common import row, timed
+
+
+def run() -> list[str]:
+    rows = []
+    asym_ok = 0
+    for sc in TABLE_I:
+        g = sc.gemm
+        vals = {}
+        for ways in (8, 64):
+            for axis in ("m", "k"):
+                dil, us = timed(gemm_dil, g, MI300X, ways, axis)
+                vals[(ways, axis)] = dil
+                rows.append(
+                    row(f"dil_gemm/{sc.name}/{ways}way_{axis}", us,
+                        f"{dil:.3f}")
+                )
+        if g.m < g.k:
+            asym_ok += vals[(64, "m")] > vals[(64, "k")]
+        else:
+            asym_ok += vals[(64, "k")] > vals[(64, "m")]
+    rows.append(row("dil_gemm/asymmetry_match", 0.0, f"{asym_ok}/16"))
+    gm8 = geomean(
+        min(gemm_dil(s.gemm, MI300X, 8, "m"), gemm_dil(s.gemm, MI300X, 8, "k"))
+        for s in TABLE_I
+    )
+    rows.append(row("dil_gemm/geomean_8way_best_axis", 0.0, f"{gm8:.3f}"))
+    return rows

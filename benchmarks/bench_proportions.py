@@ -1,0 +1,22 @@
+"""Paper Fig. 10: proportion of DIL vs CIL per scenario.
+
+Higher OTB+MT scenarios shift toward CIL (8-way); 64-way stays DIL-heavy.
+"""
+
+from repro.core import MI300X, TABLE_I, gemm_cil, gemm_dil
+
+from benchmarks.common import row
+
+
+def run() -> list[str]:
+    rows = []
+    for ways in (8, 64):
+        for sc in sorted(TABLE_I, key=lambda s: s.gemm.flops):
+            dil = gemm_dil(sc.gemm, MI300X, ways, "m") - 1.0
+            cil = gemm_cil(sc.gemm.shard(ways, "m"), MI300X, degree=3) - 1.0
+            tot = max(dil + cil, 1e-9)
+            rows.append(
+                row(f"proportions/{ways}way/{sc.name}", 0.0,
+                    f"dil={dil/tot:.2f} cil={cil/tot:.2f}")
+            )
+    return rows

@@ -1,0 +1,26 @@
+"""Paper Fig. 12b: FiCCO schedule speedups with heuristic picks overlaid."""
+
+from repro.core import (
+    MI300X, STUDIED, TABLE_I, Schedule, best_schedule, select_schedule,
+    simulate,
+)
+
+from benchmarks.common import row, timed
+
+
+def run() -> list[str]:
+    rows = []
+    best_seen = 0.0
+    for sc in TABLE_I:
+        (best, res), us = timed(best_schedule, sc.gemm, MI300X)
+        dec = select_schedule(sc.gemm, MI300X)
+        parts = " ".join(
+            f"{s.value}={res[s].speedup:.2f}" for s in STUDIED
+        )
+        best_seen = max(best_seen, max(res[s].speedup for s in STUDIED))
+        rows.append(
+            row(f"schedules/{sc.name}", us,
+                f"{parts} heuristic={dec.schedule.value}")
+        )
+    rows.append(row("schedules/max_speedup", 0.0, f"{best_seen:.2f}"))
+    return rows

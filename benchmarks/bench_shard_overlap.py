@@ -1,0 +1,36 @@
+"""Paper Fig. 13: shard-based overlap deficiencies on a full mesh.
+
+Ideal speedup follows a bell curve in the GEMM/comm time ratio; shard
+P2P under-utilizes links (~(g-1)x comm slowdown) and never wins.
+"""
+
+from repro.core import MI300X, TABLE_I, Schedule, simulate
+from repro.core.inefficiency import ag_serial_time, p2p_step_time
+
+from benchmarks.common import row, timed
+
+
+def run() -> list[str]:
+    rows = []
+    worst = 1.0
+    for sc in sorted(
+        TABLE_I,
+        key=lambda s: simulate(s.gemm, MI300X, Schedule.SERIAL).serial_gemm
+        / simulate(s.gemm, MI300X, Schedule.SERIAL).serial_comm,
+    ):
+        r, us = timed(simulate, sc.gemm, MI300X, Schedule.SHARD_P2P)
+        ratio = r.serial_gemm / r.serial_comm
+        worst = min(worst, r.speedup)
+        rows.append(
+            row(f"shard_overlap/{sc.name}", us,
+                f"ratio={ratio:.2f} ideal={r.ideal_speedup:.2f} "
+                f"shard_p2p={r.speedup:.2f}")
+        )
+    mk = 1 << 30
+    comm_slow = (
+        (MI300X.group - 1) * p2p_step_time(mk / MI300X.group, MI300X)
+        / ag_serial_time(mk, MI300X)
+    )
+    rows.append(row("shard_overlap/comm_slowdown", 0.0, f"{comm_slow:.1f}x"))
+    rows.append(row("shard_overlap/worst_speedup", 0.0, f"{worst:.2f}"))
+    return rows

@@ -1,0 +1,47 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Figure mapping:
+  Fig 7  -> bench_dil_gemm        Fig 12b -> bench_schedules
+  Fig 8  -> bench_dil_comm        Fig 13  -> bench_shard_overlap
+  Fig 9  -> bench_cil             Fig 14  -> bench_comparison
+  Fig 10 -> bench_proportions     §VI-D   -> bench_heuristic
+  (real CPU timings)              -> bench_cpu_overlap
+"""
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_arch_schedules,
+        bench_cil,
+        bench_comparison,
+        bench_cpu_overlap,
+        bench_dil_comm,
+        bench_dil_gemm,
+        bench_heuristic,
+        bench_proportions,
+        bench_schedules,
+        bench_shard_overlap,
+    )
+
+    modules = [
+        bench_dil_gemm, bench_dil_comm, bench_cil, bench_proportions,
+        bench_schedules, bench_shard_overlap, bench_comparison,
+        bench_heuristic, bench_cpu_overlap, bench_arch_schedules,
+    ]
+    print("name,us_per_call,derived")
+    failed = 0
+    for mod in modules:
+        try:
+            for r in mod.run():
+                print(r)
+        except Exception as e:  # pragma: no cover
+            failed += 1
+            print(f"{mod.__name__},0.0,ERROR:{e}")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Design-space exploration (the paper's headline contribution).
+
+Walks all Table-I scenarios + the 8-variant space, prints per-scenario
+rankings, the pruning argument (§V-B), and heuristic accuracy — then does
+the same on the TPU v5e machine model to show what changes on a torus.
+
+Run:  PYTHONPATH=src python examples/explore_design_space.py
+"""
+
+from repro.core import (
+    MI300X, TABLE_I, TPU_V5E, explore, geomean, prune_report,
+)
+
+for machine in (MI300X, TPU_V5E):
+    print(f"\n===== {machine.name} ({machine.topology.value}) =====")
+    hits = speedups = 0
+    best_vals = []
+    for sc in TABLE_I:
+        ex = explore(sc, machine)
+        best = ex.results[ex.best]
+        best_vals.append(best.speedup)
+        ok = "OK " if ex.heuristic_correct else (
+            "~ok" if ex.results[ex.heuristic.schedule].total
+            <= 1.05 * best.total else "MISS"
+        )
+        print(f"{sc.name:4s} best={ex.best.value:18s} "
+              f"{best.speedup:4.2f}x heur={ex.heuristic.schedule.value:18s} "
+              f"{ok}")
+    print(f"geomean best speedup: {geomean(best_vals):.3f}")
+
+print("\n===== pruning argument (g2, all 8 variants) =====")
+for name, t, studied in prune_report(TABLE_I[1], MI300X):
+    tag = "studied" if studied else "pruned "
+    print(f"  {tag} {name:22s} {t*1e3:8.2f} ms")

@@ -1,0 +1,62 @@
+"""Generate the §Dry-run / §Roofline tables of EXPERIMENTS.md from the
+dry-run JSON outputs."""
+
+import json
+import sys
+
+
+def fmt_bytes(b):
+    if b != b:  # nan
+        return "n/a"
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PiB"
+
+
+def ms(t):
+    return f"{t * 1e3:.2f}"
+
+
+def main(path, multipod_path=None):
+    rows = json.load(open(path))
+    print("### Roofline table (single-pod 16x16 = 256 chips, baseline "
+          "gspmd_serial)\n")
+    print("| arch | shape | t_compute ms | t_memory ms | t_collective ms |"
+          " dominant | useful (6ND/HLO) | bytes/device | collectives |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if not r.get("ok"):
+            print(f"| {r['arch']} | {r['shape']} | FAILED: {r.get('error','')[:60]} |")
+            continue
+        colls = " ".join(
+            f"{k.split('-')[0][:2]}{k.split('-')[1][:3] if '-' in k else ''}:"
+            f"{fmt_bytes(v)}"
+            for k, v in sorted(r["collectives"].items())
+        )
+        print(
+            f"| {r['arch']} | {r['shape']} | {ms(r['t_compute'])} | "
+            f"{ms(r['t_memory'])} | {ms(r['t_collective'])} | "
+            f"{r['dominant']} | {r['useful_flops_ratio']:.2f} | "
+            f"{fmt_bytes(r['bytes_per_device'])} | {colls} |"
+        )
+    if multipod_path:
+        mrows = json.load(open(multipod_path))
+        ok = sum(1 for r in mrows if r.get("ok"))
+        print(f"\n### Multi-pod (2x16x16 = 512 chips): {ok}/{len(mrows)} "
+              "lower+compile passed\n")
+        print("| arch | shape | bytes/device | collective kinds |")
+        print("|---|---|---|---|")
+        for r in mrows:
+            if not r.get("ok"):
+                print(f"| {r['arch']} | {r['shape']} | FAILED | "
+                      f"{r.get('error','')[:70]} |")
+                continue
+            kinds = " ".join(sorted(r["collective_counts"]))
+            print(f"| {r['arch']} | {r['shape']} | "
+                  f"{fmt_bytes(r['bytes_per_device'])} | {kinds} |")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,58 @@
+"""Checkpointing: flat-leaf npz + JSON treedef, atomic, restartable."""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> tuple[list[np.ndarray], Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    return [np.asarray(l) for l in leaves], treedef
+
+
+def save_checkpoint(directory: str, state: Any, step: int) -> str:
+    os.makedirs(directory, exist_ok=True)
+    leaves, treedef = _flatten(state)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    meta = {"step": step, "treedef": str(treedef), "n_leaves": len(leaves)}
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    os.close(fd)
+    np.savez(tmp, **{f"leaf_{i}": l for i, l in enumerate(leaves)})
+    os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+    with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as f:
+        json.dump(meta, f)
+    with open(os.path.join(directory, "latest"), "w") as f:
+        f.write(str(step))
+    return path
+
+
+def latest_step(directory: str) -> int | None:
+    p = os.path.join(directory, "latest")
+    if not os.path.exists(p):
+        return None
+    return int(open(p).read().strip())
+
+
+def restore_checkpoint(directory: str, like: Any, step: int | None = None):
+    """Restore into the structure of ``like`` (shape/dtype validated)."""
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {directory}")
+    data = np.load(os.path.join(directory, f"ckpt_{step:08d}.npz"))
+    leaves, treedef = jax.tree.flatten(like)
+    restored = []
+    for i, ref in enumerate(leaves):
+        arr = data[f"leaf_{i}"]
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(
+                f"leaf {i}: checkpoint shape {arr.shape} != {ref.shape}"
+            )
+        restored.append(jnp.asarray(arr, ref.dtype))
+    return jax.tree.unflatten(treedef, restored), step

@@ -1,0 +1,7 @@
+"""Config for --arch arctic-480b (see registry for the citation)."""
+
+from repro.configs.registry import arctic_480b as _make
+
+
+def make_config():
+    return _make()

@@ -1,0 +1,7 @@
+"""Config for --arch deepseek-v2-lite-16b (see registry for the citation)."""
+
+from repro.configs.registry import deepseek_v2_lite_16b as _make
+
+
+def make_config():
+    return _make()

@@ -1,0 +1,7 @@
+"""Config for --arch internvl2-76b (see registry for the citation)."""
+
+from repro.configs.registry import internvl2_76b as _make
+
+
+def make_config():
+    return _make()

@@ -1,0 +1,7 @@
+"""Config for --arch jamba-1.5-large-398b (see registry for the citation)."""
+
+from repro.configs.registry import jamba_1_5_large_398b as _make
+
+
+def make_config():
+    return _make()

@@ -1,0 +1,7 @@
+"""Config for --arch olmo-1b (see registry for the citation)."""
+
+from repro.configs.registry import olmo_1b as _make
+
+
+def make_config():
+    return _make()

@@ -1,0 +1,7 @@
+"""Config for --arch seamless-m4t-large-v2 (see registry for the citation)."""
+
+from repro.configs.registry import seamless_m4t_large_v2 as _make
+
+
+def make_config():
+    return _make()

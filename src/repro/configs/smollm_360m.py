@@ -1,0 +1,7 @@
+"""Config for --arch smollm-360m (see registry for the citation)."""
+
+from repro.configs.registry import smollm_360m as _make
+
+
+def make_config():
+    return _make()

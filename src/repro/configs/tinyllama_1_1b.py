@@ -1,0 +1,7 @@
+"""Config for --arch tinyllama-1.1b (see registry for the citation)."""
+
+from repro.configs.registry import tinyllama_1_1b as _make
+
+
+def make_config():
+    return _make()

@@ -1,0 +1,7 @@
+"""Config for --arch xlstm-1.3b (see registry for the citation)."""
+
+from repro.configs.registry import xlstm_1_3b as _make
+
+
+def make_config():
+    return _make()

@@ -1,0 +1,7 @@
+"""Config for --arch yi-9b (see registry for the citation)."""
+
+from repro.configs.registry import yi_9b as _make
+
+
+def make_config():
+    return _make()

@@ -1,0 +1,65 @@
+"""FiCCO core: the paper's contribution as a composable library.
+
+Layers:
+  * machine / workload  — hardware + operator descriptors (Table I included)
+  * inefficiency        — DIL / CIL analytic models (§IV), paper-calibrated
+  * schedule_types      — the design space (Fig. 11a)
+  * simulator           — two-channel discrete schedule simulator (Fig. 11b)
+  * heuristics          — static OTB x MT schedule selection (Fig. 12a)
+  * explorer            — full design-space exploration + pruning argument
+"""
+
+from repro.core.machine import MACHINES, MI300X, TPU_V5E, MachineSpec, Topology
+from repro.core.workload import (
+    SCENARIOS,
+    TABLE_I,
+    CollectiveKind,
+    GemmShape,
+    Scenario,
+    geomean,
+    synthetic_scenarios,
+)
+from repro.core.schedule_types import (
+    ALL_VARIANTS,
+    SIGNATURES,
+    STUDIED,
+    CommShape,
+    FiccoVariant,
+    Granularity,
+    Schedule,
+    Uniformity,
+)
+from repro.core.inefficiency import (
+    GemmExec,
+    a2a_chunk_step_time,
+    ag_serial_time,
+    comm_cil,
+    gemm_cil,
+    gemm_dil,
+    gemm_exec,
+    gemm_time_decomposed,
+    p2p_step_time,
+)
+from repro.core.simulator import SimResult, best_schedule, simulate
+from repro.core.heuristics import (
+    HeuristicDecision,
+    calibrate_tau,
+    machine_threshold,
+    select_schedule,
+)
+from repro.core.explorer import Exploration, explore, prune_report
+
+__all__ = [
+    "MACHINES", "MI300X", "TPU_V5E", "MachineSpec", "Topology",
+    "SCENARIOS", "TABLE_I", "CollectiveKind", "GemmShape", "Scenario",
+    "geomean", "synthetic_scenarios",
+    "ALL_VARIANTS", "SIGNATURES", "STUDIED", "CommShape", "FiccoVariant",
+    "Granularity", "Schedule", "Uniformity",
+    "GemmExec", "a2a_chunk_step_time", "ag_serial_time", "comm_cil",
+    "gemm_cil", "gemm_dil", "gemm_exec", "gemm_time_decomposed",
+    "p2p_step_time",
+    "SimResult", "best_schedule", "simulate",
+    "HeuristicDecision", "calibrate_tau", "machine_threshold",
+    "select_schedule",
+    "Exploration", "explore", "prune_report",
+]

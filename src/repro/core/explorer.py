@@ -1,0 +1,108 @@
+"""Design-space explorer: enumerate, simulate and rank every schedule.
+
+This reproduces the paper's §V-B pruning argument programmatically: of the
+eight combinatorial FiCCO schedules, the four not studied have inefficiency
+signatures that are (near-)strictly dominated.  ``explore`` ranks all
+executable schedules for a scenario; ``prune_report`` shows why the four
+extra design points lose.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import inefficiency as ineff
+from repro.core.heuristics import HeuristicDecision, select_schedule
+from repro.core.machine import MachineSpec
+from repro.core.schedule_types import (
+    ALL_VARIANTS,
+    STUDIED,
+    CommShape,
+    FiccoVariant,
+    Granularity,
+    Schedule,
+    Uniformity,
+)
+from repro.core.simulator import SimResult, simulate
+from repro.core.workload import GemmShape, Scenario
+
+
+@dataclasses.dataclass(frozen=True)
+class Exploration:
+    scenario: Scenario
+    results: dict[Schedule, SimResult]
+    best: Schedule
+    heuristic: HeuristicDecision
+
+    @property
+    def heuristic_correct(self) -> bool:
+        return self.heuristic.schedule is self.best
+
+    @property
+    def heuristic_loss(self) -> float:
+        """Fraction of the optimal speedup lost by the heuristic's pick."""
+        opt = self.results[self.best].speedup
+        got = self.results[self.heuristic.schedule].speedup
+        if opt <= 1.0:
+            return 0.0
+        return max(0.0, (opt - got) / (opt - 1.0))
+
+
+def explore(
+    scenario: Scenario, machine: MachineSpec, *, dma: bool = True
+) -> Exploration:
+    results = {
+        s: simulate(scenario.gemm, machine, s, dma=dma)
+        for s in (Schedule.SERIAL, Schedule.SHARD_P2P, *STUDIED)
+    }
+    best = min(results, key=lambda s: results[s].total)
+    return Exploration(
+        scenario, results, best, select_schedule(scenario.gemm, machine)
+    )
+
+
+def _variant_proxy_time(
+    variant: FiccoVariant, gemm: GemmShape, machine: MachineSpec
+) -> float:
+    """Signature-level time proxy for *any* of the 8 variants.
+
+    Used only to rank unstudied variants against studied ones: per-step GEMM
+    size fixes DIL (via the chunk roofline), concurrency degree fixes CIL.
+    """
+    g = machine.group
+    dev = gemm.device_gemm(g)
+    if variant.shape is CommShape.TWO_D:
+        base = dev.shard(g, "k")
+        if variant.uniformity is Uniformity.HETERO:
+            # hetero-2D: local K-slice first, then row-sharded remote K-slices
+            # -> chunk GEMM additionally row-sharded: strictly smaller GEMM.
+            base = base.shard(g, "m")
+        if variant.granularity is Granularity.UNFUSED:
+            base = base.shard(g, "m") if base.m >= g else base
+        accumulate = True
+    else:
+        base = dev.shard(g, "m")
+        if variant.granularity is Granularity.UNFUSED:
+            base = base.shard(g, "m")
+        accumulate = False
+    # Chunk count follows from covering the device GEMM's total work.
+    chunks = max(1, round(dev.flops / base.flops))
+    per = ineff.gemm_exec(base, machine, accumulate=accumulate).time
+    cil = ineff.gemm_cil(base, machine, degree=variant.concurrency_degree)
+    chunk_bytes = float(gemm.m * gemm.k) * gemm.dtype_bytes / (g * g)
+    t_comm = g * ineff.a2a_chunk_step_time(chunk_bytes, machine)
+    compute = chunks * per * cil
+    return max(compute, t_comm) + t_comm / g  # one exposed comm step
+
+
+def prune_report(
+    scenario: Scenario, machine: MachineSpec
+) -> list[tuple[str, float, bool]]:
+    """(variant-name, proxy time, studied?) for all 8 variants, sorted."""
+    studied_names = {s.variant.name for s in STUDIED}
+    rows = []
+    for v in ALL_VARIANTS:
+        t = _variant_proxy_time(v, scenario.gemm, machine)
+        rows.append((v.name, t, v.name in studied_names))
+    rows.sort(key=lambda r: r[1])
+    return rows

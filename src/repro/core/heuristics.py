@@ -1,0 +1,114 @@
+"""FiCCO schedule-selection heuristics (paper Fig. 12a).
+
+The decision tree uses only *static* GEMM parameters so frameworks/runtimes
+can pick a bespoke schedule without profiling:
+
+  1. Communication shape: 1D if M > K else 2D — minimizes the dominant DIL
+     direction (row-sharding hurts when M < K, §IV-C1).  2D has a single
+     studied schedule: uniform-fused-2D.
+  2. Within 1D, compare the combined OTB x MT metric (note OTB * MT_bytes
+     == 2*M*N*K == the GEMM's FLOPs) against a machine-level threshold
+     derived from peak compute (op-to-byte x memory bandwidth = FLOPs,
+     scaled by a one-time-tuned horizon TAU):
+
+        metric <  T        -> uniform-fused-1D   (low DIL / high CIL)
+        metric >= 5 * T    -> hetero-unfused-1D  (high DIL / low CIL)
+        otherwise          -> hetero-fused-1D    (balanced)
+
+TAU is the paper's "one-time tuning cost for thresholds" (§VIII-C); it is
+fit once per machine in ``calibrate_tau`` against the simulator and then
+frozen (default below was frozen for MI300X).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.machine import MachineSpec
+from repro.core.schedule_types import Schedule
+from repro.core.workload import GemmShape
+
+# One-time tuned horizon (seconds of peak compute) per machine family —
+# frozen after calibration against the schedule simulator (paper §VIII-C:
+# thresholds carry a one-time tuning cost per machine).
+DEFAULT_TAU = 0.02
+_TAU_OVERRIDES: dict[str, float] = {}
+
+# Beyond-paper guard: operators too small to amortize even one extra kernel
+# launch per chunk are left serial (the paper's scenarios never hit this; our
+# smoke-scale models do).
+MIN_DECOMPOSE_FLOPS = 1.0e9
+
+
+@dataclasses.dataclass(frozen=True)
+class HeuristicDecision:
+    schedule: Schedule
+    metric: float  # OTB x MT == GEMM FLOPs
+    threshold: float
+    reason: str
+
+
+def machine_threshold(machine: MachineSpec, tau: float | None = None) -> float:
+    """T = peak FLOP/s x TAU: 'op-to-byte x memory bandwidth = FLOPs'."""
+    if tau is None:
+        tau = _TAU_OVERRIDES.get(machine.name, DEFAULT_TAU)
+    return machine.peak_flops * tau
+
+
+def select_schedule(
+    gemm: GemmShape,
+    machine: MachineSpec,
+    *,
+    tau: float | None = None,
+    allow_serial_guard: bool = True,
+) -> HeuristicDecision:
+    metric = gemm.otb * gemm.bytes_mt  # == gemm.flops
+    t = machine_threshold(machine, tau)
+
+    if allow_serial_guard and gemm.flops < MIN_DECOMPOSE_FLOPS:
+        return HeuristicDecision(
+            Schedule.SERIAL, metric, t,
+            "operator too small to amortize decomposition (beyond-paper guard)",
+        )
+    if gemm.m < gemm.k:
+        return HeuristicDecision(
+            Schedule.UNIFORM_FUSED_2D, metric, t,
+            "M < K: row-sharding suboptimal -> 2D (column) communication",
+        )
+    if metric < t:
+        return HeuristicDecision(
+            Schedule.UNIFORM_FUSED_1D, metric, t,
+            "OTBxMT below machine threshold: DIL-sensitive, CIL-tolerant",
+        )
+    if metric >= 5.0 * t:
+        return HeuristicDecision(
+            Schedule.HETERO_UNFUSED_1D, metric, t,
+            "OTBxMT >= 5x threshold: CIL-sensitive, DIL-tolerant",
+        )
+    return HeuristicDecision(
+        Schedule.HETERO_FUSED_1D, metric, t,
+        "OTBxMT in middle tranche: balanced signature",
+    )
+
+
+def calibrate_tau(
+    machine: MachineSpec,
+    scenarios,
+    candidates=(0.02, 0.05, 0.1, 0.2, 0.5, 1.0),
+) -> float:
+    """One-time TAU fit: maximize agreement with the simulator-optimal
+    schedule over a calibration set (paper tunes thresholds per machine)."""
+    from repro.core.simulator import best_schedule
+
+    best_tau, best_acc = candidates[0], -1.0
+    for tau in candidates:
+        hits = 0
+        for sc in scenarios:
+            dec = select_schedule(sc.gemm, machine, tau=tau)
+            opt, _ = best_schedule(sc.gemm, machine)
+            hits += dec.schedule is opt
+        acc = hits / len(scenarios)
+        if acc > best_acc:
+            best_tau, best_acc = tau, acc
+    _TAU_OVERRIDES[machine.name] = best_tau
+    return best_tau

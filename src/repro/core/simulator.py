@@ -1,0 +1,264 @@
+"""Discrete two-resource schedule simulator (paper Fig. 6 / Fig. 11b).
+
+Every schedule is lowered to two serially-ordered work queues — a *comm
+channel* (link DMAs) and a *compute channel* (GEMM + Gather/Scatter HBM
+moves) — plus dependencies "compute step i needs comm step j".  The pipeline
+recurrence then yields the end-to-end time:
+
+    finish_comm[j]  = finish_comm[j-1] + comm[j]
+    start_comp[i]   = max(finish_comp[i-1], finish_comm[dep(i)])
+    total           = finish_comp[-1]
+
+DIL is *not* injected: it emerges from the per-chunk roofline in
+``inefficiency.gemm_exec`` (weight re-reads, launch latencies, tile
+quantization).  CIL multiplies each stream's step times according to the
+schedule's concurrency degree, matching the paper's calibrated geomeans.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import inefficiency as ineff
+from repro.core.machine import MachineSpec
+from repro.core.schedule_types import Schedule
+from repro.core.workload import GemmShape
+
+
+@dataclasses.dataclass(frozen=True)
+class SimResult:
+    schedule: Schedule
+    total: float
+    comm_busy: float
+    compute_busy: float
+    exposed_comm: float
+    steps: int
+    # Isolated single-op reference times:
+    serial_comm: float
+    serial_gemm: float
+
+    @property
+    def serial_total(self) -> float:
+        return self.serial_comm + self.serial_gemm
+
+    @property
+    def speedup(self) -> float:
+        return self.serial_total / self.total
+
+    @property
+    def ideal_total(self) -> float:
+        """Perfect overlap, zero DIL/CIL (paper's 'Ideal Execution')."""
+        return max(self.serial_comm, self.serial_gemm)
+
+    @property
+    def ideal_speedup(self) -> float:
+        return self.serial_total / self.ideal_total
+
+
+def _pipeline(
+    comm: list[float], compute: list[float], deps: list[int | None]
+) -> tuple[float, float]:
+    """Run the two-channel pipeline; returns (total, exposed_comm)."""
+    finish_comm: list[float] = []
+    t = 0.0
+    for c in comm:
+        t += c
+        finish_comm.append(t)
+    t_comp = 0.0
+    exposed = 0.0
+    for i, work in enumerate(compute):
+        dep = deps[i]
+        ready = finish_comm[dep] if dep is not None else 0.0
+        if ready > t_comp:
+            exposed += ready - t_comp
+            t_comp = ready
+        t_comp += work
+    return max(t_comp, finish_comm[-1] if finish_comm else 0.0), exposed
+
+
+def simulate(
+    gemm: GemmShape,
+    machine: MachineSpec,
+    schedule: Schedule,
+    *,
+    dma: bool = True,
+    dma_into_place: bool = False,
+) -> SimResult:
+    """Simulate one data-dependent AG->GEMM (or A2A->GEMM) scenario.
+
+    ``dma_into_place`` models the beyond-paper fused Pallas kernel
+    (repro.kernels.ficco_ag_matmul): chunks are DMA'd directly into the
+    step buffer and outputs written in place, eliminating the Gather /
+    Scatter streams — lower concurrency degree AND no gather/scatter
+    residual time.  On the paper's GPU realization those streams exist
+    because receive buffers are separate (hence uniform schedules' HIGH
+    CIL signature); TPU strided remote DMA removes them.
+    """
+    g = machine.group
+    b = gemm.dtype_bytes
+    # Per-device GEMM: TP column-shards the weight over the group, so the
+    # data-dependent GEMM each device runs is (M, N/g, K) (Table I lists
+    # global GEMMs).  The all-gathered activation is the full (M, K).
+    dev = gemm.device_gemm(g)
+    mk_bytes = float(gemm.m * gemm.k) * b
+    serial_comm = ineff.ag_serial_time(mk_bytes, machine)
+    serial_gemm = ineff.gemm_exec(dev, machine).time
+
+    if schedule is Schedule.SERIAL:
+        total = serial_comm + serial_gemm
+        return SimResult(
+            schedule, total, serial_comm, serial_gemm, serial_comm, 1,
+            serial_comm, serial_gemm,
+        )
+
+    if schedule is Schedule.SHARD_P2P:
+        return _sim_shard_p2p(gemm, dev, machine, serial_comm, serial_gemm, dma)
+
+    return _sim_ficco(
+        gemm, dev, machine, schedule, serial_comm, serial_gemm, dma,
+        dma_into_place,
+    )
+
+
+def _sim_shard_p2p(
+    gemm: GemmShape,
+    dev: GemmShape,
+    machine: MachineSpec,
+    serial_comm: float,
+    serial_gemm: float,
+    dma: bool,
+) -> SimResult:
+    g = machine.group
+    shard = dev.shard(g, "m")
+    shard_bytes = float(shard.m * shard.k) * gemm.dtype_bytes
+    deg = 2  # comm + compute only
+    c_cil = ineff.comm_cil(shard, machine, degree=deg, dma=dma)
+    g_cil = ineff.gemm_cil(shard, machine, degree=deg, dma=dma)
+    t_p2p = ineff.p2p_step_time(shard_bytes, machine) * c_cil
+    t_gemm = ineff.gemm_exec(shard, machine).time * g_cil
+    # compute_0 = local shard (no dep); compute_i needs P2P step i-1.
+    comm = [t_p2p] * (g - 1)
+    compute = [t_gemm] * g
+    deps: list[int | None] = [None] + list(range(g - 1))
+    total, exposed = _pipeline(comm, compute, deps)
+    return SimResult(
+        Schedule.SHARD_P2P, total, sum(comm), sum(compute), exposed, g,
+        serial_comm, serial_gemm,
+    )
+
+
+def _sim_ficco(
+    gemm: GemmShape,
+    dev: GemmShape,
+    machine: MachineSpec,
+    schedule: Schedule,
+    serial_comm: float,
+    serial_gemm: float,
+    dma: bool,
+    dma_into_place: bool = False,
+) -> SimResult:
+    g = machine.group
+    b = gemm.dtype_bytes
+    var = schedule.variant
+    m_s = dev.m // g  # shard rows
+
+    if schedule is Schedule.UNIFORM_FUSED_2D:
+        # chunks are (m_s, K/g); step GEMM is accumulating (M, N, K/g).
+        chunk_bytes = float(m_s * (dev.k // g)) * b
+        step_gemm = dev.shard(g, "k")
+        gather_bytes = float(dev.m * (dev.k // g)) * b
+        scatter_bytes = 0.0
+        degree = 4  # comm + gather + compute + C accumulate traffic
+        accumulate = True
+        n_comm, n_comp = g, g
+        local_first = None
+        per_step_gemms = 1
+    elif schedule is Schedule.UNIFORM_FUSED_1D:
+        chunk_bytes = float((m_s // g) * dev.k) * b
+        step_gemm = dev.shard(g, "m")
+        gather_bytes = float(m_s * dev.k) * b
+        scatter_bytes = float(m_s * dev.n) * b
+        degree = 4  # comm + gather + compute + scatter
+        accumulate = False
+        n_comm, n_comp = g, g
+        local_first = None
+        per_step_gemms = 1
+    elif schedule is Schedule.HETERO_FUSED_1D:
+        chunk_bytes = float((m_s // g) * dev.k) * b
+        rows = (g - 1) * (m_s // g)
+        step_gemm = GemmShape(rows, dev.n, dev.k, b)
+        gather_bytes = float(rows * dev.k) * b
+        scatter_bytes = float(rows * dev.n) * b
+        degree = 3  # gather is remote-only and smaller
+        accumulate = False
+        n_comm, n_comp = g, g
+        local_first = dev.shard(g, "m")
+        per_step_gemms = 1
+    elif schedule is Schedule.HETERO_UNFUSED_1D:
+        chunk_bytes = float((m_s // g) * dev.k) * b
+        step_gemm = GemmShape(m_s // g, dev.n, dev.k, b)
+        gather_bytes = 0.0  # computes directly on each received chunk
+        scatter_bytes = float((g - 1) * (m_s // g) * dev.n) * b
+        degree = 2  # comm + compute (scatter folded into epilogue)
+        accumulate = False
+        n_comm, n_comp = g, g
+        local_first = dev.shard(g, "m")
+        per_step_gemms = g - 1
+    else:  # pragma: no cover
+        raise ValueError(schedule)
+
+    if dma_into_place:
+        # fused kernel: no separate gather/scatter streams
+        gather_bytes = 0.0
+        scatter_bytes = 0.0
+        degree = 2
+    c_cil = ineff.comm_cil(dev.shard(g, "m"), machine, degree=degree, dma=dma)
+    g_cil = ineff.gemm_cil(step_gemm, machine, degree=degree, dma=dma)
+
+    t_comm = ineff.a2a_chunk_step_time(chunk_bytes, machine) * c_cil
+    t_gemm_step = (
+        per_step_gemms
+        * ineff.gemm_exec(step_gemm, machine, accumulate=accumulate).time
+        * g_cil
+    )
+    # Gather/Scatter are DMA streams concurrent with compute+comm (paper:
+    # "uniform-fused-1D can execute communication, gather, compute, and
+    # scatter at the same time") — their pressure is what raises the
+    # schedule's concurrency degree / CIL; only residual non-hidden time
+    # (when they exceed the GEMM) serializes.
+    t_gather = ineff.hbm_move_time(gather_bytes, machine) if gather_bytes else 0.0
+    t_scatter = (
+        ineff.hbm_move_time(scatter_bytes, machine) if scatter_bytes else 0.0
+    )
+    t_step = max(t_gemm_step, t_gather + t_scatter)
+
+    comm = [t_comm] * n_comm
+    if local_first is not None:
+        t_local = (
+            ineff.gemm_exec(local_first, machine).time
+            * ineff.gemm_cil(local_first, machine, degree=degree, dma=dma)
+        )
+        compute: list[float] = [t_local] + [t_step] * n_comp
+        deps: list[int | None] = [None] + list(range(n_comm))
+    else:
+        compute = [t_step] * n_comp
+        deps = list(range(n_comm))
+    total, exposed = _pipeline(comm, compute, deps)
+    return SimResult(
+        schedule, total, sum(comm), sum(compute), exposed, n_comm,
+        serial_comm, serial_gemm,
+    )
+
+
+def best_schedule(
+    gemm: GemmShape, machine: MachineSpec, *, dma: bool = True
+) -> tuple[Schedule, dict[Schedule, SimResult]]:
+    """Simulator-optimal schedule among the studied four + baselines."""
+    from repro.core.schedule_types import STUDIED
+
+    results = {
+        s: simulate(gemm, machine, s, dma=dma)
+        for s in (Schedule.SERIAL, Schedule.SHARD_P2P, *STUDIED)
+    }
+    best = min(results, key=lambda s: results[s].total)
+    return best, results

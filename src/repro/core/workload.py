@@ -1,0 +1,176 @@
+"""Workload descriptors: the (M, N, K) GEMMs + collectives the paper studies.
+
+Table I of the paper lists GEMMs from real deployments (Llama-2/3
+tensor-sequence parallelism, DeepSeek/Mixtral expert parallelism).  Each
+scenario is a data-dependent collective -> GEMM pair:
+
+  * SP+TP:  all-gather of M-sharded activations, then GEMM with N-sharded
+            weights (Figure 3 of the paper).
+  * EP:     all-to-all token dispatch, then (grouped) expert GEMM.
+
+Conventions (paper §IV-C1): the *global* GEMM is (M, N, K); the activation
+input (M, K) starts row-sharded over the group; weights (K, N) are resident
+(column-sharded over N, which does not interact with the overlap).  Static
+quantities:
+
+  OTB  (op-to-byte)   = flops / bytes_touched          (arithmetic intensity)
+  MT   (memory traffic) = M*K + K*N + M*N  elements     (paper's definition)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+
+
+class CollectiveKind(enum.Enum):
+    ALL_GATHER = "all_gather"
+    ALL_TO_ALL = "all_to_all"
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmShape:
+    """A global GEMM: out(M, N) = in(M, K) @ w(K, N)."""
+
+    m: int
+    n: int
+    k: int
+    dtype_bytes: int = 2  # bf16
+
+    @property
+    def flops(self) -> float:
+        return 2.0 * self.m * self.n * self.k
+
+    @property
+    def elems_mt(self) -> float:
+        """Paper's memory-traffic metric MT, in elements."""
+        return float(self.m * self.k + self.k * self.n + self.m * self.n)
+
+    @property
+    def bytes_mt(self) -> float:
+        return self.elems_mt * self.dtype_bytes
+
+    @property
+    def otb(self) -> float:
+        """Static op-to-byte ratio (paper §IV-C1)."""
+        return self.flops / self.bytes_mt
+
+    def shard(self, ways: int, axis: str) -> "GemmShape":
+        """Decompose along 'm' (row), 'k' (inner) or 'n' (output col)."""
+        if axis == "m":
+            if self.m % ways:
+                raise ValueError(f"M={self.m} not divisible by {ways}")
+            return dataclasses.replace(self, m=self.m // ways)
+        if axis == "k":
+            if self.k % ways:
+                raise ValueError(f"K={self.k} not divisible by {ways}")
+            return dataclasses.replace(self, k=self.k // ways)
+        if axis == "n":
+            if self.n % ways:
+                raise ValueError(f"N={self.n} not divisible by {ways}")
+            return dataclasses.replace(self, n=self.n // ways)
+        raise ValueError(f"axis must be 'm', 'n' or 'k', got {axis!r}")
+
+    def device_gemm(self, group: int) -> "GemmShape":
+        """The per-device GEMM in a TP group: weights are column (N) sharded
+        across the group, so each device computes (M, N/g, K) after the
+        all-gather of the (M, K) activation.  Table I lists global GEMMs."""
+        if self.n % group == 0:
+            return self.shard(group, "n")
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """A data-dependent collective -> GEMM overlap scenario (Table I row)."""
+
+    name: str
+    parallelism: str  # "SP+TP" | "EP"
+    model: str
+    gemm: GemmShape
+    collective: CollectiveKind = CollectiveKind.ALL_GATHER
+
+    @property
+    def comm_bytes_per_device(self) -> float:
+        """Bytes each device must *receive* before the dependent GEMM.
+
+        For AG of the (M, K) activation sharded M-ways over ``g`` devices the
+        per-device ingress is (g-1)/g * M*K elements.  We report the full
+        gathered buffer M*K (what lands in the operand); per-link math is in
+        the simulator.
+        """
+        return float(self.gemm.m * self.gemm.k) * self.gemm.dtype_bytes
+
+
+def _sc(name: str, par: str, model: str, m: int, n: int, k: int) -> Scenario:
+    kind = (
+        CollectiveKind.ALL_TO_ALL if par == "EP" else CollectiveKind.ALL_GATHER
+    )
+    return Scenario(name, par, model, GemmShape(m, n, k), kind)
+
+
+# --------------------------------------------------------------------------
+# Table I: GEMMs occurring in real world scenarios.
+# --------------------------------------------------------------------------
+TABLE_I: tuple[Scenario, ...] = (
+    _sc("g1", "SP+TP", "llama-3-405b", 16384, 16384, 131072),
+    _sc("g2", "SP+TP", "llama-3-405b", 131072, 16384, 16384),
+    _sc("g3", "SP+TP", "llama-3-405b", 53248, 16384, 131072),
+    _sc("g4", "SP+TP", "llama-3-405b", 131072, 53248, 16384),
+    _sc("g5", "SP+TP", "llama-2-70b", 8192, 8192, 262144),
+    _sc("g6", "SP+TP", "llama-2-70b", 262144, 8192, 8192),
+    _sc("g7", "SP+TP", "llama-2-70b", 28672, 8192, 262144),
+    _sc("g8", "SP+TP", "llama-2-70b", 262144, 28672, 8192),
+    _sc("g9", "SP+TP", "llama-3-405b", 196608, 18432, 16384),
+    _sc("g10", "SP+TP", "llama-3-405b", 196608, 106496, 16384),
+    _sc("g11", "SP+TP", "llama-2-70b", 1048576, 10240, 8192),
+    _sc("g12", "SP+TP", "llama-2-70b", 1048576, 57344, 8192),
+    _sc("g13", "EP", "DeepSeek", 1607680, 57344, 8192),
+    _sc("g14", "EP", "Mixtral", 147456, 28672, 4096),
+    _sc("g15", "EP", "Mixtral", 327680, 28672, 4096),
+    _sc("g16", "EP", "Mixtral", 229376, 28672, 4096),
+)
+
+SCENARIOS = {s.name: s for s in TABLE_I}
+
+
+def synthetic_scenarios(count: int = 16, seed: int = 0) -> list[Scenario]:
+    """Deterministic 'unseen' scenarios with diverse OTB / MT (paper §VI-D).
+
+    Spans M/K both > and < 1, and several orders of magnitude of FLOPs, like
+    the paper's sixteen synthetic evaluation points.
+    """
+    rng = _SplitMix(seed)
+    out: list[Scenario] = []
+    ms = [4096, 8192, 16384, 32768, 65536, 131072, 262144, 524288]
+    ks = [2048, 4096, 8192, 16384, 32768, 65536, 131072]
+    ns = [4096, 8192, 16384, 28672, 57344]
+    while len(out) < count:
+        m = ms[rng.next() % len(ms)]
+        k = ks[rng.next() % len(ks)]
+        n = ns[rng.next() % len(ns)]
+        name = f"syn{len(out)}"
+        out.append(_sc(name, "SP+TP", "synthetic", m, n, k))
+    return out
+
+
+class _SplitMix:
+    """Tiny deterministic PRNG so synthetic scenarios never drift."""
+
+    def __init__(self, seed: int):
+        self.state = (seed * 0x9E3779B97F4A7C15 + 1) & 0xFFFFFFFFFFFFFFFF
+
+    def next(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & 0xFFFFFFFFFFFFFFFF
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & 0xFFFFFFFFFFFFFFFF
+        return (z ^ (z >> 31)) & 0x7FFFFFFF
+
+
+def geomean(xs) -> float:
+    xs = list(xs)
+    if not xs:
+        return float("nan")
+    return math.exp(sum(math.log(x) for x in xs) / len(xs))

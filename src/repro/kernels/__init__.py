@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for FiCCO's performance-critical layers.
+
+  * dma_exchange    — the DMA-offloaded chunk all-to-all (the paper's core
+                      mechanism, adapted to TPU ICI DMA engines)
+  * ficco_ag_matmul — beyond-paper fused DMA+MXU pipeline (one kernel)
+  * chunked_gemm    — accumulating C += A @ B with VMEM BlockSpec tiling
+                      (the 2D schedule's accumulative GEMM)
+  * ops / ref       — jit'd wrappers + pure-jnp oracles
+"""

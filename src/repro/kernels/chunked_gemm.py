@@ -1,0 +1,128 @@
+"""Accumulating chunked GEMM: C += A @ B with explicit VMEM tiling.
+
+The 2D (column-sharded) FiCCO schedule needs accumulative GEMM kernels
+(paper §IV-C1: "column-sharding necessitates accumulative GEMM kernels").
+On TPU we express this as a Pallas kernel whose grid walks (M tiles,
+N tiles, K chunks); the fp32 accumulator tile lives in VMEM across the K
+steps (revisiting grid dimension), and only the final K step writes the
+output block — so one kernel invocation both performs the chunk GEMM and
+folds it into C without a round-trip through HBM per chunk.
+
+Block shapes default to MXU-aligned (128 multiples) and are chosen so
+(bm*bk + bk*bn + bm*bn*4) stays well inside VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def chunked_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """out = x @ w with K accumulated in VMEM across grid steps.
+
+    x: (M, K); w: (K, N) -> (M, N).  All dims must divide their blocks.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    if m % block_m or n % block_n or k % block_k:
+        raise ValueError(
+            f"({m},{n},{k}) not divisible by blocks "
+            f"({block_m},{block_n},{block_k})"
+        )
+    n_k = k // block_k
+    grid = (m // block_m, n // block_n, n_k)
+    kernel = functools.partial(_matmul_kernel, n_k=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, s: (i, s)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x, w)
+
+
+def accumulate_matmul(
+    c: jax.Array,
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """C += x @ w — the 2D schedule's per-step accumulating GEMM.
+
+    Implemented with input/output aliasing so C is updated in place
+    (no extra HBM copy of the accumulator between FiCCO steps).
+    """
+    m, k = x.shape
+    _, n = w.shape
+    if m % block_m or n % block_n or k % block_k:
+        return (c.astype(jnp.float32) + x @ w).astype(c.dtype)
+    n_k = k // block_k
+    grid = (m // block_m, n // block_n, n_k)
+
+    def kernel(c_ref, x_ref, w_ref, o_ref, acc_ref):
+        @pl.when(pl.program_id(2) == 0)
+        def _init():
+            acc_ref[...] = c_ref[...].astype(jnp.float32)
+
+        acc_ref[...] += jnp.dot(
+            x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+        )
+
+        @pl.when(pl.program_id(2) == n_k - 1)
+        def _done():
+            o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_n), lambda i, j, s: (i, j)),
+            pl.BlockSpec((block_m, block_k), lambda i, j, s: (i, s)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), c.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(c, x, w)
+
+
+__all__ = ["chunked_matmul", "accumulate_matmul"]

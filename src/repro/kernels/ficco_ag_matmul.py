@@ -1,0 +1,180 @@
+"""Fused FiCCO all-gather-matmul: DMA + MXU pipelined in ONE kernel.
+
+Beyond-paper, TPU-native variant (DESIGN.md §2): instead of alternating a
+communication kernel and a library GEMM (the paper's realization, kept in
+``dma_exchange.py``), this kernel double-buffers the chunk exchange against
+the step GEMM *inside* a single ``pallas_call``:
+
+    step s:  start all-to-all DMAs for chunk s+1  (ICI DMA engines)
+             wait chunk s's ingress DMAs
+             MXU matmul on step-s gathered buffer -> output rows
+
+The DMAs for step s+1 fly while the MXU multiplies step s — the contention
+surface is only HBM bandwidth (the paper's residual CIL-memory term); there is no
+kernel-launch gap, no gather kernel (chunks are DMA'd *into place* in the
+step buffer), and no scatter kernel (the output rows are written directly).
+This removes the Gather/Scatter streams that give uniform-fused-1D its HIGH
+CIL signature — measured in EXPERIMENTS.md §Perf as the `dma_into_place`
+optimization.
+
+Layout: x shard (m_s, K) split into g chunks of (m_c, K); w (K, n_local) is
+brought into VMEM tile by tile for the step GEMM; outputs are the
+(M = g*m_s, n_local) rows this device owns after the gather.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _fused_kernel(
+    group: int,
+    axis_name: str,
+    m_c: int,
+    k: int,
+    n_local: int,
+    x_ref,  # (g, m_c, K) local chunks, ANY/HBM
+    w_ref,  # (K, n_local), ANY/HBM
+    o_ref,  # (g, g, m_c, n_local): [step, src] output blocks, ANY/HBM
+    step_bufs,  # VMEM (2, g, m_c, K): double-buffered gathered steps
+    w_vmem,  # VMEM (K, n_local)
+    out_vmem,  # VMEM (g, m_c, n_local)
+    send_sems,  # DMA (2, g-1)
+    recv_sems,  # DMA (2, g)
+    out_sem,  # DMA
+    ready_sems,  # REGULAR (2,): receiver->sender slot flow control
+):
+    me = lax.axis_index(axis_name)
+
+    w_copy = pltpu.make_async_copy(w_ref, w_vmem, recv_sems.at[0, group - 1])
+    w_copy.start()
+
+    def start_step(s: int, slot: int):
+        """Send chunk s to all peers; receive into step_bufs[slot].
+
+        Flow control: a slot is reused every 2 steps.  Before pushing step
+        ``s >= 2`` into a peer's slot we must have that peer's release
+        signal from its step ``s-2`` consumption (g-1 signals total) —
+        otherwise a fast sender can overwrite a buffer a slow receiver is
+        still multiplying from (a data race the Mosaic interpreter's race
+        detector reproduces if this wait is removed).
+        """
+        if s >= 2:
+            pltpu.semaphore_wait(ready_sems.at[slot], group - 1)
+        local = pltpu.make_async_copy(
+            x_ref.at[s],
+            step_bufs.at[slot, me],
+            recv_sems.at[slot, group - 1],
+        )
+        local.start()
+        descs = [local]
+        for i in range(1, group):
+            peer = lax.rem(me + i, group)
+            rc = pltpu.make_async_remote_copy(
+                src_ref=x_ref.at[s],
+                dst_ref=step_bufs.at[slot, me],
+                send_sem=send_sems.at[slot, i - 1],
+                recv_sem=recv_sems.at[slot, i - 1],
+                device_id=(peer,),
+                device_id_type=pltpu.DeviceIdType.MESH,
+            )
+            rc.start()
+            descs.append(rc)
+        return descs
+
+    def wait_step(descs):
+        for rc in descs[1:]:
+            rc.wait_send()
+        for rc in descs[1:]:
+            rc.wait_recv()
+        descs[0].wait()
+
+    def release_slot(slot: int):
+        """Tell every peer our copy of this slot is consumed."""
+        for i in range(1, group):
+            peer = lax.rem(me + i, group)
+            pltpu.semaphore_signal(
+                ready_sems.at[slot],
+                1,
+                device_id=peer,
+                device_id_type=pltpu.DeviceIdType.MESH,
+            )
+
+    w_copy.wait()
+    inflight = start_step(0, 0)
+    for s in range(group):
+        slot = s % 2
+        wait_step(inflight)
+        # Load (consume) the gathered buffer, release the slot to peers,
+        # kick off the next exchange, THEN multiply — so step s+1's DMAs
+        # fly while the MXU works on step s.
+        gathered = step_bufs[slot].reshape(group * m_c, k)
+        if s + 2 < group:
+            release_slot(slot)
+        if s + 1 < group:
+            inflight = start_step(s + 1, (s + 1) % 2)
+        step_out = jnp.dot(
+            gathered, w_vmem[...], preferred_element_type=jnp.float32
+        )
+        out_vmem[...] = step_out.reshape(group, m_c, n_local).astype(
+            out_vmem.dtype
+        )
+        out_copy = pltpu.make_async_copy(out_vmem, o_ref.at[s], out_sem)
+        out_copy.start()
+        out_copy.wait()
+
+
+def ficco_ag_matmul_fused(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    axis_name: str,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused uniform-fused-1D: returns (M, n_local) like the reference.
+
+    Call inside shard_map over ``axis_name``.  VMEM budget: the step buffer
+    pair (2 * m_s * K), the weight panel (K * n_local) and the per-step
+    output (m_s * n_local) must fit VMEM — production shapes tile K/N
+    further; sizes used in tests and smoke configs fit comfortably.
+    """
+    g = lax.axis_size(axis_name)
+    m_s, k = x.shape
+    n_local = w.shape[1]
+    m_c = m_s // g
+    chunks = x.reshape(g, m_c, k)
+    kernel = functools.partial(_fused_kernel, g, axis_name, m_c, k, n_local)
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((g, g, m_c, n_local), x.dtype),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        scratch_shapes=[
+            pltpu.VMEM((2, g, m_c, k), x.dtype),
+            pltpu.VMEM((k, n_local), w.dtype),
+            pltpu.VMEM((g, m_c, n_local), x.dtype),
+            pltpu.SemaphoreType.DMA((2, g - 1)),
+            pltpu.SemaphoreType.DMA((2, g)),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.REGULAR((2,)),
+        ],
+        interpret=pltpu.InterpretParams() if interpret else False,
+        compiler_params=pltpu.CompilerParams(
+            collective_id=1, has_side_effects=True
+        ),
+    )(chunks, w)
+    # out[s, d] = rows of source d, step s -> global row d*m_s + s*m_c.
+    out = out.transpose(1, 0, 2, 3)  # (src, step, m_c, n)
+    return out.reshape(g * m_s, n_local)
+
+
+__all__ = ["ficco_ag_matmul_fused"]

@@ -1,0 +1,71 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True automatically on non-TPU backends so the
+same call sites work on this CPU container (Mosaic interpreter) and on real
+TPUs (compiled Mosaic).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.chunked_gemm import accumulate_matmul, chunked_matmul
+from repro.kernels.dma_exchange import (
+    a2a_chunk_exchange,
+    ficco_uniform_fused_1d_dma,
+)
+from repro.kernels.ficco_ag_matmul import ficco_ag_matmul_fused
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+def matmul(x, w, *, block_m=128, block_n=128, block_k=128):
+    return chunked_matmul(
+        x, w,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        interpret=not _on_tpu(),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+def matmul_accumulate(c, x, w, *, block_m=128, block_n=128, block_k=128):
+    return accumulate_matmul(
+        c, x, w,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        interpret=not _on_tpu(),
+    )
+
+
+def chunk_exchange(chunk, *, axis_name, group):
+    """shard_map-internal: DMA all-to-all of one FiCCO chunk."""
+    return a2a_chunk_exchange(
+        chunk, axis_name=axis_name, group=group, interpret=not _on_tpu()
+    )
+
+
+def ag_matmul_dma(x, w, *, axis_name):
+    """shard_map-internal: uniform-fused-1D with Pallas DMA comm."""
+    return ficco_uniform_fused_1d_dma(
+        x, w, axis_name=axis_name, interpret=not _on_tpu()
+    )
+
+
+def ag_matmul_fused(x, w, *, axis_name):
+    """shard_map-internal: fully fused DMA+MXU pipeline (beyond-paper)."""
+    return ficco_ag_matmul_fused(
+        x, w, axis_name=axis_name, interpret=not _on_tpu()
+    )
+
+
+__all__ = [
+    "matmul",
+    "matmul_accumulate",
+    "chunk_exchange",
+    "ag_matmul_dma",
+    "ag_matmul_fused",
+]

@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel (single-device semantics)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Oracle for chunked_matmul."""
+    return (
+        x.astype(jnp.float32) @ w.astype(jnp.float32)
+    ).astype(x.dtype)
+
+
+def accumulate_matmul_ref(
+    c: jax.Array, x: jax.Array, w: jax.Array
+) -> jax.Array:
+    """Oracle for accumulate_matmul (C += A @ B in fp32)."""
+    return (
+        c.astype(jnp.float32)
+        + x.astype(jnp.float32) @ w.astype(jnp.float32)
+    ).astype(c.dtype)
+
+
+def a2a_chunk_exchange_ref(chunk: jax.Array, *, axis_name: str) -> jax.Array:
+    """Oracle for a2a_chunk_exchange: the lax all-gather of the chunk."""
+    return lax.all_gather(chunk, axis_name, axis=0)
+
+
+def ag_matmul_ref(x: jax.Array, w: jax.Array, *, axis_name: str) -> jax.Array:
+    """Oracle for ficco_ag_matmul_fused / ficco_uniform_fused_1d_dma."""
+    x_full = lax.all_gather(x, axis_name, axis=0, tiled=True)
+    return x_full @ w
+
+
+__all__ = [
+    "matmul_ref",
+    "accumulate_matmul_ref",
+    "a2a_chunk_exchange_ref",
+    "ag_matmul_ref",
+]

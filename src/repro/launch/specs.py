@@ -1,0 +1,93 @@
+"""Input specs: ShapeDtypeStruct stand-ins (dry-run) or concrete batches.
+
+``input_specs(cfg, shape)`` mirrors what the data pipeline / serving
+frontend delivers for each assigned input shape:
+
+  * train/prefill: {tokens, labels} (+ prefix_embeds for VLM, enc_frames
+    for the audio enc-dec — the stubbed modality frontends).
+  * decode: {tokens (B, 1), pos, cache} — serve_step operands; the cache
+    covers the full ``seq_len`` context (ring-buffer-sized when the config
+    uses a sliding window).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import Model, build_model
+
+
+def _frontend_len(cfg: ModelConfig, seq: int) -> int:
+    return min(cfg.frontend.prefix_tokens, seq // 2) if cfg.frontend else 0
+
+
+def encoder_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    if not cfg.encdec:
+        return 0
+    return max(16, int(shape.seq_len * cfg.encdec.encoder_len_ratio))
+
+
+def train_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    specs: dict[str, Any] = {}
+    if cfg.family.value == "vlm":
+        p = _frontend_len(cfg, s)
+        specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (b, p, cfg.frontend.embed_dim or cfg.d_model), jnp.bfloat16
+        )
+        s_text = s - p
+    else:
+        s_text = s
+    if cfg.encdec:
+        specs["enc_frames"] = jax.ShapeDtypeStruct(
+            (b, encoder_len(cfg, shape), cfg.d_model), jnp.bfloat16
+        )
+    specs["tokens"] = jax.ShapeDtypeStruct((b, s_text), jnp.int32)
+    specs["labels"] = jax.ShapeDtypeStruct((b, s_text), jnp.int32)
+    return specs
+
+
+def decode_specs(
+    cfg: ModelConfig, shape: ShapeConfig, model: Model | None = None
+) -> dict[str, Any]:
+    model = model or build_model(cfg)
+    b, s = shape.global_batch, shape.seq_len
+    enc_len = encoder_len(cfg, dataclasses.replace(shape, seq_len=4096))
+    cache = jax.eval_shape(
+        lambda: model.init_cache(b, s, enc_len=enc_len)
+    )
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        "cache": cache,
+    }
+
+
+def input_specs(
+    cfg: ModelConfig, shape: ShapeConfig, model: Model | None = None
+) -> dict[str, Any]:
+    if shape.is_decode:
+        return decode_specs(cfg, shape, model)
+    return train_specs(cfg, shape)
+
+
+def concrete_batch(cfg: ModelConfig, shape: ShapeConfig, seed: int = 0):
+    """Materialize a train/prefill batch (smoke tests, examples)."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for name, spec in train_specs(cfg, shape).items():
+        if jnp.issubdtype(spec.dtype, jnp.integer):
+            out[name] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, spec.shape), spec.dtype
+            )
+        else:
+            out[name] = jnp.asarray(
+                rng.standard_normal(spec.shape), spec.dtype
+            )
+    return out

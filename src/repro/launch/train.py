@@ -1,0 +1,66 @@
+"""Training launcher.
+
+Two modes:
+  * --reduced (default): actually train the reduced variant on this host
+    for a few hundred steps — the end-to-end driver (deliverable b).
+  * --dry-run: delegate to launch.dryrun for the production mesh.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+      --steps 200 [--overlap-mode ficco_auto] [--ckpt-dir /tmp/ckpt]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from repro.configs import ARCHS, get_config
+from repro.configs.base import ShapeConfig
+from repro.train.loop import train
+from repro.train.optimizer import OptimizerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), required=True)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--overlap-mode", default="gspmd_serial")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--full-size", action="store_true",
+                    help="use the full (non-reduced) config — host-memory "
+                    "bound; intended for cluster runs")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full_size:
+        cfg = cfg.reduced()
+    if args.overlap_mode != "gspmd_serial":
+        cfg = dataclasses.replace(
+            cfg,
+            overlap=dataclasses.replace(cfg.overlap, mode=args.overlap_mode),
+        )
+    shape = ShapeConfig("cli", args.seq_len, args.batch, "train")
+    ocfg = OptimizerConfig(
+        peak_lr=args.lr,
+        warmup_steps=max(args.steps // 20, 5),
+        decay_steps=args.steps,
+    )
+    res = train(
+        cfg,
+        shape,
+        steps=args.steps,
+        ocfg=ocfg,
+        checkpoint_dir=args.ckpt_dir,
+        checkpoint_every=args.ckpt_every,
+    )
+    first, last = res["history"][0]["loss"], res["history"][-1]["loss"]
+    print(f"done: loss {first:.4f} -> {last:.4f}")
+
+
+if __name__ == "__main__":
+    main()

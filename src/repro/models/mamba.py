@@ -1,0 +1,157 @@
+"""Mamba selective SSM block (Jamba's sequence mixer, arXiv:2403.19887).
+
+The recurrence h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t is evaluated
+with ``lax.scan`` over time (O(1) memory per step; compiles to one while
+loop).  A chunked associative-scan variant is the production alternative;
+the recurrence is the part of Jamba FiCCO does *not* apply to (no
+data-dependent collective — DESIGN.md §5), so we keep it simple and exact.
+
+Decode carries (conv window, ssm state): O(1) per token — why long_500k is
+native for the Mamba layers.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import MambaConfig
+from repro.models import layers
+from repro.parallel.sharding import BATCH_AXES, MODEL_AXIS, constrain
+
+
+def mamba_dims(d_model: int, cfg: MambaConfig):
+    d_inner = cfg.expand * d_model
+    dt_rank = cfg.dt_rank or max(1, math.ceil(d_model / 16))
+    return d_inner, dt_rank
+
+
+def mamba_init(rng, d_model: int, cfg: MambaConfig, dtype):
+    d_inner, dt_rank = mamba_dims(d_model, cfg)
+    r = jax.random.split(rng, 6)
+    a = jnp.broadcast_to(
+        jnp.arange(1, cfg.d_state + 1, dtype=jnp.float32),
+        (d_inner, cfg.d_state),
+    )
+    return {
+        "w_in": layers.dense_init(r[0], d_model, 2 * d_inner, dtype),
+        "conv_w": (
+            jax.random.normal(r[1], (cfg.d_conv, d_inner)) * 0.1
+        ).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "w_x": layers.dense_init(
+            r[2], d_inner, dt_rank + 2 * cfg.d_state, dtype
+        ),
+        "w_dt": layers.dense_init(r[3], dt_rank, d_inner, dtype),
+        "dt_bias": jnp.zeros((d_inner,), dtype),
+        "a_log": jnp.log(a),  # fp32
+        "d_skip": jnp.ones((d_inner,), jnp.float32),
+        "w_out": layers.dense_init(r[4], d_inner, d_model, dtype),
+    }
+
+
+def mamba_param_specs():
+    return {
+        "w_in": P(None, MODEL_AXIS),
+        "conv_w": P(None, MODEL_AXIS),
+        "conv_b": P(MODEL_AXIS),
+        "w_x": P(MODEL_AXIS, None),
+        "w_dt": P(None, MODEL_AXIS),
+        "dt_bias": P(MODEL_AXIS),
+        "a_log": P(MODEL_AXIS, None),
+        "d_skip": P(MODEL_AXIS),
+        "w_out": P(MODEL_AXIS, None),
+    }
+
+
+def _causal_conv(x, conv_w, conv_b, state=None):
+    """Depthwise causal conv. x: (B, S, D); conv_w: (K, D)."""
+    k = conv_w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+K-1, D)
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * conv_w[i][None, None, :]
+        for i in range(k)
+    )
+    new_state = xp[:, -(k - 1) :, :]
+    return out + conv_b[None, None, :], new_state
+
+
+def _ssm_params(params, u, cfg: MambaConfig, dt_rank: int):
+    proj = u @ params["w_x"]  # (B, S, dt_rank + 2*N)
+    dt_low, b_mat, c_mat = jnp.split(
+        proj, [dt_rank, dt_rank + cfg.d_state], axis=-1
+    )
+    dt = jax.nn.softplus(
+        dt_low @ params["w_dt"] + params["dt_bias"][None, None, :]
+    ).astype(jnp.float32)  # (B, S, D)
+    a = -jnp.exp(params["a_log"])  # (D, N)
+    return dt, a, b_mat.astype(jnp.float32), c_mat.astype(jnp.float32)
+
+
+def mamba_apply(params, x: jax.Array, cfg: MambaConfig) -> jax.Array:
+    """x: (B, S, d_model) -> (B, S, d_model)."""
+    d_inner, dt_rank = mamba_dims(x.shape[-1], cfg)
+    xz = x @ params["w_in"]
+    u, z = jnp.split(xz, 2, axis=-1)  # (B, S, D)
+    u = constrain(u, BATCH_AXES, None, MODEL_AXIS)
+    u, _ = _causal_conv(u, params["conv_w"], params["conv_b"])
+    u = jax.nn.silu(u)
+    dt, a, b_mat, c_mat = _ssm_params(params, u, cfg, dt_rank)
+
+    uf = u.astype(jnp.float32)
+
+    def step(h, inputs):
+        u_t, dt_t, b_t, c_t = inputs  # (B,D),(B,D),(B,N),(B,N)
+        da = jnp.exp(dt_t[..., None] * a[None])  # (B, D, N)
+        h = da * h + (dt_t * u_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    h0 = jnp.zeros((x.shape[0], d_inner, cfg.d_state), jnp.float32)
+    xs = (
+        uf.transpose(1, 0, 2),
+        dt.transpose(1, 0, 2),
+        b_mat.transpose(1, 0, 2),
+        c_mat.transpose(1, 0, 2),
+    )
+    _, ys = lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2) + uf * params["d_skip"][None, None, :]
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = y @ params["w_out"]
+    return constrain(out, BATCH_AXES, None, None)
+
+
+def mamba_init_cache(batch: int, d_model: int, cfg: MambaConfig, dtype):
+    d_inner, _ = mamba_dims(d_model, cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, d_inner), dtype),
+        "h": jnp.zeros((batch, d_inner, cfg.d_state), jnp.float32),
+    }
+
+
+def mamba_decode(params, x: jax.Array, cache: dict, cfg: MambaConfig):
+    """x: (B, 1, d_model); O(1) state update."""
+    d_inner, dt_rank = mamba_dims(x.shape[-1], cfg)
+    xz = x @ params["w_in"]
+    u, z = jnp.split(xz, 2, axis=-1)
+    u, conv_state = _causal_conv(
+        u, params["conv_w"], params["conv_b"], state=cache["conv"]
+    )
+    u = jax.nn.silu(u)
+    dt, a, b_mat, c_mat = _ssm_params(params, u, cfg, dt_rank)
+    u_t, dt_t = u[:, 0].astype(jnp.float32), dt[:, 0]
+    b_t, c_t = b_mat[:, 0], c_mat[:, 0]
+    da = jnp.exp(dt_t[..., None] * a[None])
+    h = da * cache["h"] + (dt_t * u_t)[..., None] * b_t[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, c_t) + u_t * params["d_skip"][None, :]
+    y = (y[:, None, :].astype(x.dtype)) * jax.nn.silu(z)
+    out = y @ params["w_out"]
+    return out, {"conv": conv_state, "h": h}

@@ -1,0 +1,139 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV activations are compressed into a low-rank latent ``c_kv`` of
+``kv_lora_rank`` dims plus a single shared RoPE key head; the decode cache
+stores only (c_kv, k_rope) — the architecture's whole point — and
+up-projects per step.  Training/prefill materializes per-head K/V from the
+latent (mathematically identical).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import MLAConfig
+from repro.models import layers
+from repro.models.layers import apply_rope, blockwise_attention, cache_attention
+from repro.parallel.sharding import BATCH_AXES, MODEL_AXIS, constrain
+
+
+def mla_init(rng, d_model: int, num_heads: int, cfg: MLAConfig, dtype):
+    r = jax.random.split(rng, 6)
+    qk_head = cfg.nope_head_dim + cfg.rope_head_dim
+    return {
+        # Q: full-rank (V2-Lite has no Q compression)
+        "wq": layers.dense_init(r[0], d_model, num_heads * qk_head, dtype),
+        # KV latent down-projection + shared rope key
+        "w_dkv": layers.dense_init(r[1], d_model, cfg.kv_lora_rank, dtype),
+        "w_kr": layers.dense_init(r[2], d_model, cfg.rope_head_dim, dtype),
+        # latent -> per-head K(nope), V
+        "w_uk": layers.dense_init(
+            r[3], cfg.kv_lora_rank, num_heads * cfg.nope_head_dim, dtype
+        ),
+        "w_uv": layers.dense_init(
+            r[4], cfg.kv_lora_rank, num_heads * cfg.v_head_dim, dtype
+        ),
+        "wo": layers.dense_init(
+            r[5], num_heads * cfg.v_head_dim, d_model, dtype
+        ),
+    }
+
+
+def mla_param_specs():
+    return {
+        "wq": P(None, MODEL_AXIS),
+        "w_dkv": P(None, None),
+        "w_kr": P(None, None),
+        "w_uk": P(None, MODEL_AXIS),
+        "w_uv": P(None, MODEL_AXIS),
+        "wo": P(MODEL_AXIS, None),
+    }
+
+
+def _project(params, x, num_heads: int, cfg: MLAConfig, positions):
+    b, s, _ = x.shape
+    qk_head = cfg.nope_head_dim + cfg.rope_head_dim
+    q = (x @ params["wq"]).reshape(b, s, num_heads, qk_head)
+    q_nope, q_rope = jnp.split(q, [cfg.nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, 10000.0)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+
+    c_kv = x @ params["w_dkv"]  # (B, S, r)
+    k_rope = apply_rope(
+        (x @ params["w_kr"]).reshape(b, s, 1, cfg.rope_head_dim),
+        positions,
+        10000.0,
+    )
+    return q, c_kv, k_rope
+
+
+def _expand_kv(params, c_kv, k_rope, num_heads: int, cfg: MLAConfig):
+    b, s, _ = c_kv.shape
+    k_nope = (c_kv @ params["w_uk"]).reshape(
+        b, s, num_heads, cfg.nope_head_dim
+    )
+    v = (c_kv @ params["w_uv"]).reshape(b, s, num_heads, cfg.v_head_dim)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, s, num_heads, cfg.rope_head_dim))],
+        -1,
+    )
+    return k, v
+
+
+def mla_apply(
+    params,
+    x: jax.Array,
+    num_heads: int,
+    cfg: MLAConfig,
+    *,
+    positions,
+    window: Optional[int] = None,
+) -> jax.Array:
+    b, s, _ = x.shape
+    q, c_kv, k_rope = _project(params, x, num_heads, cfg, positions)
+    k, v = _expand_kv(params, c_kv, k_rope, num_heads, cfg)
+    q = constrain(q, BATCH_AXES, None, MODEL_AXIS, None)
+    k = constrain(k, BATCH_AXES, None, MODEL_AXIS, None)
+    out = blockwise_attention(q, k, v, causal=True, window=window)
+    y = out.reshape(b, s, num_heads * cfg.v_head_dim) @ params["wo"]
+    return constrain(y, BATCH_AXES, None, None)
+
+
+def mla_init_cache(batch: int, seq: int, cfg: MLAConfig, dtype):
+    """The MLA cache: latent + shared rope key only (its memory win)."""
+    return {
+        "c_kv": jnp.zeros((batch, seq, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, seq, 1, cfg.rope_head_dim), dtype),
+    }
+
+
+def mla_decode(
+    params,
+    x: jax.Array,
+    cache: dict,
+    pos,
+    num_heads: int,
+    cfg: MLAConfig,
+):
+    b = x.shape[0]
+    posv = jnp.full((b, 1), pos)
+    q, c_kv_new, k_rope_new = _project(params, x, num_heads, cfg, posv)
+    c_kv = lax.dynamic_update_slice(
+        cache["c_kv"], c_kv_new.astype(cache["c_kv"].dtype), (0, pos, 0)
+    )
+    k_rope = lax.dynamic_update_slice(
+        cache["k_rope"],
+        k_rope_new.astype(cache["k_rope"].dtype),
+        (0, pos, 0, 0),
+    )
+    # Up-project the whole latent cache for this step's attention (the
+    # recompute trade MLA makes for its 1/~10x cache size).
+    k, v = _expand_kv(params, c_kv, k_rope, num_heads, cfg)
+    out = cache_attention(q, k, v, valid_len=pos + 1)
+    y = out.reshape(b, 1, num_heads * cfg.v_head_dim) @ params["wo"]
+    return y, {"c_kv": c_kv, "k_rope": k_rope}

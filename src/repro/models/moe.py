@@ -1,0 +1,127 @@
+"""Mixture-of-Experts FFN: top-k router + capacity-based sorted dispatch.
+
+Dispatch is sort-based (argsort by expert id + capacity clipping) rather
+than one-hot-einsum so it scales to Arctic's 128 experts x 1M tokens under
+GSPMD: the (E, C, D) expert batches are sharded over the ``model`` axis
+(expert parallelism) and XLA lowers the gather/scatter to all-to-alls — the
+exact data-dependent A2A -> expert-GEMM pattern of the paper's EP scenarios
+(Table I g13–g16).  The chunked FiCCO EP overlap lives in
+``repro.overlap.moe``; this module is the pjit-friendly production path.
+
+Supports DeepSeek-style shared experts and Arctic's dense residual FFN.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import MoEConfig
+from repro.models import layers
+from repro.parallel.sharding import BATCH_AXES, MODEL_AXIS, constrain
+
+
+def moe_init(rng, d_model: int, cfg: MoEConfig, dtype):
+    r = jax.random.split(rng, 6)
+    e, ff = cfg.num_experts, cfg.d_ff_expert
+    p = {
+        "router": layers.dense_init(r[0], d_model, e, jnp.float32),
+        "w_gate": _expert_init(r[1], e, d_model, ff, dtype),
+        "w_up": _expert_init(r[2], e, d_model, ff, dtype),
+        "w_down": _expert_init(r[3], e, ff, d_model, dtype),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = layers.mlp_init(
+            r[4], d_model, ff * cfg.num_shared_experts, dtype
+        )
+    if cfg.dense_residual_ff:
+        p["dense_residual"] = layers.mlp_init(
+            r[5], d_model, cfg.dense_residual_ff, dtype
+        )
+    return p
+
+
+def _expert_init(rng, e, d_in, d_out, dtype):
+    std = 1.0 / jnp.sqrt(d_in)
+    return (jax.random.normal(rng, (e, d_in, d_out)) * std).astype(dtype)
+
+
+def moe_param_specs(cfg: MoEConfig):
+    p = {
+        "router": P(None, None),
+        "w_gate": P(MODEL_AXIS, None, None),  # expert parallel
+        "w_up": P(MODEL_AXIS, None, None),
+        "w_down": P(MODEL_AXIS, None, None),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = layers.mlp_param_specs()
+    if cfg.dense_residual_ff:
+        p["dense_residual"] = layers.mlp_param_specs()
+    return p
+
+
+def moe_apply(params, x: jax.Array, cfg: MoEConfig):
+    """x: (B, S, D) -> (out, aux_losses)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.num_experts, cfg.top_k
+    xf = x.reshape(t, d)
+
+    logits = (xf.astype(jnp.float32)) @ params["router"]  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)  # (T, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # aux losses (GShard load balance + router z-loss)
+    me = probs.mean(0)  # (E,)
+    ce = jnp.zeros((e,), jnp.float32).at[top_e.reshape(-1)].add(
+        1.0 / (t * k)
+    )
+    lb_loss = cfg.load_balance_loss * e * jnp.sum(me * ce)
+    z_loss = cfg.router_z_loss * jnp.mean(
+        jax.nn.logsumexp(logits, axis=-1) ** 2
+    )
+
+    capacity = int(max(cfg.capacity_factor * t * k / e, 4))
+
+    # ---- sorted capacity dispatch -----------------------------------
+    flat_e = top_e.reshape(-1)  # (T*k,)
+    flat_w = top_w.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(t), k)
+    order = jnp.argsort(flat_e, stable=True)
+    se, stok, sw = flat_e[order], flat_tok[order], flat_w[order]
+    counts = jnp.bincount(flat_e, length=e)
+    starts = jnp.cumsum(counts) - counts  # exclusive prefix
+    pos = jnp.arange(t * k) - starts[se]  # position within expert
+    keep = pos < capacity
+    slot = jnp.where(keep, se * capacity + pos, e * capacity)  # dummy tail
+
+    disp = jnp.zeros((e * capacity + 1, d), x.dtype).at[slot].set(xf[stok])
+    expert_in = disp[: e * capacity].reshape(e, capacity, d)
+    expert_in = constrain(expert_in, MODEL_AXIS, None, None)
+
+    # ---- expert FFN (A2A -> grouped GEMM: the paper's EP hot spot) ---
+    h = jnp.einsum("ecd,edf->ecf", expert_in, params["w_up"])
+    g = jnp.einsum("ecd,edf->ecf", expert_in, params["w_gate"])
+    h = jax.nn.silu(g) * h
+    h = constrain(h, MODEL_AXIS, None, None)
+    expert_out = jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+    expert_out = constrain(expert_out, MODEL_AXIS, None, None)
+
+    # ---- combine back -------------------------------------------------
+    flat_out = jnp.concatenate(
+        [expert_out.reshape(e * capacity, d), jnp.zeros((1, d), x.dtype)]
+    )
+    routed = flat_out[slot] * sw[:, None].astype(x.dtype)
+    y = jnp.zeros((t, d), x.dtype).at[stok].add(
+        jnp.where(keep[:, None], routed, 0)
+    )
+    out = y.reshape(b, s, d)
+
+    if "shared" in params:
+        out = out + layers.mlp_apply(params["shared"], x)
+    if "dense_residual" in params:
+        out = out + layers.mlp_apply(params["dense_residual"], x)
+    out = constrain(out, BATCH_AXES, None, None)
+    return out, lb_loss + z_loss

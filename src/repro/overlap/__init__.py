@@ -1,0 +1,28 @@
+"""Executable overlap schedules (shard_map) + heuristic-driven public API."""
+
+from repro.overlap.api import ficco_linear, resolve_schedule, run_schedule
+from repro.overlap.moe import ficco_a2a_ffn, serial_a2a_ffn
+from repro.overlap.schedules import (
+    SCHEDULE_FNS,
+    ficco_hetero_fused_1d,
+    ficco_hetero_unfused_1d,
+    ficco_uniform_fused_1d,
+    ficco_uniform_fused_2d,
+    serial_ag_matmul,
+    shard_p2p_matmul,
+)
+
+__all__ = [
+    "SCHEDULE_FNS",
+    "ficco_linear",
+    "resolve_schedule",
+    "run_schedule",
+    "ficco_a2a_ffn",
+    "serial_a2a_ffn",
+    "ficco_hetero_fused_1d",
+    "ficco_hetero_unfused_1d",
+    "ficco_uniform_fused_1d",
+    "ficco_uniform_fused_2d",
+    "serial_ag_matmul",
+    "shard_p2p_matmul",
+]

@@ -1,0 +1,101 @@
+"""Public overlap API: heuristic-driven bespoke schedules (paper §VI-A).
+
+"To incorporate FiCCO, the user provides only the GEMM inputs; based on the
+GEMM dimensions our heuristic will select and execute the optimum overlap
+schedule, replacing the serial communication and computation."
+
+``ficco_linear`` is that entry point for JAX: call it *inside* a shard_map
+whose ``axis_name`` is the tensor-parallel group.  ``schedule="auto"``
+consults :func:`repro.core.heuristics.select_schedule` with the *static*
+global GEMM dimensions — no profiling — and dispatches the chosen schedule.
+"""
+
+from __future__ import annotations
+
+from typing import Union
+
+import jax
+from jax import lax
+
+from repro.core.heuristics import select_schedule
+from repro.core.machine import TPU_V5E, MachineSpec
+from repro.core.schedule_types import Schedule
+from repro.core.workload import GemmShape
+from repro.overlap.schedules import SCHEDULE_FNS, run_schedule
+
+ScheduleLike = Union[Schedule, str]
+
+
+def resolve_schedule(
+    schedule: ScheduleLike,
+    *,
+    m: int,
+    n: int,
+    k: int,
+    machine: MachineSpec | None = None,
+    dtype_bytes: int = 2,
+) -> Schedule:
+    """Static schedule resolution (trace-time: shapes are concrete)."""
+    if isinstance(schedule, Schedule):
+        return schedule
+    if schedule != "auto":
+        return Schedule(schedule)
+    dec = select_schedule(
+        GemmShape(m, n, k, dtype_bytes), machine or TPU_V5E
+    )
+    # The serial guard may also fire for shapes the schedules cannot chunk.
+    return dec.schedule
+
+
+def _divisible(m_s: int, k: int, g: int, sched: Schedule) -> bool:
+    if sched in (Schedule.SERIAL,):
+        return True
+    if sched is Schedule.UNIFORM_FUSED_2D:
+        return k % g == 0
+    if sched is Schedule.SHARD_P2P:
+        return True
+    return m_s % g == 0  # 1D FiCCO chunks rows one level deeper
+
+
+def ficco_linear(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    axis_name: str,
+    schedule: ScheduleLike = "auto",
+    machine: MachineSpec | None = None,
+) -> jax.Array:
+    """Data-dependent AG->GEMM with a bespoke overlap schedule.
+
+    Args:
+      x: (M/g, K) row shard of the activation (inside shard_map).
+      w: (K, N/g) resident column shard of the weight.
+      axis_name: mesh axis of the TP group.
+      schedule: explicit :class:`Schedule`, its string value, or "auto".
+
+    Returns:
+      (M, N/g): the full gathered-M rows times this device's weight columns.
+    """
+    g = lax.axis_size(axis_name)
+    m_s, k = x.shape
+    n_local = w.shape[1]
+    sched = resolve_schedule(
+        schedule,
+        m=m_s * g,
+        n=n_local * g,
+        k=k,
+        machine=machine,
+        dtype_bytes=x.dtype.itemsize,
+    )
+    if not _divisible(m_s, k, g, sched):
+        sched = Schedule.SERIAL  # shape can't be chunked one level deeper
+    return run_schedule(sched, x, w, axis_name=axis_name)
+
+
+__all__ = [
+    "Schedule",
+    "SCHEDULE_FNS",
+    "ficco_linear",
+    "resolve_schedule",
+    "run_schedule",
+]

@@ -1,0 +1,29 @@
+"""Runtime overlap context: which FiCCO mode the current jit trace uses.
+
+Set by the launcher/train driver around tracing; read by the TP layers so
+the same model code runs GSPMD-serial (baseline) or FiCCO-overlapped
+without plumbing a flag through every layer signature.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+from repro.configs.base import OverlapConfig
+
+_STATE = threading.local()
+
+
+def get_overlap() -> OverlapConfig | None:
+    return getattr(_STATE, "overlap", None)
+
+
+@contextlib.contextmanager
+def overlap_context(cfg: OverlapConfig | None):
+    prev = get_overlap()
+    _STATE.overlap = cfg
+    try:
+        yield
+    finally:
+        _STATE.overlap = prev

@@ -1,0 +1,318 @@
+"""Unit tests for the FiCCO core: DIL/CIL models, simulator, heuristics.
+
+These validate the paper-fidelity properties the cost model was built to
+reproduce (paper §IV trends + §VI headline numbers).
+"""
+
+import math
+
+import pytest
+
+from repro.core import (
+    MI300X,
+    TABLE_I,
+    TPU_V5E,
+    GemmShape,
+    Schedule,
+    SCENARIOS,
+    STUDIED,
+    best_schedule,
+    comm_cil,
+    gemm_cil,
+    gemm_dil,
+    gemm_exec,
+    geomean,
+    machine_threshold,
+    select_schedule,
+    simulate,
+    synthetic_scenarios,
+)
+from repro.core.inefficiency import (
+    a2a_chunk_step_time,
+    ag_serial_time,
+    calibrated_s_half,
+    comm_time,
+    p2p_step_time,
+)
+from repro.core.schedule_types import ALL_VARIANTS, SIGNATURES, Level
+from repro.core.explorer import explore, prune_report
+
+
+MI = MI300X
+
+
+class TestGemmModel:
+    def test_monolithic_large_gemm_is_efficient(self):
+        e = gemm_exec(GemmShape(16384, 16384, 16384), MI)
+        assert e.occupancy > 0.95
+        ideal = 2.0 * 16384**3 / MI.peak_flops
+        assert e.time < ideal * 1.1
+
+    def test_dil_at_least_one(self):
+        for sc in TABLE_I:
+            for ways in (8, 64):
+                for axis in ("m", "k"):
+                    assert gemm_dil(sc.gemm, MI, ways, axis) >= 0.999
+
+    def test_dil_64way_worse_than_8way(self):
+        """Paper Fig. 7: deeper decomposition has higher DIL."""
+        for sc in TABLE_I:
+            for axis in ("m", "k"):
+                assert (
+                    gemm_dil(sc.gemm, MI, 64, axis)
+                    >= gemm_dil(sc.gemm, MI, 8, axis) - 1e-9
+                )
+
+    def test_dil_row_vs_column_asymmetry(self):
+        """Paper Fig. 7: row-sharding worse when M < K; col when M > K."""
+        for sc in TABLE_I:
+            g = sc.gemm
+            row = gemm_dil(g, MI, 64, "m")
+            col = gemm_dil(g, MI, 64, "k")
+            if g.m < g.k:
+                assert row > col, sc.name
+            else:
+                assert col > row, sc.name
+
+    def test_accumulate_adds_traffic(self):
+        g = GemmShape(8192, 8192, 1024)
+        assert (
+            gemm_exec(g, MI, accumulate=True).bytes_hbm
+            > gemm_exec(g, MI).bytes_hbm
+        )
+
+
+class TestCommModel:
+    def test_comm_dil_geomean_matches_paper(self):
+        """Paper Fig. 8: ~10% geomean DIL for 8x-finer all-gather."""
+        sh = calibrated_s_half(MI)
+        vals = []
+        for sc in TABLE_I:
+            total = sc.gemm.m * sc.gemm.k * sc.gemm.dtype_bytes
+            per_link = total / MI.group / MI.a2a_links
+            base = comm_time(per_link, MI, s_half=0.0)
+            fine = comm_time(per_link, MI, s_half=sh, n_transfers=MI.group)
+            vals.append(fine / base)
+        gm = geomean(vals)
+        assert 1.08 <= gm <= 1.12
+
+    def test_comm_dil_decreases_with_size(self):
+        """Paper: larger transfers are more resilient to DIL."""
+        sh = calibrated_s_half(MI)
+
+        def dil(total):
+            per_link = total / MI.group / MI.a2a_links
+            return comm_time(
+                per_link, MI, s_half=sh, n_transfers=MI.group
+            ) / comm_time(per_link, MI, s_half=0.0)
+
+        assert dil(64 * 2**20) > dil(1 * 2**30) > dil(8 * 2**30)
+
+    def test_p2p_ring_much_slower_than_a2a_on_full_mesh(self):
+        """Paper Fig. 13: ~7x comm slowdown for P2P shard streaming."""
+        mk = 1 << 30
+        shard = mk / MI.group
+        serial = ag_serial_time(mk, MI)
+        p2p_total = (MI.group - 1) * p2p_step_time(shard, MI)
+        assert 5.0 < p2p_total / serial < 9.0
+
+    def test_ficco_a2a_total_close_to_serial_ag(self):
+        mk = 1 << 30
+        chunk = mk / MI.group**2
+        a2a_total = MI.group * a2a_chunk_step_time(chunk, MI)
+        serial = ag_serial_time(mk, MI)
+        assert a2a_total / serial < 1.3
+
+
+class TestCilModel:
+    def test_cil_geomeans_match_paper(self):
+        shards = [s.gemm.shard(8, "m") for s in TABLE_I]
+        gm_gemm_ficco = geomean(gemm_cil(sh, MI, degree=3) for sh in shards)
+        gm_gemm_shard = geomean(gemm_cil(sh, MI, degree=2) for sh in shards)
+        gm_comm_ficco = geomean(comm_cil(sh, MI, degree=3) for sh in shards)
+        gm_comm_shard = geomean(comm_cil(sh, MI, degree=2) for sh in shards)
+        assert abs(gm_gemm_ficco - 1.11) < 0.01  # paper §IV-D1
+        assert abs(gm_gemm_shard - 1.07) < 0.01
+        assert abs(gm_comm_ficco - 1.12) < 0.01  # paper §IV-D2
+        assert abs(gm_comm_shard - 1.03) < 0.01
+
+    def test_cil_increases_with_mt(self):
+        small = GemmShape(4096, 4096, 4096)
+        big = GemmShape(65536, 8192, 65536)
+        assert gemm_cil(big, MI, degree=3) > gemm_cil(small, MI, degree=3)
+
+    def test_rccl_worse_than_dma(self):
+        """Paper Fig. 9: DMA comm causes far lower CIL than RCCL."""
+        for sc in TABLE_I[:4]:
+            sh = sc.gemm.shard(8, "m")
+            assert gemm_cil(sh, MI, degree=3, dma=False) > gemm_cil(
+                sh, MI, degree=3, dma=True
+            )
+
+
+class TestSimulator:
+    def test_serial_is_sum(self):
+        r = simulate(SCENARIOS["g1"].gemm, MI, Schedule.SERIAL)
+        assert r.total == pytest.approx(r.serial_comm + r.serial_gemm)
+
+    def test_shard_p2p_loses_on_full_mesh(self):
+        """Paper Fig. 13: shard-overlap does not attain speedups on
+        direct-connection topologies (up to 3.9x slower than serial)."""
+        sps = [
+            simulate(s.gemm, MI, Schedule.SHARD_P2P).speedup for s in TABLE_I
+        ]
+        assert max(sps) < 1.05
+        assert min(sps) < 0.35  # worst cases are several-x slowdowns
+
+    def test_ficco_max_speedup_matches_paper(self):
+        """Paper §VI-C: up to ~1.6x (1D) / ~1.7x (2D) speedup."""
+        best = 0.0
+        for s in TABLE_I:
+            _, res = best_schedule(s.gemm, MI)
+            best = max(best, max(r.speedup for r in res.values()))
+        assert 1.55 <= best <= 1.80
+
+    def test_ficco_beats_shard_p2p_geomean(self):
+        """Paper Fig. 14 ordering: FiCCO >> shard overlap on full mesh."""
+        f, p = [], []
+        for s in TABLE_I:
+            _, res = best_schedule(s.gemm, MI)
+            f.append(max(res[x].speedup for x in STUDIED))
+            p.append(res[Schedule.SHARD_P2P].speedup)
+        assert geomean(f) > 1.2
+        assert geomean(f) > 2.5 * geomean(p)
+
+    def test_dma_beats_rccl_geomean(self):
+        """Paper Fig. 14: FiCCO-rccl < FiCCO (DMA)."""
+        d, r = [], []
+        for s in TABLE_I:
+            _, res_d = best_schedule(s.gemm, MI, dma=True)
+            _, res_r = best_schedule(s.gemm, MI, dma=False)
+            d.append(max(res_d[x].speedup for x in STUDIED))
+            r.append(max(res_r[x].speedup for x in STUDIED))
+        assert geomean(d) > geomean(r)
+
+    def test_ideal_is_upper_bound(self):
+        for s in TABLE_I:
+            for sched in (Schedule.SHARD_P2P, *STUDIED):
+                r = simulate(s.gemm, MI, sched)
+                assert r.total >= r.ideal_total * 0.999
+
+    def test_tpu_machine_simulates(self):
+        g = GemmShape(65536, 4096, 8192)
+        _, res = best_schedule(g, TPU_V5E)
+        assert all(r.total > 0 for r in res.values())
+
+
+class TestHeuristics:
+    def test_2d_iff_m_lt_k(self):
+        for s in TABLE_I:
+            dec = select_schedule(s.gemm, MI)
+            if s.gemm.m < s.gemm.k:
+                assert dec.schedule is Schedule.UNIFORM_FUSED_2D, s.name
+            else:
+                assert dec.schedule is not Schedule.UNIFORM_FUSED_2D, s.name
+
+    def test_metric_is_flops(self):
+        g = SCENARIOS["g1"].gemm
+        dec = select_schedule(g, MI)
+        assert dec.metric == pytest.approx(g.flops)
+
+    def test_tranche_ordering(self):
+        """Bigger OTBxMT within 1D moves uf1 -> hf1 -> hu1."""
+        t = machine_threshold(MI)
+        small = GemmShape(16384, 2048, 2048)  # flops ~1.4e11 < T
+        dec = select_schedule(small, MI)
+        assert dec.schedule in (
+            Schedule.UNIFORM_FUSED_1D, Schedule.SERIAL
+        )
+        huge = SCENARIOS["g13"].gemm
+        assert huge.flops > 5 * t
+        assert select_schedule(huge, MI).schedule is Schedule.HETERO_UNFUSED_1D
+
+    def test_studied_scenarios_mostly_within_5pct_of_optimal(self):
+        """Our analogue of the paper's '100% correct on studied scenarios':
+        against *our* analytic ground truth the heuristic lands within 5%
+        of optimal on >= 14/16 studied scenarios, and never loses more
+        than ~16% (paper's own mispredictions lose ~14%)."""
+        good, worst = 0, 1.0
+        for s in TABLE_I:
+            ex = explore(s, MI)
+            ratio = (
+                ex.results[ex.heuristic.schedule].total
+                / ex.results[ex.best].total
+            )
+            good += ratio <= 1.05
+            worst = max(worst, ratio)
+        assert good >= 14, f"only {good}/16 within 5%"
+        assert worst <= 1.20, f"worst heuristic loss {worst:.3f}"
+
+    def test_synthetic_accuracy_at_least_81pct(self):
+        """Paper §VI-D: >= 81% of unseen scenarios picked well."""
+        syn = synthetic_scenarios(16)
+        good = 0
+        for s in syn:
+            ex = explore(s, MI)
+            best_t = ex.results[ex.best].total
+            got_t = ex.results[ex.heuristic.schedule].total
+            good += got_t <= 1.05 * best_t
+        assert good / len(syn) >= 0.81
+
+    def test_misprediction_loss_small(self):
+        """Paper §VI-D: mispredictions lose ~14% of the optimal speedup."""
+        losses = []
+        for s in (*TABLE_I, *synthetic_scenarios(16)):
+            ex = explore(s, MI)
+            if not ex.heuristic_correct:
+                losses.append(ex.heuristic_loss)
+        if losses:
+            assert sum(losses) / len(losses) <= 0.30
+
+    def test_serial_guard_for_tiny_ops(self):
+        dec = select_schedule(GemmShape(512, 512, 512), MI)
+        assert dec.schedule is Schedule.SERIAL
+
+
+class TestExplorer:
+    def test_prune_report_contains_all_eight(self):
+        rows = prune_report(SCENARIOS["g2"], MI)
+        assert len(rows) == len(ALL_VARIANTS) == 8
+
+    def test_studied_variants_rank_well(self):
+        """The paper's pruning argument: unstudied variants never strictly
+        dominate; a studied variant is always at/near the top."""
+        for name in ("g2", "g6", "g12", "g14"):
+            rows = prune_report(SCENARIOS[name], MI)
+            # best variant overall is a studied one
+            assert rows[0][2], f"{name}: unstudied variant won {rows[0][0]}"
+
+    def test_signatures_cover_studied(self):
+        assert set(SIGNATURES) == set(STUDIED)
+        dil, cil = SIGNATURES[Schedule.UNIFORM_FUSED_1D]
+        assert dil is Level.LOW and cil is Level.HIGH
+        dil, cil = SIGNATURES[Schedule.HETERO_UNFUSED_1D]
+        assert dil is Level.HIGH and cil is Level.LOW
+
+
+class TestBeyondPaper:
+    def test_dma_into_place_never_slower(self):
+        """The fused kernel removes gather/scatter streams: modelled time
+        must never regress vs the paper-faithful schedule."""
+        from repro.core.simulator import simulate as sim
+
+        for s in TABLE_I:
+            for sched in STUDIED:
+                base = sim(s.gemm, MI, sched)
+                fused = sim(s.gemm, MI, sched, dma_into_place=True)
+                assert fused.total <= base.total * 1.0001, (s.name, sched)
+
+    def test_tpu_torus_shard_p2p_not_catastrophic(self):
+        """DESIGN.md §2: on a torus ring P2P is bandwidth-reasonable —
+        the full-mesh pathology (paper Fig. 13) is topology-specific."""
+        from repro.core.simulator import simulate as sim
+
+        sp = [
+            sim(s.gemm, TPU_V5E, Schedule.SHARD_P2P).speedup
+            for s in TABLE_I
+        ]
+        assert geomean(sp) > 0.6  # vs 0.32 on the full mesh

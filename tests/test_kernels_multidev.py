@@ -1,0 +1,13 @@
+"""Remote-DMA kernel tests (subprocess, 8 simulated devices)."""
+
+import pytest
+
+from tests.test_overlap_multidev import _run_driver
+
+
+@pytest.mark.slow
+def test_dma_kernels_multidevice():
+    out = _run_driver("multidev_kernels_driver.py")
+    assert "ok exchange_matches_all_gather" in out
+    assert "ok dma_schedule_matches_serial" in out
+    assert "ok fused_kernel_matches_serial" in out

@@ -1,0 +1,44 @@
+"""Multi-device overlap tests (8 simulated CPU devices, subprocess-isolated).
+
+The subprocess gets its own XLA_FLAGS so this pytest process keeps seeing a
+single device (required by the smoke tests and benchmarks).
+"""
+
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _run_driver(name: str) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(_ROOT / "src") + os.pathsep + env.get(
+        "PYTHONPATH", ""
+    )
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, str(_ROOT / "tests" / name)],
+        capture_output=True,
+        text=True,
+        timeout=1200,
+        env=env,
+    )
+    if proc.returncode != 0 or "ALL-OK" not in proc.stdout:
+        raise AssertionError(
+            f"driver {name} failed\n--- stdout ---\n{proc.stdout[-8000:]}"
+            f"\n--- stderr ---\n{proc.stderr[-8000:]}"
+        )
+    return proc.stdout
+
+
+@pytest.mark.slow
+def test_overlap_schedules_multidevice():
+    out = _run_driver("multidev_driver.py")
+    assert "ok schedules_allclose" in out
+    assert "ok ficco_in_model_matches_gspmd" in out
+    assert "ok moe_dispatch_equivalence" in out
+    assert "ok hlo_uses_async_collectives" in out

@@ -1,0 +1,122 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import (
+    MI300X,
+    TPU_V5E,
+    GemmShape,
+    Schedule,
+    gemm_dil,
+    gemm_exec,
+    select_schedule,
+    simulate,
+)
+from repro.core.workload import geomean
+from repro.kernels.chunked_gemm import chunked_matmul
+from repro.models.layers import blockwise_attention
+
+dims = st.sampled_from([1024, 2048, 4096, 8192, 16384, 65536, 131072])
+
+
+class TestCostModelProperties:
+    @given(m=dims, n=dims, k=dims)
+    @settings(max_examples=40, deadline=None)
+    def test_gemm_time_positive_and_monotone_in_flops(self, m, n, k):
+        t1 = gemm_exec(GemmShape(m, n, k), MI300X).time
+        t2 = gemm_exec(GemmShape(2 * m, n, k), MI300X).time
+        assert 0 < t1 < t2 * 1.001
+
+    @given(m=dims, n=dims, k=dims)
+    @settings(max_examples=30, deadline=None)
+    def test_dil_at_least_one(self, m, n, k):
+        g = GemmShape(m, n, k)
+        for axis in ("m", "k"):
+            assert gemm_dil(g, MI300X, 8, axis) >= 0.999
+
+    @given(m=dims, n=dims, k=dims)
+    @settings(max_examples=30, deadline=None)
+    def test_schedules_never_beat_ideal(self, m, n, k):
+        g = GemmShape(m, n, k)
+        for sched in Schedule:
+            r = simulate(g, MI300X, sched)
+            assert r.total >= r.ideal_total * 0.999
+
+    @given(m=dims, n=dims, k=dims)
+    @settings(max_examples=30, deadline=None)
+    def test_heuristic_total_function(self, m, n, k):
+        """The heuristic returns a valid schedule for ANY shape, on both
+        machines (frameworks can call it blindly)."""
+        g = GemmShape(m, n, k)
+        for machine in (MI300X, TPU_V5E):
+            dec = select_schedule(g, machine)
+            assert isinstance(dec.schedule, Schedule)
+            if g.flops >= 1e9:
+                if g.m < g.k:
+                    assert dec.schedule is Schedule.UNIFORM_FUSED_2D
+
+    @given(m=dims, n=dims, k=dims)
+    @settings(max_examples=20, deadline=None)
+    def test_serial_equals_parts(self, m, n, k):
+        r = simulate(GemmShape(m, n, k), MI300X, Schedule.SERIAL)
+        assert abs(r.total - (r.serial_comm + r.serial_gemm)) < 1e-12
+
+
+class TestKernelProperties:
+    @given(
+        mb=st.integers(1, 3),
+        nb=st.integers(1, 3),
+        kb=st.integers(1, 3),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=8, deadline=None)
+    def test_chunked_matmul_any_grid(self, mb, nb, kb, seed):
+        rng = np.random.default_rng(seed)
+        m, n, k = 128 * mb, 128 * nb, 128 * kb
+        x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+        got = chunked_matmul(x, w, interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(x @ w), rtol=1e-4, atol=1e-4
+        )
+
+
+class TestAttentionProperties:
+    @given(
+        s=st.sampled_from([16, 48, 64, 100]),
+        h=st.sampled_from([2, 4]),
+        window=st.sampled_from([None, 8, 16]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=12, deadline=None)
+    def test_blockwise_matches_dense_reference(self, s, h, window, seed):
+        """Blockwise online-softmax == dense masked softmax attention."""
+        rng = np.random.default_rng(seed)
+        b, d = 2, 16
+        q = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+        got = blockwise_attention(
+            q, k, v, causal=True, window=window, block_q=32, block_k=32
+        )
+        # dense reference
+        scores = np.einsum(
+            "bqhd,bkhd->bhqk", np.asarray(q), np.asarray(k)
+        ) / np.sqrt(d)
+        qpos = np.arange(s)[:, None]
+        kpos = np.arange(s)[None, :]
+        mask = qpos >= kpos
+        if window is not None:
+            mask &= (qpos - kpos) < window
+        scores = np.where(mask[None, None], scores, -1e30)
+        p = np.exp(scores - scores.max(-1, keepdims=True))
+        p /= p.sum(-1, keepdims=True)
+        want = np.einsum("bhqk,bkhd->bqhd", p, np.asarray(v))
+        np.testing.assert_allclose(
+            np.asarray(got), want, rtol=2e-4, atol=2e-4
+        )
