@@ -4,42 +4,39 @@ TPU v5e production mesh (model axis g=16), per input shape.
 
 This is what `overlap.mode = ficco_auto` executes inside the models —
 the paper's "frameworks and runtimes pick bespoke schedules" realized
-over the full architecture pool.
+over the full architecture pool.  All GEMMs across all architectures are
+classified in ONE ``select_schedule_batch`` call.
 """
 
 from repro.configs import ARCHS, SHAPES, get_config
-from repro.core import TPU_V5E, GemmShape, select_schedule
+from repro.core import TPU_V5E, GemmShape, select_schedule_batch
+from repro.core.batch import GRID_SCHEDULES, ScenarioBatch
+from repro.core.workload import tp_gemms, tp_token_rows
 
 from benchmarks.common import row
 
 
-def _tp_gemms(cfg, shape):
-    """The TP-SP AG->GEMM pairs of one block (global dims)."""
-    b, s = shape.global_batch, shape.seq_len
-    dp = 16  # data axis
-    m = (b // dp if b >= dp else b) * s  # per-replica token rows
-    gemms = {}
-    if cfg.d_ff:
-        gemms["mlp_up"] = GemmShape(m, cfg.d_ff, cfg.d_model)
-    h = cfg.num_heads * cfg.resolved_head_dim
-    gemms["attn_qkv"] = GemmShape(
-        m, h + 2 * cfg.num_kv_heads * cfg.resolved_head_dim, cfg.d_model
-    )
-    if cfg.moe and cfg.moe.num_shared_experts:
-        gemms["shared_expert"] = GemmShape(
-            m, cfg.moe.d_ff_expert * cfg.moe.num_shared_experts, cfg.d_model
-        )
-    return gemms
-
-
 def run() -> list[str]:
-    rows = []
     shape = SHAPES["train_4k"]
+    m = tp_token_rows(shape.global_batch, shape.seq_len)
+    labels: list[tuple[str, str]] = []
+    gemms: list[GemmShape] = []
     for arch in sorted(ARCHS):
         cfg = get_config(arch)
-        picks = []
-        for name, g in _tp_gemms(cfg, shape).items():
-            dec = select_schedule(g, TPU_V5E)
-            picks.append(f"{name}={dec.schedule.value}")
-        rows.append(row(f"arch_schedules/{arch}", 0.0, " ".join(picks)))
+        for name, g in tp_gemms(cfg, m).items():
+            labels.append((arch, name))
+            gemms.append(g)
+    sb = ScenarioBatch.from_gemms(gemms)
+    picks = select_schedule_batch(sb.m, sb.n, sb.k, sb.dtype_bytes, TPU_V5E)
+
+    rows = []
+    per_arch: dict[str, list[str]] = {}
+    for (arch, name), idx in zip(labels, picks):
+        per_arch.setdefault(arch, []).append(
+            f"{name}={GRID_SCHEDULES[int(idx)].value}"
+        )
+    for arch in sorted(per_arch):
+        rows.append(
+            row(f"arch_schedules/{arch}", 0.0, " ".join(per_arch[arch]))
+        )
     return rows

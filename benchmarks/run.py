@@ -6,8 +6,15 @@ Prints ``name,us_per_call,derived`` CSV.  Figure mapping:
   Fig 9  -> bench_cil             Fig 14  -> bench_comparison
   Fig 10 -> bench_proportions     §VI-D   -> bench_heuristic
   (real CPU timings)              -> bench_cpu_overlap
+  batched sweep engine            -> bench_sweep
+
+``--json [PATH]`` additionally writes a machine-readable name ->
+us_per_call map (default ``BENCH_sweep.json``) so the perf trajectory is
+tracked across PRs; ``--only MOD`` runs a single module.
 """
 
+import argparse
+import json
 import sys
 
 
@@ -23,22 +30,52 @@ def main() -> None:
         bench_proportions,
         bench_schedules,
         bench_shard_overlap,
+        bench_sweep,
     )
 
     modules = [
         bench_dil_gemm, bench_dil_comm, bench_cil, bench_proportions,
         bench_schedules, bench_shard_overlap, bench_comparison,
         bench_heuristic, bench_cpu_overlap, bench_arch_schedules,
+        bench_sweep,
     ]
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--json",
+        nargs="?",
+        const="BENCH_sweep.json",
+        default=None,
+        metavar="PATH",
+        help="also write {name: us_per_call} JSON (default BENCH_sweep.json)",
+    )
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="run a single module (e.g. bench_sweep)",
+    )
+    args = ap.parse_args()
+    if args.only:
+        modules = [m for m in modules if m.__name__.endswith(args.only)]
+        if not modules:
+            sys.exit(f"no benchmark module matches {args.only!r}")
+
     print("name,us_per_call,derived")
+    results: dict[str, float] = {}
     failed = 0
     for mod in modules:
         try:
             for r in mod.run():
                 print(r)
+                name, us, _ = r.split(",", 2)
+                results[name] = float(us)
         except Exception as e:  # pragma: no cover
             failed += 1
             print(f"{mod.__name__},0.0,ERROR:{e}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1, sort_keys=True)
+        print(f"# wrote {args.json} ({len(results)} entries)", file=sys.stderr)
     if failed:
         sys.exit(1)
 

@@ -3,12 +3,17 @@
 Walks all Table-I scenarios + the 8-variant space, prints per-scenario
 rankings, the pruning argument (§V-B), and heuristic accuracy — then does
 the same on the TPU v5e machine model to show what changes on a torus.
+Finishes with the batched engine: the full registry-arch scenario grid x
+machine grid in one vectorized call.
 
 Run:  PYTHONPATH=src python examples/explore_design_space.py
 """
 
+import time
+
 from repro.core import (
-    MI300X, TABLE_I, TPU_V5E, explore, geomean, prune_report,
+    MI300X, TABLE_I, TPU_V5E, explore, explore_grid, geomean, machine_grid,
+    prune_report, scenario_grid,
 )
 
 for machine in (MI300X, TPU_V5E):
@@ -32,3 +37,13 @@ print("\n===== pruning argument (g2, all 8 variants) =====")
 for name, t, studied in prune_report(TABLE_I[1], MI300X):
     tag = "studied" if studied else "pruned "
     print(f"  {tag} {name:22s} {t*1e3:8.2f} ms")
+
+# ===== batched engine: the whole design space in three lines ==========
+scenarios = scenario_grid()
+machines = machine_grid()
+t0 = time.perf_counter()
+ex = explore_grid(scenarios, machines=machines)
+dt = time.perf_counter() - t0
+print(f"\n===== batched grid: {len(scenarios)} scenarios x "
+      f"{len(machines)} machines in {dt*1e3:.0f} ms =====")
+print(ex.summary())

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import MI300X, SCENARIOS, explore, select_schedule
 from repro.overlap import ficco_linear
 
@@ -45,7 +46,7 @@ x = jnp.asarray(rng.standard_normal((512, 256)), jnp.float32)  # M-sharded
 w = jnp.asarray(rng.standard_normal((256, 256)), jnp.float32)  # N-sharded
 
 fn = jax.jit(
-    jax.shard_map(
+    shard_map(
         functools.partial(ficco_linear, axis_name="tp", schedule="auto"),
         mesh=mesh,
         in_specs=(P("tp", None), P(None, "tp")),

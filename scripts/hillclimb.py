@@ -21,6 +21,34 @@ from repro.launch.dryrun import dryrun_one  # noqa: E402  (sets XLA_FLAGS)
 from repro.configs.base import OverlapConfig  # noqa: E402
 
 
+def _analytic_prepass(arch: str, shape_name: str) -> None:
+    """Batched FiCCO pre-pass: before burning minutes in XLA dry-runs,
+    sweep the pair's data-dependent AG->GEMMs through the vectorized
+    design-space engine (one ``explore_grid`` call) and print the
+    predicted best schedule + speedup per GEMM on the production mesh."""
+    from repro.configs import SHAPES, get_config
+    from repro.core import TPU_V5E
+    from repro.core.explorer import explore_grid
+    from repro.core.workload import tp_gemms, tp_token_rows
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    m = tp_token_rows(shape.global_batch, shape.seq_len)
+    gemms = tp_gemms(cfg, m)
+    ex = explore_grid(list(gemms.values()), machines=(TPU_V5E,))
+    best_idx = ex.best_idx
+    best_total = ex.grid.best_total()
+    print(f"##### analytic prepass: {arch} x {shape_name} (g=16, v5e)")
+    for i, name in enumerate(gemms):
+        best = ex.grid.schedules[int(best_idx[i, 0])]
+        pick = ex.grid.schedules[int(ex.heuristic_idx[i, 0])]
+        sp = ex.grid.serial_total[i, 0] / best_total[i, 0]
+        print(
+            f"  {name:14s} best={best.value:18s} {sp:4.2f}x "
+            f"heuristic={pick.value}"
+        )
+
+
 def _overlap(mode):
     def t(cfg):
         return dataclasses.replace(cfg, overlap=OverlapConfig(mode=mode))
@@ -156,6 +184,8 @@ def main():
     ap.add_argument("--json", default=None)
     args = ap.parse_args()
     spec = PAIRS[args.pair]
+
+    _analytic_prepass(spec["arch"], spec["shape"])
 
     results = []
     for name, transform, hypothesis in spec["variants"]:

@@ -1,0 +1,132 @@
+"""Cross-version JAX compatibility helpers.
+
+``jax.shard_map`` graduated from ``jax.experimental.shard_map`` (where the
+replication-check kwarg is ``check_rep``) to a top-level API (kwarg
+``check_vma``), ``lax.axis_size`` is new-JAX-only (the old idiom is the
+constant-folded ``lax.psum(1, axis)``), and the Pallas TPU surface renamed
+``TPUCompilerParams`` -> ``CompilerParams`` while growing the dedicated
+Mosaic interpreter (``InterpretParams``).  Everything in this repo routes
+through these helpers so both old and new JAX releases work unchanged.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax import lax
+from jax.experimental.pallas import tpu as pltpu
+
+# The Mosaic TPU interpreter and the MESH-tuple device-id convention for
+# remote DMAs arrived together; its presence gates both code paths.
+_NEW_PALLAS = hasattr(pltpu, "InterpretParams")
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """Version-agnostic ``shard_map`` with the new-style keyword API.
+
+    ``check_vma`` defaults to True like ``jax.shard_map`` itself; call
+    sites that wrap Pallas DMA kernels (whose outputs the checker cannot
+    reason about) pass ``check_vma=False`` explicitly.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f,
+            mesh=mesh,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        check_rep=check_vma,
+    )
+
+
+def axis_size(axis_name: str) -> int:
+    """Static size of a shard_map/pmap axis, on any JAX version."""
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis_name)
+    return lax.psum(1, axis_name)  # constant-folds to a Python int
+
+
+def tpu_interpret(interpret: bool):
+    """``interpret=`` argument for a DMA-using TPU pallas_call.
+
+    New JAX: the Mosaic interpreter (simulates cross-device DMAs +
+    semaphores, including the race detector).  Old JAX: the generic pallas
+    interpreter, whose state-discharge rules also model remote DMAs.
+    """
+    if not interpret:
+        return False
+    return pltpu.InterpretParams() if _NEW_PALLAS else True
+
+
+def tpu_compiler_params(**kwargs):
+    """Build CompilerParams/TPUCompilerParams, dropping unknown fields."""
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    fields = {f.name for f in dataclasses.fields(cls)}
+    return cls(**{k: v for k, v in kwargs.items() if k in fields})
+
+
+def remote_device_id(peer):
+    """(device_id, device_id_type) pair for remote DMAs / semaphore signals.
+
+    New JAX expects a mesh coordinate tuple; the old interpreter's
+    discharge rules require a scalar logical id (identical on the 1-D
+    overlap meshes used throughout this repo).
+    """
+    if _NEW_PALLAS:
+        return (peer,), pltpu.DeviceIdType.MESH
+    return peer, pltpu.DeviceIdType.LOGICAL
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    New JAX: ``jax.sharding.set_mesh``.  Old JAX: ``Mesh`` is itself a
+    context manager that installs the physical mesh our sharding helpers
+    fall back to (``pxla.thread_resources``).
+    """
+    if hasattr(jax.sharding, "set_mesh"):
+        return jax.sharding.set_mesh(mesh)
+    return mesh
+
+
+def remote_semaphore_signal(sem_ref, inc, peer):
+    """Signal a semaphore on a peer device (slot flow control).
+
+    The old generic interpreter has no remote-signal discharge rule.  Its
+    ``dma_start`` discharge executes every exchange as a lockstep
+    collective, so devices cannot run ahead of each other and a *local*
+    signal keeps the semaphore arithmetic identical without weakening the
+    simulated schedule.  Real TPUs and the Mosaic interpreter use the true
+    remote signal.
+    """
+    if _NEW_PALLAS:
+        pltpu.semaphore_signal(
+            sem_ref,
+            inc,
+            device_id=peer,
+            device_id_type=pltpu.DeviceIdType.MESH,
+        )
+    else:
+        pltpu.semaphore_signal(sem_ref, inc)
+
+
+__all__ = [
+    "shard_map",
+    "axis_size",
+    "tpu_interpret",
+    "tpu_compiler_params",
+    "remote_device_id",
+    "remote_semaphore_signal",
+    "set_mesh",
+]

@@ -5,8 +5,19 @@ Layers:
   * inefficiency        — DIL / CIL analytic models (§IV), paper-calibrated
   * schedule_types      — the design space (Fig. 11a)
   * simulator           — two-channel discrete schedule simulator (Fig. 11b)
+  * batch               — NumPy-vectorized batched grid engine (S x M x L)
   * heuristics          — static OTB x MT schedule selection (Fig. 12a)
   * explorer            — full design-space exploration + pruning argument
+
+Sweeping a design space takes three lines::
+
+    from repro.core import TABLE_I, MI300X, TPU_V5E, explore_grid
+    ex = explore_grid(TABLE_I, machines=[MI300X, TPU_V5E])
+    print(ex.summary())   # accuracy + losses over all schedules at once
+
+and scales to thousands of scenarios (``workload.scenario_grid`` x
+``workload.machine_grid``) at >=50x the scalar simulator's throughput
+(``benchmarks/bench_sweep.py`` tracks the ratio).
 """
 
 from repro.core.machine import MACHINES, MI300X, TPU_V5E, MachineSpec, Topology
@@ -17,6 +28,8 @@ from repro.core.workload import (
     GemmShape,
     Scenario,
     geomean,
+    machine_grid,
+    scenario_grid,
     synthetic_scenarios,
 )
 from repro.core.schedule_types import (
@@ -41,25 +54,40 @@ from repro.core.inefficiency import (
     p2p_step_time,
 )
 from repro.core.simulator import SimResult, best_schedule, simulate
+from repro.core.batch import (
+    GRID_SCHEDULES,
+    GridResult,
+    ScenarioBatch,
+    evaluate_grid,
+)
 from repro.core.heuristics import (
     HeuristicDecision,
     calibrate_tau,
     machine_threshold,
     select_schedule,
+    select_schedule_batch,
 )
-from repro.core.explorer import Exploration, explore, prune_report
+from repro.core.explorer import (
+    Exploration,
+    GridExploration,
+    explore,
+    explore_grid,
+    prune_report,
+)
 
 __all__ = [
     "MACHINES", "MI300X", "TPU_V5E", "MachineSpec", "Topology",
     "SCENARIOS", "TABLE_I", "CollectiveKind", "GemmShape", "Scenario",
-    "geomean", "synthetic_scenarios",
+    "geomean", "machine_grid", "scenario_grid", "synthetic_scenarios",
     "ALL_VARIANTS", "SIGNATURES", "STUDIED", "CommShape", "FiccoVariant",
     "Granularity", "Schedule", "Uniformity",
     "GemmExec", "a2a_chunk_step_time", "ag_serial_time", "comm_cil",
     "gemm_cil", "gemm_dil", "gemm_exec", "gemm_time_decomposed",
     "p2p_step_time",
     "SimResult", "best_schedule", "simulate",
+    "GRID_SCHEDULES", "GridResult", "ScenarioBatch", "evaluate_grid",
     "HeuristicDecision", "calibrate_tau", "machine_threshold",
-    "select_schedule",
-    "Exploration", "explore", "prune_report",
+    "select_schedule", "select_schedule_batch",
+    "Exploration", "GridExploration", "explore", "explore_grid",
+    "prune_report",
 ]

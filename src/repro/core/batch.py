@@ -1,0 +1,600 @@
+"""Vectorized batched design-space engine: thousands of FiCCO scenarios/sec.
+
+The scalar simulator (``repro.core.simulator``) walks one ``(scenario,
+machine, schedule)`` triple at a time in Python — fine for the 16 Table-I
+rows, hopeless for design-space sweeps over every registry architecture x
+dtype x group size x topology.  This module evaluates the *whole grid* in
+NumPy array math:
+
+  * the roofline GEMM model (:func:`gemm_exec_vec`): tiles, split-K,
+    occupancy, reduction ramp — all elementwise over ``(S,)`` shape arrays;
+  * the communication model (:func:`ag_serial_time_vec`,
+    :func:`a2a_chunk_step_time_vec`, :func:`p2p_step_time_vec`);
+  * the CIL interference formulas (:func:`gemm_cil_vec`,
+    :func:`comm_cil_vec`), reusing the machine-level calibrated
+    coefficients from ``repro.core.inefficiency`` (cached, bisected once);
+  * the two-channel pipeline recurrence (:func:`pipeline_vec`): a scan
+    over the uniform step lists — ``group`` iterations of ``(S,)`` array
+    ops, replicating the scalar accumulation order *bit for bit* so
+    batched totals match ``simulate()`` exactly, ties included.
+
+Quick start (the whole grid in three lines)::
+
+    from repro.core import MI300X, TABLE_I, explore_grid
+    ex = explore_grid(TABLE_I, machines=[MI300X])
+    print(ex.summary())          # accuracy / speedups over S x M x schedules
+
+Machines are looped (there are a handful), scenarios are vectorized
+(there are thousands) — the Python-level work is ``O(M x schedules x
+group)`` regardless of S.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import inefficiency as ineff
+from repro.core.machine import MachineSpec, Topology
+from repro.core.schedule_types import STUDIED, Schedule
+from repro.core.simulator import SimResult
+from repro.core.workload import GemmShape, Scenario
+
+# Canonical schedule order — matches the dict order of
+# ``simulator.best_schedule`` so argmin tie-breaking is identical.
+GRID_SCHEDULES: tuple[Schedule, ...] = (
+    Schedule.SERIAL,
+    Schedule.SHARD_P2P,
+    *STUDIED,
+)
+SCHEDULE_INDEX = {s: i for i, s in enumerate(GRID_SCHEDULES)}
+
+_F = np.float64
+
+
+# ---------------------------------------------------------------------------
+# Scenario batches.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioBatch:
+    """Struct-of-arrays view of S global GEMM scenarios."""
+
+    m: np.ndarray  # (S,) int64
+    n: np.ndarray  # (S,) int64
+    k: np.ndarray  # (S,) int64
+    dtype_bytes: np.ndarray  # (S,) int64
+    names: tuple[str, ...] = ()
+
+    def __post_init__(self):
+        for f in ("m", "n", "k", "dtype_bytes"):
+            a = getattr(self, f)
+            if a.ndim != 1 or a.shape != self.m.shape:
+                raise ValueError(f"{f} must be 1-D and congruent, got {a.shape}")
+
+    def __len__(self) -> int:
+        return self.m.shape[0]
+
+    @classmethod
+    def from_gemms(cls, gemms, names=()) -> "ScenarioBatch":
+        gemms = list(gemms)
+        return cls(
+            m=np.array([g.m for g in gemms], dtype=np.int64),
+            n=np.array([g.n for g in gemms], dtype=np.int64),
+            k=np.array([g.k for g in gemms], dtype=np.int64),
+            dtype_bytes=np.array(
+                [g.dtype_bytes for g in gemms], dtype=np.int64
+            ),
+            names=tuple(names),
+        )
+
+    @classmethod
+    def from_scenarios(cls, scenarios) -> "ScenarioBatch":
+        scenarios = list(scenarios)
+        return cls.from_gemms(
+            (s.gemm for s in scenarios), names=tuple(s.name for s in scenarios)
+        )
+
+    def gemm(self, i: int) -> GemmShape:
+        return GemmShape(
+            int(self.m[i]), int(self.n[i]), int(self.k[i]),
+            int(self.dtype_bytes[i]),
+        )
+
+
+def _as_batch(scenarios) -> ScenarioBatch:
+    if isinstance(scenarios, ScenarioBatch):
+        return scenarios
+    scenarios = list(scenarios)
+    if scenarios and isinstance(scenarios[0], Scenario):
+        return ScenarioBatch.from_scenarios(scenarios)
+    return ScenarioBatch.from_gemms(scenarios)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized roofline GEMM model (mirror of inefficiency.gemm_exec).
+# ---------------------------------------------------------------------------
+
+
+def gemm_exec_vec(
+    m: np.ndarray,
+    n: np.ndarray,
+    k: np.ndarray,
+    b: np.ndarray,
+    machine: MachineSpec,
+    *,
+    accumulate: bool = False,
+) -> np.ndarray:
+    """Elementwise ``inefficiency.gemm_exec(...).time`` over shape arrays.
+
+    Every operation replicates the scalar model's expression order so the
+    results agree to the last ulp.  Lanes with ``m == 0`` (degenerate
+    decompositions the scalar model would reject) yield NaN.
+    """
+    t_mn, pu = machine.tile_mn, machine.parallel_units
+    cm = (m + t_mn - 1) // t_mn
+    cn = (n + t_mn - 1) // t_mn
+    tiles = cm * cn
+    split_cap = np.where(m <= t_mn, 2, 8)
+    ceil_pu = (pu + tiles - 1) // np.maximum(tiles, 1)
+    splits = np.minimum(
+        np.minimum(ceil_pu, np.maximum(k // machine.tile_k, 1)), split_cap
+    )
+    splits = np.where(tiles < pu, splits, 1)
+    work = tiles * splits
+    padded_flops = 2.0 * (cm * t_mn) * (cn * t_mn) * k
+    with np.errstate(divide="ignore", invalid="ignore"):
+        occ_quant = work / (-(-work // pu) * pu)
+        occ_smooth = np.minimum(1.0, work / pu)
+        occupancy = 0.5 * (occ_quant + occ_smooth)
+        k_eff = k / (k + machine.tile_k)
+        compute = (
+            padded_flops
+            / machine.peak_flops
+            / np.maximum(occupancy * k_eff, 1e-9)
+        )
+        bytes_hbm = (m * k + k * n + m * n).astype(_F) * b
+        if accumulate:
+            bytes_hbm = bytes_hbm + (m * n).astype(_F) * b
+        bytes_hbm = bytes_hbm + np.where(
+            splits > 1, 2.0 * (splits - 1) * (m * n).astype(_F) * 4, 0.0
+        )
+        memory = bytes_hbm / machine.hbm_bw
+        base = np.maximum(compute, memory)
+        ramp = machine.kernel_ramp
+        t = machine.kernel_latency + base * (1.0 + ramp / (base + ramp))
+    return np.where(m > 0, t, np.nan)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized communication model.
+# ---------------------------------------------------------------------------
+
+
+def comm_time_vec(
+    nbytes_per_link: np.ndarray,
+    machine: MachineSpec,
+    *,
+    s_half: float,
+    n_transfers: int = 1,
+) -> np.ndarray:
+    per = nbytes_per_link / max(n_transfers, 1)
+    t_one = machine.link_latency + (per + s_half) / machine.link_bw
+    return n_transfers * t_one
+
+
+def ag_serial_time_vec(
+    mk_bytes: np.ndarray, machine: MachineSpec
+) -> np.ndarray:
+    g = machine.group
+    if machine.topology is Topology.FULL_MESH:
+        per_link = mk_bytes / g
+    else:
+        per_link = mk_bytes * (g - 1) / g / machine.a2a_links
+    return comm_time_vec(
+        per_link, machine, s_half=ineff.calibrated_s_half(machine)
+    )
+
+
+def p2p_step_time_vec(
+    shard_bytes: np.ndarray, machine: MachineSpec
+) -> np.ndarray:
+    return comm_time_vec(
+        shard_bytes / machine.p2p_links,
+        machine,
+        s_half=ineff.calibrated_s_half(machine),
+    )
+
+
+def a2a_chunk_step_time_vec(
+    chunk_bytes: np.ndarray, machine: MachineSpec
+) -> np.ndarray:
+    g = machine.group
+    if machine.topology is Topology.FULL_MESH:
+        per_link, n = chunk_bytes, 1
+    else:
+        per_link = chunk_bytes * (g - 1) / machine.a2a_links
+        n = max((g - 1) // machine.a2a_links, 1)
+    return comm_time_vec(
+        per_link,
+        machine,
+        s_half=ineff.calibrated_s_half(machine),
+        n_transfers=n,
+    )
+
+
+def hbm_move_time_vec(nbytes: np.ndarray, machine: MachineSpec) -> np.ndarray:
+    return machine.kernel_latency + 2.0 * nbytes / machine.hbm_bw
+
+
+# ---------------------------------------------------------------------------
+# Vectorized CIL formulas.
+# ---------------------------------------------------------------------------
+
+
+def _mt_norm_vec(m, n, k, b, machine: MachineSpec) -> np.ndarray:
+    bytes_mt = (m * k + k * n + m * n).astype(_F) * b
+    return bytes_mt / ineff._mt_ref(machine)
+
+
+def gemm_cil_vec(
+    m, n, k, b, machine: MachineSpec, *, degree: int, dma: bool = True
+) -> np.ndarray:
+    p = 0.5
+    c = ineff._cil_coeff(machine, "gemm", degree)
+    mt_p = _mt_norm_vec(m, n, k, b, machine) ** p
+    cil = 1.0 + c * (min(degree, 3) - 1) * mt_p
+    if degree > 3:
+        cil = cil * (1.0 + 0.02 * (degree - 3))
+    if not dma:
+        cil = cil + (ineff.RCCL_EXTRA_GEMM_CIL * mt_p + 0.15)
+    return cil
+
+
+def comm_cil_vec(
+    m, n, k, b, machine: MachineSpec, *, degree: int, dma: bool = True
+) -> np.ndarray:
+    p = 0.5
+    c = ineff._cil_coeff(machine, "comm", degree)
+    mt_p = _mt_norm_vec(m, n, k, b, machine) ** p
+    cil = 1.0 + c * (min(degree, 3) - 1) * mt_p
+    if degree > 3:
+        cil = cil * (1.0 + 0.02 * (degree - 3))
+    if not dma:
+        cil = cil + 0.10
+    return cil
+
+
+# ---------------------------------------------------------------------------
+# Pipeline recurrence (vectorized scan over uniform step lists).
+# ---------------------------------------------------------------------------
+
+
+def pipeline_vec(comm_steps, compute_steps, deps):
+    """Vectorized two-channel pipeline over ``(S,)`` step arrays.
+
+    ``comm_steps`` / ``compute_steps`` are short lists (length ~group) of
+    per-step time arrays; ``deps[i]`` is the comm step index compute step
+    ``i`` waits on (or None).  The scan performs the same additions and
+    comparisons, in the same order, as ``simulator._pipeline`` — so
+    per-schedule totals agree bit-for-bit with the scalar recurrence
+    rather than merely to rounding tolerance.
+
+    Returns ``(total, exposed, comm_sum, compute_sum)``.
+    """
+    finish = []
+    t = None
+    for c in comm_steps:
+        t = c if t is None else t + c
+        finish.append(t)
+    zero = np.zeros_like(compute_steps[0])
+    t_comp = zero
+    exposed = zero
+    comp_sum = None
+    for i, w in enumerate(compute_steps):
+        dep = deps[i]
+        if dep is not None:
+            ready = finish[dep]
+            stalled = ready > t_comp
+            exposed = exposed + np.where(stalled, ready - t_comp, 0.0)
+            t_comp = np.where(stalled, ready, t_comp)
+        t_comp = t_comp + w
+        comp_sum = w if comp_sum is None else comp_sum + w
+    comm_sum = finish[-1] if finish else zero
+    total = np.maximum(t_comp, comm_sum)
+    return total, exposed, comm_sum, comp_sum
+
+
+# ---------------------------------------------------------------------------
+# Grid evaluation.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GridResult:
+    """Dense result table over (schedule, scenario, machine).
+
+    ``total``/``comm_busy``/``compute_busy``/``exposed`` have shape
+    ``(L, S, M)`` with L = ``len(schedules)``; ``serial_comm`` /
+    ``serial_gemm`` are ``(S, M)``.  Entries where the scalar simulator
+    would raise (indivisible decompositions) are NaN with ``valid`` False.
+    """
+
+    schedules: tuple[Schedule, ...]
+    scenarios: ScenarioBatch
+    machines: tuple[MachineSpec, ...]
+    total: np.ndarray
+    comm_busy: np.ndarray
+    compute_busy: np.ndarray
+    exposed: np.ndarray
+    steps: np.ndarray  # (L, M) int
+    serial_comm: np.ndarray
+    serial_gemm: np.ndarray
+    valid: np.ndarray
+    dma: bool
+
+    @property
+    def serial_total(self) -> np.ndarray:
+        return self.serial_comm + self.serial_gemm
+
+    @property
+    def speedup(self) -> np.ndarray:
+        """(L, S, M) speedup of each schedule vs the serial reference."""
+        return self.serial_total[None, :, :] / self.total
+
+    def best_idx(self) -> np.ndarray:
+        """(S, M) index into ``schedules`` of the fastest valid schedule."""
+        masked = np.where(self.valid, self.total, np.inf)
+        return np.argmin(masked, axis=0)
+
+    def best_total(self) -> np.ndarray:
+        masked = np.where(self.valid, self.total, np.inf)
+        return np.min(masked, axis=0)
+
+    def schedule_idx(self, schedule: Schedule) -> int:
+        return self.schedules.index(schedule)
+
+    def sim_result(self, schedule: Schedule, i: int, j: int) -> SimResult:
+        """Materialize one scalar :class:`SimResult` from the grid."""
+        l = self.schedule_idx(schedule)
+        if not self.valid[l, i, j]:
+            raise ValueError(
+                f"{schedule} invalid for scenario {i} on "
+                f"{self.machines[j].name} (indivisible decomposition)"
+            )
+        return SimResult(
+            schedule,
+            float(self.total[l, i, j]),
+            float(self.comm_busy[l, i, j]),
+            float(self.compute_busy[l, i, j]),
+            float(self.exposed[l, i, j]),
+            int(self.steps[l, j]),
+            float(self.serial_comm[i, j]),
+            float(self.serial_gemm[i, j]),
+        )
+
+
+def _eval_one_machine(
+    sb: ScenarioBatch,
+    machine: MachineSpec,
+    schedules,
+    dma: bool,
+    dma_into_place: bool,
+):
+    """All schedules for one machine; returns dict of (L, S) arrays."""
+    g = machine.group
+    m, n, k, b = sb.m, sb.n, sb.k, sb.dtype_bytes
+    S = len(sb)
+
+    dev_n = np.where(n % g == 0, n // g, n)
+    mk_bytes = (m * k).astype(_F) * b
+    serial_comm = ag_serial_time_vec(mk_bytes, machine)
+    serial_gemm = gemm_exec_vec(m, dev_n, k, b, machine)
+
+    m_div = (m % g == 0) & (m > 0)
+    k_div = k % g == 0
+    m_s = m // g
+    m_sg = m_s // g
+
+    out = {
+        name: np.full((len(schedules), S), np.nan)
+        for name in ("total", "comm_busy", "compute_busy", "exposed")
+    }
+    steps = np.zeros(len(schedules), dtype=np.int64)
+    valid = np.zeros((len(schedules), S), dtype=bool)
+
+    def put(l, ok, total, comm_busy, compute_busy, exposed, n_steps):
+        out["total"][l] = np.where(ok, total, np.nan)
+        out["comm_busy"][l] = np.where(ok, comm_busy, np.nan)
+        out["compute_busy"][l] = np.where(ok, compute_busy, np.nan)
+        out["exposed"][l] = np.where(ok, exposed, np.nan)
+        steps[l] = n_steps
+        valid[l] = ok
+
+    for l, sched in enumerate(schedules):
+        if sched is Schedule.SERIAL:
+            total = serial_comm + serial_gemm
+            put(
+                l, np.ones(S, dtype=bool), total, serial_comm, serial_gemm,
+                serial_comm, 1,
+            )
+            continue
+
+        if sched is Schedule.SHARD_P2P:
+            shard_bytes = (m_s * k).astype(_F) * b
+            c_cil = comm_cil_vec(m_s, dev_n, k, b, machine, degree=2, dma=dma)
+            g_cil = gemm_cil_vec(m_s, dev_n, k, b, machine, degree=2, dma=dma)
+            t_p2p = p2p_step_time_vec(shard_bytes, machine) * c_cil
+            t_gemm = gemm_exec_vec(m_s, dev_n, k, b, machine) * g_cil
+            total, exposed, comm_sum, comp_sum = pipeline_vec(
+                [t_p2p] * (g - 1),
+                [t_gemm] * g,
+                [None] + list(range(g - 1)),
+            )
+            put(l, m_div, total, comm_sum, comp_sum, exposed, g)
+            continue
+
+        # ---- FiCCO schedules -----------------------------------------
+        if sched is Schedule.UNIFORM_FUSED_2D:
+            k_g = k // g
+            chunk_bytes = (m_s * k_g).astype(_F) * b
+            step = (m, dev_n, k_g)
+            gather_bytes = (m * k_g).astype(_F) * b
+            scatter_bytes = None
+            degree, accumulate = 4, True
+            local = None
+            per_step_gemms = 1
+            ok = m_div & k_div
+        elif sched is Schedule.UNIFORM_FUSED_1D:
+            chunk_bytes = (m_sg * k).astype(_F) * b
+            step = (m_s, dev_n, k)
+            gather_bytes = (m_s * k).astype(_F) * b
+            scatter_bytes = (m_s * dev_n).astype(_F) * b
+            degree, accumulate = 4, False
+            local = None
+            per_step_gemms = 1
+            ok = m_div
+        elif sched is Schedule.HETERO_FUSED_1D:
+            chunk_bytes = (m_sg * k).astype(_F) * b
+            rows = (g - 1) * m_sg
+            step = (rows, dev_n, k)
+            gather_bytes = (rows * k).astype(_F) * b
+            scatter_bytes = (rows * dev_n).astype(_F) * b
+            degree, accumulate = 3, False
+            local = (m_s, dev_n, k)
+            per_step_gemms = 1
+            ok = m_div & (m_sg >= 1)
+        elif sched is Schedule.HETERO_UNFUSED_1D:
+            chunk_bytes = (m_sg * k).astype(_F) * b
+            step = (m_sg, dev_n, k)
+            gather_bytes = np.zeros(S)
+            scatter_bytes = ((g - 1) * m_sg * dev_n).astype(_F) * b
+            degree, accumulate = 2, False
+            local = (m_s, dev_n, k)
+            per_step_gemms = g - 1
+            ok = m_div & (m_sg >= 1)
+        else:  # pragma: no cover
+            raise ValueError(sched)
+
+        if dma_into_place:
+            gather_bytes = np.zeros(S)
+            scatter_bytes = None
+            degree = 2
+        c_cil = comm_cil_vec(
+            m_s, dev_n, k, b, machine, degree=degree, dma=dma
+        )
+        g_cil = gemm_cil_vec(
+            step[0], step[1], step[2], b, machine, degree=degree, dma=dma
+        )
+        t_comm = a2a_chunk_step_time_vec(chunk_bytes, machine) * c_cil
+        t_gemm_step = (
+            per_step_gemms
+            * gemm_exec_vec(
+                step[0], step[1], step[2], b, machine, accumulate=accumulate
+            )
+            * g_cil
+        )
+        t_gather = np.where(
+            gather_bytes > 0, hbm_move_time_vec(gather_bytes, machine), 0.0
+        )
+        if scatter_bytes is None:
+            t_scatter = np.zeros(S)
+        else:
+            t_scatter = np.where(
+                scatter_bytes > 0,
+                hbm_move_time_vec(scatter_bytes, machine),
+                0.0,
+            )
+        t_step = np.maximum(t_gemm_step, t_gather + t_scatter)
+
+        if local is not None:
+            t_local = gemm_exec_vec(
+                local[0], local[1], local[2], b, machine
+            ) * gemm_cil_vec(
+                local[0], local[1], local[2], b, machine,
+                degree=degree, dma=dma,
+            )
+            compute = [t_local] + [t_step] * g
+            deps = [None] + list(range(g))
+        else:
+            compute = [t_step] * g
+            deps = list(range(g))
+        total, exposed, comm_sum, comp_sum = pipeline_vec(
+            [t_comm] * g, compute, deps
+        )
+        put(l, ok, total, comm_sum, comp_sum, exposed, g)
+
+    return out, steps, valid, serial_comm, serial_gemm
+
+
+def evaluate_grid(
+    scenarios,
+    machines,
+    *,
+    dma: bool = True,
+    dma_into_place: bool = False,
+    schedules: tuple[Schedule, ...] = GRID_SCHEDULES,
+) -> GridResult:
+    """Evaluate all ``schedules`` for S scenarios x M machines at once.
+
+    ``scenarios`` may be a :class:`ScenarioBatch`, a list of
+    :class:`~repro.core.workload.Scenario`, or a list of
+    :class:`~repro.core.workload.GemmShape`.
+    """
+    sb = _as_batch(scenarios)
+    machines = tuple(machines)
+    L, S, M = len(schedules), len(sb), len(machines)
+    total = np.empty((L, S, M))
+    comm_busy = np.empty((L, S, M))
+    compute_busy = np.empty((L, S, M))
+    exposed = np.empty((L, S, M))
+    steps = np.empty((L, M), dtype=np.int64)
+    serial_comm = np.empty((S, M))
+    serial_gemm = np.empty((S, M))
+    valid = np.empty((L, S, M), dtype=bool)
+    for j, machine in enumerate(machines):
+        out, st, va, sc, sg = _eval_one_machine(
+            sb, machine, schedules, dma, dma_into_place
+        )
+        total[:, :, j] = out["total"]
+        comm_busy[:, :, j] = out["comm_busy"]
+        compute_busy[:, :, j] = out["compute_busy"]
+        exposed[:, :, j] = out["exposed"]
+        steps[:, j] = st
+        valid[:, :, j] = va
+        serial_comm[:, j] = sc
+        serial_gemm[:, j] = sg
+    return GridResult(
+        schedules=tuple(schedules),
+        scenarios=sb,
+        machines=machines,
+        total=total,
+        comm_busy=comm_busy,
+        compute_busy=compute_busy,
+        exposed=exposed,
+        steps=steps,
+        serial_comm=serial_comm,
+        serial_gemm=serial_gemm,
+        valid=valid,
+        dma=dma,
+    )
+
+
+__all__ = [
+    "GRID_SCHEDULES",
+    "SCHEDULE_INDEX",
+    "ScenarioBatch",
+    "GridResult",
+    "evaluate_grid",
+    "gemm_exec_vec",
+    "comm_time_vec",
+    "ag_serial_time_vec",
+    "p2p_step_time_vec",
+    "a2a_chunk_step_time_vec",
+    "hbm_move_time_vec",
+    "gemm_cil_vec",
+    "comm_cil_vec",
+    "pipeline_vec",
+]

@@ -11,9 +11,16 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 from repro.core import inefficiency as ineff
-from repro.core.heuristics import HeuristicDecision, select_schedule
-from repro.core.machine import MachineSpec
+from repro.core.batch import GridResult, ScenarioBatch, evaluate_grid
+from repro.core.heuristics import (
+    HeuristicDecision,
+    select_schedule,
+    select_schedule_batch,
+)
+from repro.core.machine import MI300X, MachineSpec
 from repro.core.schedule_types import (
     ALL_VARIANTS,
     STUDIED,
@@ -59,6 +66,105 @@ def explore(
     return Exploration(
         scenario, results, best, select_schedule(scenario.gemm, machine)
     )
+
+
+@dataclasses.dataclass(frozen=True)
+class GridExploration:
+    """Batched exploration: simulator grid + vectorized heuristic picks.
+
+    All arrays are indexed ``[scenario, machine]``; schedule identities are
+    indices into ``grid.schedules`` (== ``GRID_SCHEDULES``).
+    """
+
+    grid: GridResult
+    heuristic_idx: np.ndarray  # (S, M) indices into grid.schedules
+
+    @property
+    def best_idx(self) -> np.ndarray:
+        return self.grid.best_idx()
+
+    @property
+    def exact(self) -> np.ndarray:
+        """(S, M) bool: heuristic picked the simulator-optimal schedule."""
+        return self.heuristic_idx == self.best_idx
+
+    def heuristic_total(self) -> np.ndarray:
+        """(S, M) simulated time of the heuristic's pick."""
+        s_idx = np.arange(len(self.grid.scenarios))[:, None]
+        m_idx = np.arange(len(self.grid.machines))[None, :]
+        return self.grid.total[self.heuristic_idx, s_idx, m_idx]
+
+    def within(self, frac: float = 0.05) -> np.ndarray:
+        """(S, M) bool: heuristic pick within ``frac`` of optimal time."""
+        return self.heuristic_total() <= (1.0 + frac) * self.grid.best_total()
+
+    def heuristic_loss(self) -> np.ndarray:
+        """(S, M) fraction of the optimal speedup lost by the heuristic."""
+        serial = self.grid.serial_total
+        opt = serial / self.grid.best_total()
+        got = serial / self.heuristic_total()
+        with np.errstate(invalid="ignore", divide="ignore"):
+            loss = (opt - got) / (opt - 1.0)
+        return np.where(opt <= 1.0, 0.0, np.maximum(loss, 0.0))
+
+    def accuracy(self, frac: float | None = None) -> float:
+        """Scalar grid-wide accuracy (exact, or within ``frac`` if given)."""
+        hits = self.exact if frac is None else self.within(frac)
+        return float(np.mean(hits))
+
+    def mean_misprediction_loss(self) -> float:
+        """Mean speedup loss over mispredicted points (paper: ~14%)."""
+        miss = ~self.exact
+        if not miss.any():
+            return 0.0
+        # nanmean: a pick that is invalid on some machine (indivisible
+        # decomposition) has no simulated time to compare against.
+        return float(np.nanmean(self.heuristic_loss()[miss]))
+
+    def summary(self) -> str:
+        return (
+            f"{self.exact.size} (scenario x machine) points: "
+            f"exact {100 * self.accuracy():.1f}%, "
+            f"within5% {100 * self.accuracy(0.05):.1f}%, "
+            f"mean misprediction loss "
+            f"{100 * self.mean_misprediction_loss():.1f}%"
+        )
+
+
+def explore_grid(
+    scenarios,
+    machines=(MI300X,),
+    *,
+    dma: bool = True,
+    dma_into_place: bool = False,
+    tau: float | None = None,
+) -> GridExploration:
+    """Batched :func:`explore` over S scenarios x M machines at once.
+
+    Three lines to sweep a design space::
+
+        from repro.core import TABLE_I, MI300X, TPU_V5E, explore_grid
+        ex = explore_grid(TABLE_I, machines=[MI300X, TPU_V5E])
+        print(ex.summary())
+
+    ``scenarios`` accepts Scenario lists, GemmShape lists or a prebuilt
+    :class:`~repro.core.batch.ScenarioBatch` (e.g. from
+    ``workload.scenario_grid``).
+    """
+    grid = evaluate_grid(
+        scenarios, machines, dma=dma, dma_into_place=dma_into_place
+    )
+    sb = grid.scenarios
+    heuristic = np.stack(
+        [
+            select_schedule_batch(
+                sb.m, sb.n, sb.k, sb.dtype_bytes, machine, tau=tau
+            )
+            for machine in grid.machines
+        ],
+        axis=1,
+    )
+    return GridExploration(grid, heuristic)
 
 
 def _variant_proxy_time(

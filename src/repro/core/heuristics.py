@@ -24,6 +24,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 from repro.core.machine import MachineSpec
 from repro.core.schedule_types import Schedule
 from repro.core.workload import GemmShape
@@ -91,23 +93,74 @@ def select_schedule(
     )
 
 
+def select_schedule_batch(
+    m,
+    n,
+    k,
+    dtype_bytes,
+    machine: MachineSpec,
+    *,
+    tau: float | None = None,
+    allow_serial_guard: bool = True,
+):
+    """Vectorized :func:`select_schedule` over ``(S,)`` shape arrays.
+
+    Returns an int array of indices into ``repro.core.batch.GRID_SCHEDULES``
+    (the same order the batched simulator uses), replicating the scalar
+    decision tree branch for branch.
+    """
+    from repro.core.batch import SCHEDULE_INDEX  # local: avoids a cycle
+
+    m = np.asarray(m)
+    n = np.asarray(n)
+    k = np.asarray(k)
+    b = np.asarray(dtype_bytes)
+    flops = 2.0 * m * n * k
+    bytes_mt = (m * k + k * n + m * n).astype(np.float64) * b
+    metric = (flops / bytes_mt) * bytes_mt  # == flops, scalar-model order
+    t = machine_threshold(machine, tau)
+
+    conds = [
+        (flops < MIN_DECOMPOSE_FLOPS)
+        if allow_serial_guard
+        else np.zeros(m.shape, dtype=bool),
+        m < k,
+        metric < t,
+        metric >= 5.0 * t,
+    ]
+    choices = [
+        SCHEDULE_INDEX[Schedule.SERIAL],
+        SCHEDULE_INDEX[Schedule.UNIFORM_FUSED_2D],
+        SCHEDULE_INDEX[Schedule.UNIFORM_FUSED_1D],
+        SCHEDULE_INDEX[Schedule.HETERO_UNFUSED_1D],
+    ]
+    return np.select(conds, choices, SCHEDULE_INDEX[Schedule.HETERO_FUSED_1D])
+
+
 def calibrate_tau(
     machine: MachineSpec,
     scenarios,
     candidates=(0.02, 0.05, 0.1, 0.2, 0.5, 1.0),
 ) -> float:
     """One-time TAU fit: maximize agreement with the simulator-optimal
-    schedule over a calibration set (paper tunes thresholds per machine)."""
-    from repro.core.simulator import best_schedule
+    schedule over a calibration set (paper tunes thresholds per machine).
+
+    Runs as one batched sweep: the simulator-optimal schedules come from a
+    single ``evaluate_grid`` call and each TAU candidate is a vectorized
+    re-threshold — no per-(tau, scenario) scalar simulation.
+    """
+    from repro.core import batch as _batch  # local: avoids a cycle
+
+    sb = _batch.ScenarioBatch.from_scenarios(scenarios)
+    grid = _batch.evaluate_grid(sb, (machine,))
+    best = grid.best_idx()[:, 0]
 
     best_tau, best_acc = candidates[0], -1.0
     for tau in candidates:
-        hits = 0
-        for sc in scenarios:
-            dec = select_schedule(sc.gemm, machine, tau=tau)
-            opt, _ = best_schedule(sc.gemm, machine)
-            hits += dec.schedule is opt
-        acc = hits / len(scenarios)
+        picks = select_schedule_batch(
+            sb.m, sb.n, sb.k, sb.dtype_bytes, machine, tau=tau
+        )
+        acc = float(np.mean(picks == best))
         if acc > best_acc:
             best_tau, best_acc = tau, acc
     _TAU_OVERRIDES[machine.name] = best_tau

@@ -30,8 +30,15 @@ import dataclasses
 import functools
 import math
 
+import numpy as np
+
 from repro.core.machine import MachineSpec, Topology
-from repro.core.workload import TABLE_I, GemmShape, geomean
+from repro.core.workload import TABLE_I, GemmShape
+
+
+def _geomean_vec(vals: "np.ndarray") -> float:
+    """Vectorized geomean (the calibration bisections' inner loop)."""
+    return float(np.exp(np.mean(np.log(vals))))
 
 @dataclasses.dataclass(frozen=True)
 class GemmExec:
@@ -78,6 +85,12 @@ def gemm_exec(
     ``hbm_bw_frac`` is the bandwidth share left under contention.
     """
     m, n, k, b = shape.m, shape.n, shape.k, shape.dtype_bytes
+    if m <= 0 or n <= 0 or k <= 0:
+        # Degenerate chunk (e.g. hetero schedules with m < group^2):
+        # surface the same ValueError contract as GemmShape.shard so
+        # callers (and the batched engine's validity mask) see one
+        # error type for "this decomposition does not exist".
+        raise ValueError(f"degenerate GEMM chunk {shape}")
     t_mn, pu = machine.tile_mn, machine.parallel_units
     tiles = math.ceil(m / t_mn) * math.ceil(n / t_mn)
     # split-K to fill the machine when the chunk has too few output tiles.
@@ -175,20 +188,32 @@ def comm_time(
 
 @functools.lru_cache(maxsize=None)
 def calibrated_s_half(machine: MachineSpec) -> float:
-    """Solve the ramp size so FiCCO's 8x-finer AG has ~10% geomean DIL."""
+    """Solve the ramp size so FiCCO's 8x-finer AG has ~10% geomean DIL.
+
+    The Table-I evaluation inside each bisection step is vectorized: the
+    per-scenario link loads are precomputed once and every candidate is a
+    handful of array ops, so a cold cache costs microseconds instead of
+    re-walking scalar Python 60x16 times (this sits on the batched sweep
+    engine's cold path, see ``repro.core.batch``).
+    """
     g = machine.group
+    shard_per_link = np.array(
+        [
+            sc.gemm.m * sc.gemm.k * sc.gemm.dtype_bytes
+            / g
+            / max(machine.a2a_links, 1)
+            for sc in TABLE_I
+        ],
+        dtype=np.float64,
+    )
+    base = machine.link_latency + shard_per_link / machine.link_bw
 
     def dil_geomean(s_half: float) -> float:
-        vals = []
-        for sc in TABLE_I:
-            total = sc.gemm.m * sc.gemm.k * sc.gemm.dtype_bytes
-            shard_per_link = total / g / max(machine.a2a_links, 1)
-            base = comm_time(shard_per_link, machine, s_half=0.0)
-            fine = comm_time(
-                shard_per_link, machine, s_half=s_half, n_transfers=g
-            )
-            vals.append(fine / base)
-        return geomean(vals)
+        fine = g * (
+            machine.link_latency
+            + (shard_per_link / g + s_half) / machine.link_bw
+        )
+        return _geomean_vec(fine / base)
 
     lo, hi = 0.0, 64 * 1024 * 1024
     for _ in range(60):
@@ -265,27 +290,35 @@ _CIL_TARGETS = {
 RCCL_EXTRA_GEMM_CIL = 0.45
 
 
+@functools.lru_cache(maxsize=None)
+def _mt_ref(machine: MachineSpec) -> float:
+    """Largest Table-I M-sharded memory traffic (the CIL normalizer)."""
+    return max(s.gemm.shard(machine.group, "m").bytes_mt for s in TABLE_I)
+
+
 def _mt_norm(shape: GemmShape, machine: MachineSpec) -> float:
     """Memory-traffic pressure of the 8-way M-sharded GEMM, normalized to
     the largest Table-I scenario (the paper's CIL x-axis)."""
-    ref = max(
-        s.gemm.shard(machine.group, "m").bytes_mt for s in TABLE_I
-    )
-    return shape.bytes_mt / ref
+    return shape.bytes_mt / _mt_ref(machine)
 
 
 @functools.lru_cache(maxsize=None)
 def _cil_coeff(machine: MachineSpec, metric: str, degree: int) -> float:
-    """Calibrate `cil = 1 + c * (degree-1) * mt_norm^p` to the paper geomean."""
+    """Calibrate `cil = 1 + c * (degree-1) * mt_norm^p` to the paper geomean.
+
+    Vectorized like :func:`calibrated_s_half`: the Table-I pressure terms
+    are precomputed as one array and each bisection step is a single
+    geomean over it.
+    """
     target_key = (metric, min(max(degree, 2), 3))
     target = _CIL_TARGETS[target_key]
     p = 0.5  # sub-linear: big GEMMs saturate contention
     shapes = [s.gemm.shard(machine.group, "m") for s in TABLE_I]
-    xs = [_mt_norm(sh, machine) ** p for sh in shapes]
+    xs = np.array([_mt_norm(sh, machine) ** p for sh in shapes])
     deg = target_key[1]
 
     def gm(c: float) -> float:
-        return geomean(1.0 + c * (deg - 1) * x for x in xs)
+        return _geomean_vec(1.0 + c * (deg - 1) * xs)
 
     lo, hi = 0.0, 4.0
     for _ in range(60):

@@ -155,6 +155,98 @@ def synthetic_scenarios(count: int = 16, seed: int = 0) -> list[Scenario]:
     return out
 
 
+def tp_token_rows(global_batch: int, seq_len: int, dp: int = 16) -> int:
+    """Per-replica token rows of one TP-SP block (M of its AG->GEMMs)."""
+    b = global_batch // dp if global_batch >= dp else global_batch
+    return b * seq_len
+
+
+def tp_gemms(cfg, m: int, dtype_bytes: int = 2) -> dict:
+    """The data-dependent TP-SP AG->GEMM pairs of one block (global dims).
+
+    Single source of truth for what an architecture's overlap-relevant
+    GEMMs are: MLP up-projection, fused QKV projection, and the MoE
+    shared-expert projection when present.  Used by ``scenario_grid``,
+    ``benchmarks/bench_arch_schedules`` and the hillclimb analytic
+    prepass, so the three stay in agreement.
+    """
+    gemms: dict[str, GemmShape] = {}
+    if cfg.d_ff:
+        gemms["mlp_up"] = GemmShape(m, cfg.d_ff, cfg.d_model, dtype_bytes)
+    h = cfg.num_heads * cfg.resolved_head_dim
+    qkv = h + 2 * cfg.num_kv_heads * cfg.resolved_head_dim
+    gemms["attn_qkv"] = GemmShape(m, qkv, cfg.d_model, dtype_bytes)
+    if cfg.moe and cfg.moe.num_shared_experts:
+        gemms["shared_expert"] = GemmShape(
+            m,
+            cfg.moe.d_ff_expert * cfg.moe.num_shared_experts,
+            cfg.d_model,
+            dtype_bytes,
+        )
+    return gemms
+
+
+def scenario_grid(
+    *,
+    seqs: tuple[int, ...] = (1024, 2048, 4096, 8192, 16384, 32768, 65536),
+    microbatches: tuple[int, ...] = (1, 3, 16),
+    dtype_bytes: tuple[int, ...] = (2, 1),
+) -> list[Scenario]:
+    """Design-space scenario grid: every registry architecture's
+    data-dependent AG->GEMMs crossed with token-row counts and dtypes
+    (paper §VI-D scaled from 16 points to thousands).
+
+    Each architecture contributes its TP-SP pairs (:func:`tp_gemms`); M
+    is the per-replica token-row count ``seq x microbatch``, deduplicated
+    across colliding (seq, microbatch) products so every grid point is
+    distinct.  All M are multiples of 1024, so every group size up to 32
+    decomposes them evenly (the batched engine masks indivisible
+    combinations anyway).  Pair with :func:`machine_grid` for the
+    machine axis; the full cross is what ``benchmarks/bench_sweep.py``
+    pushes through ``explore_grid``.
+    """
+    from repro.configs import ARCHS, get_config  # local: keep layering thin
+
+    ms = sorted({seq * mb for seq in seqs for mb in microbatches})
+    out: list[Scenario] = []
+    for arch in sorted(ARCHS):
+        cfg = get_config(arch)
+        kinds = sorted(tp_gemms(cfg, ms[0]))
+        for kind in kinds:
+            for m in ms:
+                for b in dtype_bytes:
+                    gemm = tp_gemms(cfg, m, dtype_bytes=b)[kind]
+                    name = f"{arch}/{kind}/m{m}/b{b}"
+                    out.append(Scenario(name, "SP+TP", arch, gemm))
+    return out
+
+
+def machine_grid(
+    *,
+    groups: tuple[int, ...] = (8, 16),
+) -> list:
+    """Machine axis of the design space: both reference machines crossed
+    with overlap-group sizes and both studied topologies (full mesh vs
+    torus ring), link counts adjusted to match."""
+    from repro.core.machine import MACHINES, Topology
+
+    out = []
+    for base in MACHINES.values():
+        for g in groups:
+            for topo in (Topology.FULL_MESH, Topology.TORUS_RING):
+                a2a = g - 1 if topo is Topology.FULL_MESH else 2
+                out.append(
+                    dataclasses.replace(
+                        base,
+                        name=f"{base.name}/g{g}/{topo.value}",
+                        group=g,
+                        topology=topo,
+                        a2a_links=a2a,
+                    )
+                )
+    return out
+
+
 class _SplitMix:
     """Tiny deterministic PRNG so synthetic scenarios never drift."""
 

@@ -28,6 +28,13 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import (
+    axis_size,
+    remote_device_id,
+    tpu_compiler_params,
+    tpu_interpret,
+)
+
 
 def _exchange_kernel(
     group: int,
@@ -55,13 +62,14 @@ def _exchange_kernel(
     copies = []
     for i in range(1, group):
         peer = lax.rem(me + i, group)
+        device_id, id_type = remote_device_id(peer)
         rc = pltpu.make_async_remote_copy(
             src_ref=chunk_ref,
             dst_ref=out_ref.at[me],
             send_sem=send_sems.at[i - 1],
             recv_sem=recv_sems.at[i - 1],
-            device_id=(peer,),
-            device_id_type=pltpu.DeviceIdType.MESH,
+            device_id=device_id,
+            device_id_type=id_type,
         )
         rc.start()
         copies.append(rc)
@@ -98,8 +106,8 @@ def a2a_chunk_exchange(
             pltpu.SemaphoreType.DMA((group - 1,)),
             pltpu.SemaphoreType.DMA((group,)),
         ],
-        interpret=pltpu.InterpretParams() if interpret else False,
-        compiler_params=pltpu.CompilerParams(
+        interpret=tpu_interpret(interpret),
+        compiler_params=tpu_compiler_params(
             collective_id=0, has_side_effects=True
         ),
     )(chunk)
@@ -119,7 +127,7 @@ def ficco_uniform_fused_1d_dma(
     untouched, exactly the paper's realization strategy (§VI-A).  XLA's
     scheduler overlaps step s+1's kernel DMAs with step s's matmul.
     """
-    g = lax.axis_size(axis_name)
+    g = axis_size(axis_name)
     m_s, k = x.shape
     n_local = w.shape[1]
     m_c = m_s // g

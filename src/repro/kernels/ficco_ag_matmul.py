@@ -32,6 +32,14 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import (
+    axis_size,
+    remote_device_id,
+    remote_semaphore_signal,
+    tpu_compiler_params,
+    tpu_interpret,
+)
+
 
 def _fused_kernel(
     group: int,
@@ -44,10 +52,10 @@ def _fused_kernel(
     o_ref,  # (g, g, m_c, n_local): [step, src] output blocks, ANY/HBM
     step_bufs,  # VMEM (2, g, m_c, K): double-buffered gathered steps
     w_vmem,  # VMEM (K, n_local)
-    out_vmem,  # VMEM (g, m_c, n_local)
+    out_vmem,  # VMEM (2, g, m_c, n_local): double-buffered egress staging
     send_sems,  # DMA (2, g-1)
     recv_sems,  # DMA (2, g)
-    out_sem,  # DMA
+    out_sems,  # DMA (2,): per-slot output egress
     ready_sems,  # REGULAR (2,): receiver->sender slot flow control
 ):
     me = lax.axis_index(axis_name)
@@ -76,13 +84,14 @@ def _fused_kernel(
         descs = [local]
         for i in range(1, group):
             peer = lax.rem(me + i, group)
+            device_id, id_type = remote_device_id(peer)
             rc = pltpu.make_async_remote_copy(
                 src_ref=x_ref.at[s],
                 dst_ref=step_bufs.at[slot, me],
                 send_sem=send_sems.at[slot, i - 1],
                 recv_sem=recv_sems.at[slot, i - 1],
-                device_id=(peer,),
-                device_id_type=pltpu.DeviceIdType.MESH,
+                device_id=device_id,
+                device_id_type=id_type,
             )
             rc.start()
             descs.append(rc)
@@ -99,15 +108,16 @@ def _fused_kernel(
         """Tell every peer our copy of this slot is consumed."""
         for i in range(1, group):
             peer = lax.rem(me + i, group)
-            pltpu.semaphore_signal(
-                ready_sems.at[slot],
-                1,
-                device_id=peer,
-                device_id_type=pltpu.DeviceIdType.MESH,
-            )
+            remote_semaphore_signal(ready_sems.at[slot], 1, peer)
 
     w_copy.wait()
     inflight = start_step(0, 0)
+    # Output egress is double-buffered like the ingress: step s's (g, m_c,
+    # n_local) block drains to HBM while step s+1's exchange and matmul
+    # proceed.  A slot is only rewritten after its previous drain (step
+    # s-2) completed — without that wait a fast MXU could clobber bytes the
+    # DMA engine is still reading.
+    out_copies: list = [None, None]
     for s in range(group):
         slot = s % 2
         wait_step(inflight)
@@ -122,12 +132,19 @@ def _fused_kernel(
         step_out = jnp.dot(
             gathered, w_vmem[...], preferred_element_type=jnp.float32
         )
-        out_vmem[...] = step_out.reshape(group, m_c, n_local).astype(
+        if out_copies[slot] is not None:
+            out_copies[slot].wait()
+        out_vmem[slot] = step_out.reshape(group, m_c, n_local).astype(
             out_vmem.dtype
         )
-        out_copy = pltpu.make_async_copy(out_vmem, o_ref.at[s], out_sem)
+        out_copy = pltpu.make_async_copy(
+            out_vmem.at[slot], o_ref.at[s], out_sems.at[slot]
+        )
         out_copy.start()
-        out_copy.wait()
+        out_copies[slot] = out_copy
+    for out_copy in out_copies:
+        if out_copy is not None:
+            out_copy.wait()
 
 
 def ficco_ag_matmul_fused(
@@ -140,11 +157,12 @@ def ficco_ag_matmul_fused(
     """Fused uniform-fused-1D: returns (M, n_local) like the reference.
 
     Call inside shard_map over ``axis_name``.  VMEM budget: the step buffer
-    pair (2 * m_s * K), the weight panel (K * n_local) and the per-step
-    output (m_s * n_local) must fit VMEM — production shapes tile K/N
-    further; sizes used in tests and smoke configs fit comfortably.
+    pair (2 * m_s * K), the weight panel (K * n_local) and the
+    double-buffered per-step output (2 * m_s * n_local) must fit VMEM —
+    production shapes tile K/N further; sizes used in tests and smoke
+    configs fit comfortably.
     """
-    g = lax.axis_size(axis_name)
+    g = axis_size(axis_name)
     m_s, k = x.shape
     n_local = w.shape[1]
     m_c = m_s // g
@@ -161,14 +179,14 @@ def ficco_ag_matmul_fused(
         scratch_shapes=[
             pltpu.VMEM((2, g, m_c, k), x.dtype),
             pltpu.VMEM((k, n_local), w.dtype),
-            pltpu.VMEM((g, m_c, n_local), x.dtype),
+            pltpu.VMEM((2, g, m_c, n_local), x.dtype),
             pltpu.SemaphoreType.DMA((2, g - 1)),
             pltpu.SemaphoreType.DMA((2, g)),
-            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA((2,)),
             pltpu.SemaphoreType.REGULAR((2,)),
         ],
-        interpret=pltpu.InterpretParams() if interpret else False,
-        compiler_params=pltpu.CompilerParams(
+        interpret=tpu_interpret(interpret),
+        compiler_params=tpu_compiler_params(
             collective_id=1, has_side_effects=True
         ),
     )(chunks, w)

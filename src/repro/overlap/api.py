@@ -15,8 +15,8 @@ from __future__ import annotations
 from typing import Union
 
 import jax
-from jax import lax
 
+from repro.compat import axis_size
 from repro.core.heuristics import select_schedule
 from repro.core.machine import TPU_V5E, MachineSpec
 from repro.core.schedule_types import Schedule
@@ -76,7 +76,7 @@ def ficco_linear(
     Returns:
       (M, N/g): the full gathered-M rows times this device's weight columns.
     """
-    g = lax.axis_size(axis_name)
+    g = axis_size(axis_name)
     m_s, k = x.shape
     n_local = w.shape[1]
     sched = resolve_schedule(

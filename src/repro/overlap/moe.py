@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.compat import axis_size
+
 
 def _ffn(x: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
     """One expert's FFN applied batched over local experts.
@@ -45,7 +47,7 @@ def serial_a2a_ffn(
     x: (E, C, D) tokens grouped by destination expert (E global experts,
     E = g * E_local).  Returns (E, C, D) tokens back in source layout.
     """
-    g = lax.axis_size(axis_name)
+    g = axis_size(axis_name)
     e, c, d = x.shape
     e_local = e // g
     # dispatch: split expert dim over devices, concat source dim.
@@ -70,7 +72,7 @@ def ficco_a2a_ffn(
     """FiCCO: capacity dimension cut into chunks; each chunk's dispatch
     A2A overlaps the previous chunk's expert GEMM (XLA async collectives
     on the ICI DMA engines do the hiding)."""
-    g = lax.axis_size(axis_name)
+    g = axis_size(axis_name)
     n_chunks = chunks or g
     e, c, d = x.shape
     if c % n_chunks:

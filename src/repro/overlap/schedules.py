@@ -41,11 +41,12 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.compat import axis_size
 from repro.core.schedule_types import Schedule
 
 
 def _axis_size(axis_name: str) -> int:
-    return lax.axis_size(axis_name)
+    return axis_size(axis_name)
 
 
 def _my_index(axis_name: str):

@@ -24,7 +24,7 @@ def _active_mesh():
     try:
         mesh = jax.sharding.get_abstract_mesh()
     except Exception:
-        return None
+        mesh = None  # old JAX: no abstract-mesh API; try the physical mesh
     if mesh is None or not mesh.shape:
         # fall back to the concrete mesh context if one is entered
         try:

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import OverlapConfig
 from repro.core.machine import TPU_V5E
 from repro.core.schedule_types import Schedule
@@ -87,7 +88,7 @@ def tp_ficco_linear(
 
     batch_axes = tuple(a for a in BATCH_AXES if a in mesh.shape)
     bspec = batch_axes if batch_axes else None
-    return jax.shard_map(
+    return shard_map(
         body,
         mesh=mesh,
         in_specs=(P(bspec, MODEL_AXIS, None), P(None, MODEL_AXIS)),

@@ -3,5 +3,10 @@ import pytest
 
 def pytest_configure(config):
     config.addinivalue_line(
-        "markers", "slow: multi-device subprocess tests"
+        "markers", "slow: long-running tests (subprocess drivers, sweeps)"
+    )
+    config.addinivalue_line(
+        "markers",
+        "multidev: multi-device subprocess tests (8 simulated devices); "
+        "deselect with -m 'not multidev' for the fast tier-1 subset",
     )

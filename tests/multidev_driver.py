@@ -22,6 +22,7 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
+from repro.compat import set_mesh, shard_map  # noqa: E402
 from repro.core.schedule_types import Schedule  # noqa: E402
 from repro.overlap import (  # noqa: E402
     ficco_a2a_ffn,
@@ -58,7 +59,7 @@ def tol(dtype):
 
 def run_sharded(fn, mesh, x, w):
     wrapped = jax.jit(
-        jax.shard_map(
+        shard_map(
             fn,
             mesh=mesh,
             in_specs=(P(AXIS, None), P(None, AXIS)),
@@ -141,7 +142,7 @@ def moe_dispatch_equivalence():
 
     def run(fn):
         wrapped = jax.jit(
-            jax.shard_map(
+            shard_map(
                 fn,
                 mesh=mesh,
                 in_specs=(P(AXIS, None, None), P(AXIS, None, None),
@@ -171,7 +172,7 @@ def hlo_uses_async_collectives():
         run_schedule, Schedule.UNIFORM_FUSED_1D, axis_name=AXIS
     )
     wrapped = jax.jit(
-        jax.shard_map(
+        shard_map(
             fn,
             mesh=mesh,
             in_specs=(P(AXIS, None), P(None, AXIS)),
@@ -210,7 +211,7 @@ def ficco_in_model_matches_gspmd():
         logits, _ = model.forward(params, {"tokens": toks})
         return logits
 
-    with jax.sharding.set_mesh(mesh):
+    with set_mesh(mesh):
         base = np.asarray(jax.jit(fwd)(params, toks), np.float32)
         ov = OverlapConfig(mode="ficco_auto")
 
@@ -247,7 +248,7 @@ def shard_map_decode_attn_matches_reference():
     v_c = jnp.asarray(rng.standard_normal((b, s, kv, d)), jnp.float32)
     pos = jnp.int32(2500)
 
-    with jax.sharding.set_mesh(mesh):
+    with set_mesh(mesh):
         out, k2, v2 = jax.jit(decode_attn.shard_map_attn_decode)(
             q, k_new, v_new, k_c, v_c, pos
         )
@@ -289,7 +290,7 @@ def pallas_dma_backend_in_model():
         logits, _ = model.forward(params, {"tokens": toks})
         return logits
 
-    with jax.sharding.set_mesh(mesh):
+    with set_mesh(mesh):
         base = np.asarray(jax.jit(fwd)(params, toks), np.float32)
         ov = OverlapConfig(mode="uniform-fused-1d", backend="pallas_dma")
 

@@ -20,6 +20,7 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
+from repro.compat import shard_map  # noqa: E402
 from repro.kernels import ref  # noqa: E402
 from repro.kernels.dma_exchange import (  # noqa: E402
     a2a_chunk_exchange,
@@ -60,7 +61,7 @@ def exchange_matches_all_gather():
             return got, want
 
         got, want = jax.jit(
-            jax.shard_map(
+            shard_map(
                 body, mesh=m,
                 in_specs=P(AXIS, None),
                 out_specs=(P(AXIS, None, None), P(AXIS, None, None)),
@@ -85,7 +86,7 @@ def dma_schedule_matches_serial():
         return got, want
 
     got, want = jax.jit(
-        jax.shard_map(
+        shard_map(
             body, mesh=m,
             in_specs=(P(AXIS, None), P(None, AXIS)),
             out_specs=(P(None, AXIS), P(None, AXIS)),
@@ -115,7 +116,7 @@ def fused_kernel_matches_serial():
             return got, want
 
         got, want = jax.jit(
-            jax.shard_map(
+            shard_map(
                 body, mesh=m,
                 in_specs=(P(AXIS, None), P(None, AXIS)),
                 out_specs=(P(None, AXIS), P(None, AXIS)),

@@ -1,0 +1,235 @@
+"""Batched engine == scalar simulator, across a randomized grid slice.
+
+Property-style equivalence (no hypothesis dependency: seeded random
+sampling): for a random slice of the scenario grid x machine grid —
+covering all schedules, both topologies, group sizes 8/16 and dma on/off
+— every batched per-schedule total/busy/exposed figure must match the
+scalar ``simulate()`` within 1e-6 relative tolerance (they are in fact
+bit-identical by construction: the batched pipeline replays the scalar
+accumulation order), ``best_schedule`` picks must agree, and the
+validity mask must exactly mirror where the scalar model raises.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    GRID_SCHEDULES,
+    MI300X,
+    TABLE_I,
+    TPU_V5E,
+    ScenarioBatch,
+    best_schedule,
+    evaluate_grid,
+    machine_grid,
+    scenario_grid,
+    simulate,
+)
+
+RTOL = 1e-6
+
+_FIELDS = {
+    "total": "total",
+    "comm_busy": "comm_busy",
+    "compute_busy": "compute_busy",
+    "exposed": "exposed_comm",
+}
+
+
+def _grid_slice(seed: int, count: int):
+    scenarios = scenario_grid()
+    rng = np.random.default_rng(seed)
+    idx = rng.choice(len(scenarios), size=count, replace=False)
+    return [scenarios[i] for i in idx]
+
+
+def _assert_matches_scalar(scenarios, machines, *, dma, dma_into_place=False):
+    sb = ScenarioBatch.from_scenarios(scenarios)
+    grid = evaluate_grid(
+        sb, machines, dma=dma, dma_into_place=dma_into_place
+    )
+    for j, machine in enumerate(machines):
+        for i, sc in enumerate(scenarios):
+            for l, sched in enumerate(GRID_SCHEDULES):
+                try:
+                    want = simulate(
+                        sc.gemm, machine, sched,
+                        dma=dma, dma_into_place=dma_into_place,
+                    )
+                except ValueError:
+                    assert not grid.valid[l, i, j], (
+                        f"scalar raised but grid valid: {sched} {sc.name} "
+                        f"{machine.name}"
+                    )
+                    assert np.isnan(grid.total[l, i, j])
+                    continue
+                assert grid.valid[l, i, j], (sched, sc.name, machine.name)
+                for fname, attr in _FIELDS.items():
+                    got = getattr(grid, fname)[l, i, j]
+                    ref = getattr(want, attr)
+                    assert got == pytest.approx(ref, rel=RTOL, abs=1e-15), (
+                        fname, sched, sc.name, machine.name,
+                    )
+                assert int(grid.steps[l, j]) == want.steps
+                assert grid.serial_comm[i, j] == pytest.approx(
+                    want.serial_comm, rel=RTOL
+                )
+                assert grid.serial_gemm[i, j] == pytest.approx(
+                    want.serial_gemm, rel=RTOL
+                )
+
+
+class TestBatchedEquivalence:
+    def test_table_i_both_machines_dma_on_off(self):
+        for dma in (True, False):
+            _assert_matches_scalar(
+                list(TABLE_I), (MI300X, TPU_V5E), dma=dma
+            )
+
+    def test_dma_into_place_matches(self):
+        _assert_matches_scalar(
+            list(TABLE_I)[:8], (MI300X, TPU_V5E), dma=True,
+            dma_into_place=True,
+        )
+
+    def test_random_grid_slice_all_topologies(self):
+        """Random scenario-grid slice x the full machine grid (both
+        topologies, groups 8 and 16)."""
+        scenarios = _grid_slice(seed=1234, count=24)
+        machines = machine_grid()
+        topos = {m.topology for m in machines}
+        assert len(topos) == 2
+        _assert_matches_scalar(scenarios, machines, dma=True)
+
+    def test_random_grid_slice_rccl(self):
+        scenarios = _grid_slice(seed=99, count=12)
+        _assert_matches_scalar(
+            scenarios, machine_grid()[:4], dma=False
+        )
+
+    def test_best_schedule_picks_agree(self):
+        """Batched argmin == scalar ``best_schedule`` (same tie order)."""
+        scenarios = [*TABLE_I, *_grid_slice(seed=7, count=24)]
+        for machine in (MI300X, TPU_V5E):
+            sb = ScenarioBatch.from_scenarios(scenarios)
+            grid = evaluate_grid(sb, (machine,))
+            best = grid.best_idx()[:, 0]
+            for i, sc in enumerate(scenarios):
+                opt, _ = best_schedule(sc.gemm, machine)
+                assert GRID_SCHEDULES[int(best[i])] is opt, (
+                    sc.name, machine.name,
+                )
+
+
+class TestGridResultApi:
+    def test_sim_result_roundtrip(self):
+        sb = ScenarioBatch.from_scenarios(TABLE_I)
+        grid = evaluate_grid(sb, (MI300X,))
+        for sched in GRID_SCHEDULES:
+            r = grid.sim_result(sched, 0, 0)
+            want = simulate(TABLE_I[0].gemm, MI300X, sched)
+            assert r.total == pytest.approx(want.total, rel=RTOL)
+            assert r.schedule is sched
+            assert r.speedup == pytest.approx(want.speedup, rel=RTOL)
+
+    def test_invalid_decomposition_masked(self):
+        """m not divisible by the group -> FiCCO/P2P rows invalid, SERIAL
+        fine (the scalar model raises for the same cases)."""
+        from repro.core import GemmShape, Schedule
+
+        sb = ScenarioBatch.from_gemms([GemmShape(1001, 4096, 4096)])
+        grid = evaluate_grid(sb, (MI300X,))
+        l_serial = grid.schedule_idx(Schedule.SERIAL)
+        l_p2p = grid.schedule_idx(Schedule.SHARD_P2P)
+        assert grid.valid[l_serial, 0, 0]
+        assert not grid.valid[l_p2p, 0, 0]
+        with pytest.raises(ValueError):
+            simulate(GemmShape(1001, 4096, 4096), MI300X, Schedule.SHARD_P2P)
+
+    def test_degenerate_hetero_chunks_masked(self):
+        """m in [group, group^2): hetero schedules have a zero-row step
+        GEMM — scalar raises ValueError, grid masks those rows invalid,
+        the other schedules still agree."""
+        from repro.core import GemmShape
+
+        gemm = GemmShape(32, 4096, 4096)  # MI300X group=8: m_s=4, m_sg=0
+        sc = type("S", (), {"gemm": gemm, "name": "degenerate"})
+        _assert_matches_scalar([sc], (MI300X,), dma=True)
+
+    def test_speedup_and_best_total_consistent(self):
+        sb = ScenarioBatch.from_scenarios(TABLE_I)
+        grid = evaluate_grid(sb, (MI300X, TPU_V5E))
+        best = grid.best_total()
+        assert (best <= np.nanmin(grid.total, axis=0) + 1e-15).all()
+        assert np.isfinite(grid.speedup[grid.valid]).all()
+
+
+class TestBatchedHeuristics:
+    def test_select_schedule_batch_matches_scalar(self):
+        from repro.core import select_schedule, select_schedule_batch
+
+        scenarios = [*TABLE_I, *_grid_slice(seed=5, count=32)]
+        sb = ScenarioBatch.from_scenarios(scenarios)
+        for machine in (MI300X, TPU_V5E):
+            picks = select_schedule_batch(
+                sb.m, sb.n, sb.k, sb.dtype_bytes, machine
+            )
+            for i, sc in enumerate(scenarios):
+                dec = select_schedule(sc.gemm, machine)
+                assert GRID_SCHEDULES[int(picks[i])] is dec.schedule, sc.name
+
+    def test_calibrate_tau_batched_matches_scalar_reference(self):
+        """The batched calibrate_tau reproduces the scalar algorithm."""
+        from repro.core import calibrate_tau, select_schedule
+        from repro.core.heuristics import _TAU_OVERRIDES
+
+        machine = MI300X
+        candidates = (0.02, 0.05, 0.1, 0.2, 0.5, 1.0)
+        scenarios = list(TABLE_I)
+        # scalar reference (the pre-batching implementation)
+        best_tau, best_acc = candidates[0], -1.0
+        for tau in candidates:
+            hits = 0
+            for sc in scenarios:
+                dec = select_schedule(sc.gemm, machine, tau=tau)
+                opt, _ = best_schedule(sc.gemm, machine)
+                hits += dec.schedule is opt
+            acc = hits / len(scenarios)
+            if acc > best_acc:
+                best_tau, best_acc = tau, acc
+        saved = _TAU_OVERRIDES.pop(machine.name, None)
+        try:
+            got = calibrate_tau(machine, scenarios, candidates=candidates)
+        finally:
+            if saved is None:
+                _TAU_OVERRIDES.pop(machine.name, None)
+            else:
+                _TAU_OVERRIDES[machine.name] = saved
+        assert got == best_tau
+
+
+class TestExploreGrid:
+    def test_matches_scalar_explore(self):
+        from repro.core import explore, explore_grid
+
+        scenarios = list(TABLE_I)
+        ex = explore_grid(scenarios, machines=(MI300X,))
+        for i, sc in enumerate(scenarios):
+            ref = explore(sc, MI300X)
+            assert GRID_SCHEDULES[int(ex.best_idx[i, 0])] is ref.best
+            assert (
+                GRID_SCHEDULES[int(ex.heuristic_idx[i, 0])]
+                is ref.heuristic.schedule
+            )
+            assert bool(ex.exact[i, 0]) == ref.heuristic_correct
+            if not ref.heuristic_correct:
+                assert ex.heuristic_loss()[i, 0] == pytest.approx(
+                    ref.heuristic_loss, rel=1e-9, abs=1e-12
+                )
+
+    def test_summary_smoke(self):
+        from repro.core import explore_grid
+
+        ex = explore_grid(list(TABLE_I)[:4], machines=(MI300X, TPU_V5E))
+        s = ex.summary()
+        assert "exact" in s and "within5%" in s

@@ -6,6 +6,7 @@ from tests.test_overlap_multidev import _run_driver
 
 
 @pytest.mark.slow
+@pytest.mark.multidev
 def test_dma_kernels_multidevice():
     out = _run_driver("multidev_kernels_driver.py")
     assert "ok exchange_matches_all_gather" in out

@@ -36,6 +36,7 @@ def _run_driver(name: str) -> str:
 
 
 @pytest.mark.slow
+@pytest.mark.multidev
 def test_overlap_schedules_multidevice():
     out = _run_driver("multidev_driver.py")
     assert "ok schedules_allclose" in out
