@@ -1,0 +1,106 @@
+"""repro.autotune: jitted-vs-NumPy sweep throughput + tuner hit rate.
+
+Three sections:
+
+  * **sweep**: the full scenario-grid x machine-grid design space through
+    the NumPy engine (``repro.core.batch``) and the jitted engine
+    (``repro.autotune.jaxgrid``), compile time reported separately from
+    steady-state throughput (the compile amortizes over a scheduling
+    loop's lifetime).
+  * **tuner**: cold-pass (analytic model per key) vs warm-pass
+    (persistent-cache hit per key) lookup cost over the Table-I + 48
+    synthetic distinct GEMM keys, plus the hit rate.
+  * **calibrate**: gradient TAU calibration (a few Adam steps on the
+    soft decision tree) vs the discrete candidate search it replaces.
+"""
+
+import tempfile
+import time
+
+from repro.core import TABLE_I, MI300X, machine_grid, scenario_grid, \
+    synthetic_scenarios
+from repro.core.batch import ScenarioBatch, evaluate_grid as np_grid
+
+from benchmarks.common import row
+
+
+def run() -> list[str]:
+    from repro.autotune import (
+        Autotuner,
+        AutotuneCache,
+        calibrate_tau,
+        evaluate_grid_jax,
+    )
+
+    scenarios = scenario_grid()
+    machines = machine_grid()
+    sb = ScenarioBatch.from_scenarios(scenarios)
+    points = len(scenarios) * len(machines)
+
+    # -- sweep throughput ------------------------------------------------
+    np_grid(sb, machines)  # warm calibration caches for both paths
+    t0 = time.perf_counter()
+    evaluate_grid_jax(sb, machines)
+    t_compile = time.perf_counter() - t0
+
+    t_np = min(
+        _timed(lambda: np_grid(sb, machines)) for _ in range(3)
+    )
+    t_jax = min(
+        _timed(lambda: evaluate_grid_jax(sb, machines)) for _ in range(3)
+    )
+    rows = [
+        row("autotune/sweep_points", 0.0,
+            f"{len(scenarios)}x{len(machines)}={points}"),
+        row("autotune/numpy_sweep", 1e6 * t_np / points,
+            f"{points / t_np:.0f} scenarios/s"),
+        row("autotune/jax_sweep", 1e6 * t_jax / points,
+            f"{points / t_jax:.0f} scenarios/s "
+            f"(compile {t_compile:.2f}s, amortized)"),
+        row("autotune/jit_speedup", 0.0,
+            f"{t_np / t_jax:.1f}x over NumPy engine"),
+    ]
+
+    # -- tuner hit rate --------------------------------------------------
+    keys = [sc.gemm for sc in (*TABLE_I, *synthetic_scenarios(48))]
+    with tempfile.TemporaryDirectory() as d:
+        tuner = Autotuner(cache=AutotuneCache(path=f"{d}/bench.json"))
+        t0 = time.perf_counter()
+        for g in keys:
+            tuner.pick(g, MI300X)
+        t_cold = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        for g in keys:
+            tuner.pick(g, MI300X)
+        t_warm = time.perf_counter() - t0
+        hit_rate = tuner.hit_rate
+        # fresh tuner, same backing file: the persistence round-trip
+        tuner2 = Autotuner(cache=AutotuneCache(path=f"{d}/bench.json"))
+        for g in keys:
+            tuner2.pick(g, MI300X)
+        persisted_rate = tuner2.hit_rate
+    rows += [
+        row("autotune/tuner_cold", 1e6 * t_cold / len(keys),
+            "analytic model per distinct key"),
+        row("autotune/tuner_warm", 1e6 * t_warm / len(keys),
+            "persistent-cache hit per key"),
+        row("autotune/tuner_hit_rate", 0.0,
+            f"{100 * hit_rate:.0f}% after warmup; fresh process "
+            f"{100 * persisted_rate:.0f}% from disk"),
+    ]
+
+    # -- gradient TAU calibration ---------------------------------------
+    t0 = time.perf_counter()
+    tau = calibrate_tau(MI300X, TABLE_I)
+    t_cal = time.perf_counter() - t0
+    rows.append(
+        row("autotune/calibrate_tau_grad", 1e6 * t_cal,
+            f"tau={tau:.4f} (Adam on the soft decision tree)")
+    )
+    return rows
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0

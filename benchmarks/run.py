@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV.  Figure mapping:
   Fig 10 -> bench_proportions     §VI-D   -> bench_heuristic
   (real CPU timings)              -> bench_cpu_overlap
   batched sweep engine            -> bench_sweep
+  autotune (jit engine + tuner)   -> bench_autotune
 
 ``--json [PATH]`` additionally writes a machine-readable name ->
 us_per_call map (default ``BENCH_sweep.json``) so the perf trajectory is
@@ -21,6 +22,7 @@ import sys
 def main() -> None:
     from benchmarks import (
         bench_arch_schedules,
+        bench_autotune,
         bench_cil,
         bench_comparison,
         bench_cpu_overlap,
@@ -37,7 +39,7 @@ def main() -> None:
         bench_dil_gemm, bench_dil_comm, bench_cil, bench_proportions,
         bench_schedules, bench_shard_overlap, bench_comparison,
         bench_heuristic, bench_cpu_overlap, bench_arch_schedules,
-        bench_sweep,
+        bench_sweep, bench_autotune,
     ]
 
     ap = argparse.ArgumentParser(description=__doc__)

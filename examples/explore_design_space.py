@@ -4,33 +4,42 @@ Walks all Table-I scenarios + the 8-variant space, prints per-scenario
 rankings, the pruning argument (§V-B), and heuristic accuracy — then does
 the same on the TPU v5e machine model to show what changes on a torus.
 Finishes with the batched engine: the full registry-arch scenario grid x
-machine grid in one vectorized call.
+machine grid in one vectorized call, on the NumPy reference engine or
+the jit-compiled JAX engine (``--backend jax``).
 
-Run:  PYTHONPATH=src python examples/explore_design_space.py
+Run:  PYTHONPATH=src python examples/explore_design_space.py \
+          [--backend jax|numpy]
 """
 
+import argparse
 import time
 
 from repro.core import (
-    MI300X, TABLE_I, TPU_V5E, explore, explore_grid, geomean, machine_grid,
+    MI300X, TABLE_I, TPU_V5E, explore_grid, geomean, machine_grid,
     prune_report, scenario_grid,
 )
 
+ap = argparse.ArgumentParser(description=__doc__)
+ap.add_argument("--backend", choices=("numpy", "jax"), default="numpy",
+                help="grid engine: NumPy reference or jitted JAX")
+args = ap.parse_args()
+
 for machine in (MI300X, TPU_V5E):
     print(f"\n===== {machine.name} ({machine.topology.value}) =====")
-    hits = speedups = 0
+    ex = explore_grid(TABLE_I, machines=(machine,), backend=args.backend)
     best_vals = []
-    for sc in TABLE_I:
-        ex = explore(sc, machine)
-        best = ex.results[ex.best]
-        best_vals.append(best.speedup)
-        ok = "OK " if ex.heuristic_correct else (
-            "~ok" if ex.results[ex.heuristic.schedule].total
-            <= 1.05 * best.total else "MISS"
+    for i, sc in enumerate(TABLE_I):
+        best_l = int(ex.best_idx[i, 0])
+        heur_l = int(ex.heuristic_idx[i, 0])
+        best = ex.grid.schedules[best_l]
+        heur = ex.grid.schedules[heur_l]
+        speedup = float(ex.grid.speedup[best_l, i, 0])
+        best_vals.append(speedup)
+        ok = "OK " if bool(ex.exact[i, 0]) else (
+            "~ok" if bool(ex.within(0.05)[i, 0]) else "MISS"
         )
-        print(f"{sc.name:4s} best={ex.best.value:18s} "
-              f"{best.speedup:4.2f}x heur={ex.heuristic.schedule.value:18s} "
-              f"{ok}")
+        print(f"{sc.name:4s} best={best.value:18s} "
+              f"{speedup:4.2f}x heur={heur.value:18s} {ok}")
     print(f"geomean best speedup: {geomean(best_vals):.3f}")
 
 print("\n===== pruning argument (g2, all 8 variants) =====")
@@ -41,9 +50,11 @@ for name, t, studied in prune_report(TABLE_I[1], MI300X):
 # ===== batched engine: the whole design space in three lines ==========
 scenarios = scenario_grid()
 machines = machine_grid()
+if args.backend == "jax":  # compile once outside the timed region
+    explore_grid(scenarios, machines=machines, backend="jax")
 t0 = time.perf_counter()
-ex = explore_grid(scenarios, machines=machines)
+ex = explore_grid(scenarios, machines=machines, backend=args.backend)
 dt = time.perf_counter() - t0
-print(f"\n===== batched grid: {len(scenarios)} scenarios x "
-      f"{len(machines)} machines in {dt*1e3:.0f} ms =====")
+print(f"\n===== batched grid ({args.backend}): {len(scenarios)} scenarios "
+      f"x {len(machines)} machines in {dt*1e3:.0f} ms =====")
 print(ex.summary())

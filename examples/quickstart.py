@@ -2,12 +2,15 @@
 
 1. Pick a data-dependent AG->GEMM scenario (Table I),
 2. let the FiCCO heuristic choose a bespoke overlap schedule,
-3. compare the full design space with the simulator,
+3. compare the full design space with the batched simulator — on the
+   NumPy engine or the jit-compiled JAX engine (``--backend jax``),
 4. run the numerically-exact schedule on this host's devices.
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+Run:  PYTHONPATH=src python examples/quickstart.py [--backend jax|numpy]
+      [--machine mi300x-8|tpu-v5e-axis16] [--schedule auto|autotune]
 """
 
+import argparse
 import os
 
 os.environ.setdefault(
@@ -22,22 +25,38 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core import MI300X, SCENARIOS, explore, select_schedule
+from repro.core import MACHINES, SCENARIOS, explore_grid, select_schedule
 from repro.overlap import ficco_linear
+
+ap = argparse.ArgumentParser(description=__doc__)
+ap.add_argument("--backend", choices=("numpy", "jax"), default="numpy",
+                help="grid engine: NumPy reference or jitted JAX")
+ap.add_argument("--machine", choices=sorted(MACHINES), default="mi300x-8")
+ap.add_argument("--schedule", choices=("auto", "autotune"), default="auto",
+                help="auto: static heuristic; autotune: cached runtime tuner")
+args = ap.parse_args()
+machine = MACHINES[args.machine]
 
 scenario = SCENARIOS["g9"]  # llama-3-405b QKV projection under SP+TP
 print(f"scenario {scenario.name}: GEMM {scenario.gemm} "
       f"({scenario.parallelism}, {scenario.model})")
 
-# --- 1+2: static heuristic pick (paper Fig. 12a) -----------------------
-dec = select_schedule(scenario.gemm, MI300X)
+# --- 1+2: static heuristic pick (paper Fig. 12a + learned serial gate) --
+dec = select_schedule(scenario.gemm, machine)
 print(f"heuristic -> {dec.schedule.value}   ({dec.reason})")
 
-# --- 3: full design-space exploration ----------------------------------
-ex = explore(scenario, MI300X)
-for sched, res in sorted(ex.results.items(), key=lambda kv: kv[1].total):
+# --- 3: full design-space exploration on the chosen backend ------------
+ex = explore_grid([scenario], machines=[machine], backend=args.backend)
+grid = ex.grid
+order = np.argsort(np.where(grid.valid[:, 0, 0], grid.total[:, 0, 0],
+                            np.inf))
+print(f"ranking on {machine.name} via the {args.backend} engine:")
+for l in order:
+    if not grid.valid[l, 0, 0]:
+        continue
+    sched = grid.schedules[int(l)]
     mark = " <- heuristic" if sched is dec.schedule else ""
-    print(f"  {sched.value:20s} speedup {res.speedup:5.2f}x{mark}")
+    print(f"  {sched.value:20s} speedup {grid.speedup[l, 0, 0]:5.2f}x{mark}")
 
 # --- 4: execute the schedule exactly (8 simulated devices) -------------
 mesh = jax.make_mesh((8,), ("tp",))
@@ -47,7 +66,10 @@ w = jnp.asarray(rng.standard_normal((256, 256)), jnp.float32)  # N-sharded
 
 fn = jax.jit(
     shard_map(
-        functools.partial(ficco_linear, axis_name="tp", schedule="auto"),
+        functools.partial(
+            ficco_linear, axis_name="tp", schedule=args.schedule,
+            machine=machine,
+        ),
         mesh=mesh,
         in_specs=(P("tp", None), P(None, "tp")),
         out_specs=P(None, "tp"),
@@ -58,4 +80,5 @@ out = fn(x, w)
 np.testing.assert_allclose(
     np.asarray(out), np.asarray(x @ w), rtol=1e-3, atol=1e-3
 )
-print(f"ficco_linear(auto) == serial oracle: OK  (out {out.shape})")
+print(f"ficco_linear({args.schedule}) == serial oracle: OK  "
+      f"(out {out.shape})")

@@ -1,0 +1,63 @@
+"""Wipe the persistent repro.autotune decision cache.
+
+Usage:
+  PYTHONPATH=src python scripts/clear_autotune_cache.py [--dir PATH] [-n]
+
+By default clears ``$REPRO_AUTOTUNE_CACHE_DIR`` (or
+``~/.cache/repro_autotune``).  ``-n`` / ``--dry-run`` only reports what
+would be removed.  Only ``autotune-v*.json`` files are touched — the
+directory itself and anything else in it is left alone.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--dir", default=None,
+        help="cache directory (default: $REPRO_AUTOTUNE_CACHE_DIR or "
+        "~/.cache/repro_autotune)",
+    )
+    ap.add_argument(
+        "-n", "--dry-run", action="store_true",
+        help="report what would be removed without removing it",
+    )
+    args = ap.parse_args()
+
+    if args.dir is not None:
+        cache_dir = args.dir
+    else:
+        # Resolve like repro.autotune.cache, without importing jax.
+        cache_dir = os.environ.get("REPRO_AUTOTUNE_CACHE_DIR") or (
+            os.path.join(os.path.expanduser("~"), ".cache",
+                         "repro_autotune")
+        )
+
+    pattern = os.path.join(cache_dir, "autotune-v*.json")
+    files = sorted(glob.glob(pattern))
+    if not files:
+        print(f"nothing to clear: no cache files match {pattern}")
+        return
+    for path in files:
+        entries = "?"
+        try:
+            with open(path) as f:
+                raw = json.load(f)
+            entries = len(raw.get("entries", {}))
+        except (OSError, ValueError):
+            pass
+        if args.dry_run:
+            print(f"would remove {path} ({entries} entries)")
+        else:
+            os.unlink(path)
+            print(f"removed {path} ({entries} entries)")
+
+
+if __name__ == "__main__":
+    main()

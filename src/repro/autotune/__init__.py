@@ -1,0 +1,93 @@
+"""repro.autotune — on-accelerator cost model + runtime schedule autotuner.
+
+Three layers (see ROADMAP "jax.jit backend" follow-on, now done):
+
+  * :mod:`repro.autotune.jaxgrid` — the batched FiCCO grid engine ported
+    to ``jax.numpy``: jit-compiled, vmapped over machines, numerically
+    equivalent to ``repro.core.batch`` and differentiable through TAU
+    and every machine parameter (``calibrate_tau`` = a few Adam steps).
+  * :mod:`repro.autotune.tuner` — tiered runtime selection: persistent
+    cache hit -> analytic model -> optional measured shortlist.
+  * :mod:`repro.autotune.cache` — versioned on-disk JSON store
+    (``$REPRO_AUTOTUNE_CACHE_DIR``, default ``~/.cache/repro_autotune``).
+
+The three-line on-accelerator sweep::
+
+    from repro.autotune import evaluate_grid
+    grid = evaluate_grid(scenarios, machines, backend="jax")
+    print(grid.best_idx())
+
+and the runtime entry point is ``ficco_linear(schedule="autotune")``
+(see ``repro.overlap.api``), with ``select_schedule`` as the zero-cost
+static fallback.
+"""
+
+from repro.autotune.cache import (
+    SCHEMA_VERSION,
+    AutotuneCache,
+    default_cache_dir,
+    default_cache_path,
+)
+from repro.autotune.jaxgrid import (
+    MachineArrays,
+    calibrate_tau,
+    calibrate_tau_reference,
+    evaluate_grid_raw,
+    expected_heuristic_time,
+    machine_arrays,
+    scenario_arrays,
+    shortlist,
+    soft_pick_weights,
+)
+from repro.autotune.jaxgrid import evaluate_grid as evaluate_grid_jax
+from repro.autotune.tuner import (
+    Autotuner,
+    TuneDecision,
+    TuneKey,
+    autotune_schedule,
+    get_tuner,
+    machine_for_group,
+    reset_tuner,
+    set_tuner,
+)
+
+
+def evaluate_grid(scenarios, machines, *, backend: str = "jax", **kw):
+    """Backend-switched grid evaluation: ``"jax"`` (jitted) or ``"numpy"``
+    (the reference engine in ``repro.core.batch``).  Identical
+    :class:`~repro.core.batch.GridResult` either way.
+    """
+    if backend == "jax":
+        return evaluate_grid_jax(scenarios, machines, **kw)
+    if backend == "numpy":
+        from repro.core.batch import evaluate_grid as _np_grid
+
+        return _np_grid(scenarios, machines, **kw)
+    raise ValueError(f"backend must be 'jax'|'numpy', got {backend!r}")
+
+
+__all__ = [
+    "SCHEMA_VERSION",
+    "AutotuneCache",
+    "default_cache_dir",
+    "default_cache_path",
+    "MachineArrays",
+    "machine_arrays",
+    "scenario_arrays",
+    "evaluate_grid",
+    "evaluate_grid_jax",
+    "evaluate_grid_raw",
+    "expected_heuristic_time",
+    "soft_pick_weights",
+    "calibrate_tau",
+    "calibrate_tau_reference",
+    "shortlist",
+    "Autotuner",
+    "TuneDecision",
+    "TuneKey",
+    "autotune_schedule",
+    "get_tuner",
+    "set_tuner",
+    "reset_tuner",
+    "machine_for_group",
+]

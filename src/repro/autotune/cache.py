@@ -1,0 +1,180 @@
+"""Persistent on-disk cache for tuned schedule decisions.
+
+One JSON file per (schema version, jax version): tuned decisions survive
+processes, so the first process pays the analytic-model (or measured)
+tuning cost and every later launcher/server starts with the winner.
+
+Layout (human-readable on purpose — this is an operational artifact)::
+
+    {
+      "schema": 1,
+      "jax": "0.4.37",
+      "entries": {
+        "tpu-v5e-axis16/g16/m65536/n4096/k8192/b2": {
+          "schedule": "hetero_unfused_1d",
+          "source": "analytic",          # analytic | measured
+          "model_total_s": 0.00123,      # analytic model's time for it
+          "measured_total_s": null,      # wall time when source=measured
+        },
+        ...
+      }
+    }
+
+Location: ``$REPRO_AUTOTUNE_CACHE_DIR`` if set, else
+``~/.cache/repro_autotune``.  The test suite sets the env var to a
+tmp dir (see ``tests/conftest.py``) so tier-1 runs never touch — or get
+polluted by — the user's home cache.  ``scripts/clear_autotune_cache.py``
+wipes it.
+
+Writes are atomic (tempfile + ``os.replace``) and loads are tolerant: a
+corrupt or version-mismatched file is treated as empty, never an error —
+the cache is an accelerator, not a source of truth.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+from typing import Any
+
+SCHEMA_VERSION = 1
+_ENV_VAR = "REPRO_AUTOTUNE_CACHE_DIR"
+
+
+def _jax_version() -> str:
+    try:
+        import jax
+
+        return jax.__version__
+    except Exception:  # pragma: no cover - jax is a hard dep in practice
+        return "unknown"
+
+
+def default_cache_dir() -> str:
+    """$REPRO_AUTOTUNE_CACHE_DIR, else ~/.cache/repro_autotune."""
+    env = os.environ.get(_ENV_VAR)
+    if env:
+        return env
+    return os.path.join(
+        os.path.expanduser("~"), ".cache", "repro_autotune"
+    )
+
+
+def default_cache_path() -> str:
+    return os.path.join(
+        default_cache_dir(), f"autotune-v{SCHEMA_VERSION}.json"
+    )
+
+
+def _read_entries(path: str) -> dict[str, Any] | None:
+    """Entries in the backing file, or None if absent/corrupt/stale."""
+    try:
+        with open(path) as f:
+            raw = json.load(f)
+    except (OSError, ValueError):
+        return None
+    if not isinstance(raw, dict):
+        return None
+    if raw.get("schema") != SCHEMA_VERSION:
+        return None
+    if raw.get("jax") != _jax_version():
+        return None  # jax upgrade invalidates tuned decisions wholesale
+    entries = raw.get("entries")
+    if not isinstance(entries, dict):
+        return None
+    return {k: v for k, v in entries.items() if isinstance(v, dict)}
+
+
+@dataclasses.dataclass
+class AutotuneCache:
+    """Versioned persistent key -> tuned-decision store.
+
+    Keys are produced by :class:`repro.autotune.tuner.TuneKey` and embed
+    the machine name + group, so one file safely holds entries for many
+    machines; the jax version stamps the whole file (a jax upgrade can
+    change what the measured path compiles to, so tuned decisions are
+    invalidated wholesale — re-tuning is cheap).
+    """
+
+    path: str | None = None
+    entries: dict[str, dict[str, Any]] = dataclasses.field(
+        default_factory=dict
+    )
+    _loaded_from_disk: bool = False
+
+    def __post_init__(self):
+        if self.path is None:
+            self.path = default_cache_path()
+        self.load()
+
+    # -- persistence ----------------------------------------------------
+
+    def load(self) -> None:
+        """Read the backing file; silently start empty on any mismatch."""
+        entries = _read_entries(self.path)
+        self.entries = entries if entries is not None else {}
+        self._loaded_from_disk = entries is not None
+
+    def save(self) -> None:
+        """Atomic write (tempfile + rename) of the whole store.
+
+        Merge-on-save: entries another process persisted since our load
+        are folded in first (ours win on key collision), so concurrent
+        processes tuning disjoint keys don't clobber each other — the
+        union survives, whoever writes last.
+        """
+        merged = {**(_read_entries(self.path) or {}), **self.entries}
+        self.entries = merged
+        d = os.path.dirname(self.path)
+        os.makedirs(d, exist_ok=True)
+        payload = {
+            "schema": SCHEMA_VERSION,
+            "jax": _jax_version(),
+            "entries": merged,
+        }
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    def clear(self) -> None:
+        self.entries = {}
+        try:
+            os.unlink(self.path)
+        except OSError:
+            pass
+
+    # -- access ---------------------------------------------------------
+
+    def get(self, key: str) -> dict[str, Any] | None:
+        return self.entries.get(key)
+
+    def put(
+        self, key: str, entry: dict[str, Any], *, persist: bool = True
+    ) -> None:
+        self.entries[key] = entry
+        if persist:
+            self.save()
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self.entries
+
+
+__all__ = [
+    "SCHEMA_VERSION",
+    "AutotuneCache",
+    "default_cache_dir",
+    "default_cache_path",
+]

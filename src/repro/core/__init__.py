@@ -20,7 +20,14 @@ and scales to thousands of scenarios (``workload.scenario_grid`` x
 (``benchmarks/bench_sweep.py`` tracks the ratio).
 """
 
-from repro.core.machine import MACHINES, MI300X, TPU_V5E, MachineSpec, Topology
+from repro.core.machine import (
+    MACHINES,
+    MI300X,
+    TPU_V5E,
+    MachineSpec,
+    Topology,
+    machine_for_group,
+)
 from repro.core.workload import (
     SCENARIOS,
     TABLE_I,
@@ -62,10 +69,14 @@ from repro.core.batch import (
 )
 from repro.core.heuristics import (
     HeuristicDecision,
+    calibrate_serial_gate,
     calibrate_tau,
+    machine_serial_gate,
     machine_threshold,
     select_schedule,
     select_schedule_batch,
+    serial_gate_score,
+    serial_gate_score_batch,
 )
 from repro.core.explorer import (
     Exploration,
@@ -77,6 +88,7 @@ from repro.core.explorer import (
 
 __all__ = [
     "MACHINES", "MI300X", "TPU_V5E", "MachineSpec", "Topology",
+    "machine_for_group",
     "SCENARIOS", "TABLE_I", "CollectiveKind", "GemmShape", "Scenario",
     "geomean", "machine_grid", "scenario_grid", "synthetic_scenarios",
     "ALL_VARIANTS", "SIGNATURES", "STUDIED", "CommShape", "FiccoVariant",
@@ -86,8 +98,10 @@ __all__ = [
     "p2p_step_time",
     "SimResult", "best_schedule", "simulate",
     "GRID_SCHEDULES", "GridResult", "ScenarioBatch", "evaluate_grid",
-    "HeuristicDecision", "calibrate_tau", "machine_threshold",
+    "HeuristicDecision", "calibrate_serial_gate", "calibrate_tau",
+    "machine_serial_gate", "machine_threshold",
     "select_schedule", "select_schedule_batch",
+    "serial_gate_score", "serial_gate_score_batch",
     "Exploration", "GridExploration", "explore", "explore_grid",
     "prune_report",
 ]

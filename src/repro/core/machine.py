@@ -130,6 +130,23 @@ TPU_V5E = MachineSpec(
 MACHINES = {m.name: m for m in (MI300X, TPU_V5E)}
 
 
+def machine_for_group(machine: MachineSpec, group: int) -> MachineSpec:
+    """Re-target a machine model at a different overlap-group size.
+
+    On a full mesh the per-device all-to-all link count tracks the group
+    (every peer is directly attached); torus link counts are physical
+    and stay put.
+    """
+    if group == machine.group:
+        return machine
+    a2a = (
+        group - 1
+        if machine.topology is Topology.FULL_MESH
+        else machine.a2a_links
+    )
+    return dataclasses.replace(machine, group=group, a2a_links=a2a)
+
+
 def get_machine(name: str) -> MachineSpec:
     try:
         return MACHINES[name]

@@ -2,12 +2,18 @@
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
-      --prompts 4 --new-tokens 16
+      --prompts 4 --new-tokens 16 [--overlap-mode ficco_autotune]
+
+``--overlap-mode ficco_autotune`` selects TP overlap schedules through
+the persistent runtime autotuner (repro.autotune) — serving processes
+restart often, so tuned decisions surviving on disk is exactly what the
+cache is for.
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -25,9 +31,19 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument(
+        "--overlap-mode", default="gspmd_serial",
+        help="gspmd_serial | serial | shard_p2p | ficco_auto | "
+        "ficco_autotune | explicit schedule value",
+    )
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
+    if args.overlap_mode != "gspmd_serial":
+        cfg = dataclasses.replace(
+            cfg,
+            overlap=dataclasses.replace(cfg.overlap, mode=args.overlap_mode),
+        )
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     enc_len = 16 if cfg.encdec else 0

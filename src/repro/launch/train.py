@@ -7,7 +7,13 @@ Two modes:
 
 Usage:
   PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
-      --steps 200 [--overlap-mode ficco_auto] [--ckpt-dir /tmp/ckpt]
+      --steps 200 [--overlap-mode ficco_auto|ficco_autotune] \
+      [--ckpt-dir /tmp/ckpt]
+
+``--overlap-mode ficco_autotune`` routes every TP linear's schedule pick
+through the persistent runtime autotuner (repro.autotune): the first
+process pays microseconds per distinct GEMM shape for the jitted analytic
+model, every later run starts from the on-disk cache.
 """
 
 from __future__ import annotations
@@ -28,7 +34,11 @@ def main():
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--lr", type=float, default=3e-3)
-    ap.add_argument("--overlap-mode", default="gspmd_serial")
+    ap.add_argument(
+        "--overlap-mode", default="gspmd_serial",
+        help="gspmd_serial | serial | shard_p2p | ficco_auto | "
+        "ficco_autotune | explicit schedule value",
+    )
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--full-size", action="store_true",

@@ -8,6 +8,10 @@ schedule, replacing the serial communication and computation."
 whose ``axis_name`` is the tensor-parallel group.  ``schedule="auto"``
 consults :func:`repro.core.heuristics.select_schedule` with the *static*
 global GEMM dimensions — no profiling — and dispatches the chosen schedule.
+``schedule="autotune"`` goes one step further: it consults the process-wide
+:class:`repro.autotune.Autotuner` (persistent cache -> jitted analytic
+model -> optional measured shortlist) and falls back to the static
+heuristic if the tuner cannot answer.
 """
 
 from __future__ import annotations
@@ -18,7 +22,7 @@ import jax
 
 from repro.compat import axis_size
 from repro.core.heuristics import select_schedule
-from repro.core.machine import TPU_V5E, MachineSpec
+from repro.core.machine import TPU_V5E, MachineSpec, machine_for_group
 from repro.core.schedule_types import Schedule
 from repro.core.workload import GemmShape
 from repro.overlap.schedules import SCHEDULE_FNS, run_schedule
@@ -34,15 +38,31 @@ def resolve_schedule(
     k: int,
     machine: MachineSpec | None = None,
     dtype_bytes: int = 2,
+    group: int | None = None,
 ) -> Schedule:
-    """Static schedule resolution (trace-time: shapes are concrete)."""
+    """Static schedule resolution (trace-time: shapes are concrete).
+
+    ``group`` is the actual overlap-axis size; the decision tree (and in
+    particular its group-sensitive serial gate) is evaluated against the
+    machine model retargeted at that group, not the model's default.
+    """
     if isinstance(schedule, Schedule):
         return schedule
+    eff = machine or TPU_V5E
+    if group:
+        eff = machine_for_group(eff, group)
+    if schedule == "autotune":
+        gemm = GemmShape(m, n, k, dtype_bytes)
+        try:
+            from repro.autotune import get_tuner  # local: keep import lazy
+
+            return get_tuner().pick(gemm, machine, group=group).schedule
+        except Exception:
+            # Zero-cost fallback: the static decision tree.
+            return select_schedule(gemm, eff).schedule
     if schedule != "auto":
         return Schedule(schedule)
-    dec = select_schedule(
-        GemmShape(m, n, k, dtype_bytes), machine or TPU_V5E
-    )
+    dec = select_schedule(GemmShape(m, n, k, dtype_bytes), eff)
     # The serial guard may also fire for shapes the schedules cannot chunk.
     return dec.schedule
 
@@ -71,7 +91,8 @@ def ficco_linear(
       x: (M/g, K) row shard of the activation (inside shard_map).
       w: (K, N/g) resident column shard of the weight.
       axis_name: mesh axis of the TP group.
-      schedule: explicit :class:`Schedule`, its string value, or "auto".
+      schedule: explicit :class:`Schedule`, its string value, "auto"
+        (static heuristic) or "autotune" (cached/analytic runtime tuner).
 
     Returns:
       (M, N/g): the full gathered-M rows times this device's weight columns.
@@ -86,6 +107,7 @@ def ficco_linear(
         k=k,
         machine=machine,
         dtype_bytes=x.dtype.itemsize,
+        group=g,
     )
     if not _divisible(m_s, k, g, sched):
         sched = Schedule.SERIAL  # shape can't be chunked one level deeper

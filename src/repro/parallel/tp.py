@@ -8,8 +8,10 @@ exactly the paper's drop-in replacement for serial collective+GEMM.
 
 Modes (config.overlap.mode):
   * "gspmd_serial" — not handled here; plain constraints, XLA collectives.
-  * "serial" / "shard_p2p" / "ficco_auto" / explicit schedule value —
-    shard_map with the corresponding schedule from repro.overlap.
+  * "serial" / "shard_p2p" / "ficco_auto" / "ficco_autotune" / explicit
+    schedule value — shard_map with the corresponding schedule from
+    repro.overlap ("ficco_autotune" consults the persistent runtime
+    tuner in repro.autotune, falling back to the static heuristic).
 Backend "pallas_dma" swaps the chunk exchange for the Pallas ICI-DMA
 kernel (repro.kernels) — the paper's DMA offload made explicit.
 """
@@ -32,6 +34,8 @@ from repro.parallel.sharding import BATCH_AXES, MODEL_AXIS, _active_mesh
 def _mode_to_schedule(mode: str):
     if mode == "ficco_auto":
         return "auto"
+    if mode == "ficco_autotune":
+        return "autotune"
     return mode  # Schedule enum value string or "serial"/"shard_p2p"
 
 

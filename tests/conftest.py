@@ -1,3 +1,5 @@
+import sys
+
 import pytest
 
 
@@ -10,3 +12,29 @@ def pytest_configure(config):
         "multidev: multi-device subprocess tests (8 simulated devices); "
         "deselect with -m 'not multidev' for the fast tier-1 subset",
     )
+    config.addinivalue_line(
+        "markers",
+        "autotune: repro.autotune subsystem tests (jitted grid engine, "
+        "tuner, persistent cache)",
+    )
+
+
+@pytest.fixture(autouse=True)
+def _isolated_autotune_cache(tmp_path, monkeypatch):
+    """Cache-isolate every test by default: the autotune decision cache
+    lives under the test's tmp dir, never the user's home, and the
+    process-wide tuner singleton is dropped so it re-reads the env var.
+
+    The singleton reset goes through ``sys.modules`` so tests that never
+    import repro.autotune don't pay the jax import for it.
+    """
+    monkeypatch.setenv(
+        "REPRO_AUTOTUNE_CACHE_DIR", str(tmp_path / "autotune_cache")
+    )
+    tuner_mod = sys.modules.get("repro.autotune.tuner")
+    if tuner_mod is not None:
+        tuner_mod.reset_tuner()
+    yield
+    tuner_mod = sys.modules.get("repro.autotune.tuner")
+    if tuner_mod is not None:
+        tuner_mod.reset_tuner()
