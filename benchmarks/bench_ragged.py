@@ -1,0 +1,136 @@
+"""Ragged-step engine: throughput vs the scalar loop + uniform engine,
+and heuristic accuracy on the capacity-skewed EP grid.
+
+Four sections:
+
+  * **grid**: the skewed EP scenario family (Table-I EP rows + synthetic
+    GEMMs x skew-factor sweep x Zipf/top-k profiles) over the machine
+    grid.
+  * **throughput**: the same ragged grid through the scalar path
+    (``simulate(..., profile=...)`` in nested Python loops), the NumPy
+    masked-scan engine (``evaluate_ragged_grid``) and the jitted engine
+    (``repro.autotune`` ragged backend), plus the ragged engine's
+    overhead relative to the uniform engine at equal point count.
+  * **heuristic**: within-5% accuracy of the skew-aware decision tree
+    (imbalance-scaled serial gate) over the skewed grid, through
+    ``explore_grid`` — the §VI-D protocol on the widened design space.
+"""
+
+import time
+
+from repro.core import (
+    GRID_SCHEDULES,
+    TABLE_I,
+    RaggedBatch,
+    ScenarioBatch,
+    Schedule,
+    evaluate_grid,
+    explore_grid,
+    machine_grid,
+    simulate,
+    synthetic_scenarios,
+)
+from repro.core.batch import evaluate_ragged_grid
+from repro.core.workload import ragged_scenario_grid
+
+from benchmarks.common import row
+
+_RAGGED_SCHEDULES = tuple(
+    s for s in GRID_SCHEDULES
+    if s not in (Schedule.SERIAL, Schedule.SHARD_P2P)
+)
+
+
+def _family():
+    """Skew-factor sweep x Zipf/top-k over the EP rows + synthetics."""
+    base = [s for s in TABLE_I if s.parallelism == "EP"]
+    base += synthetic_scenarios(12)
+    return ragged_scenario_grid(
+        steps=8,
+        skews=(1.0, 2.0, 4.0),
+        zipf_alphas=(1.0,),
+        top_k=((2, 0.6),),
+        scenarios=base,
+    )
+
+
+def _scalar_sweep(scenarios, machines):
+    n = 0
+    for machine in machines:
+        for sc in scenarios:
+            for sched in _RAGGED_SCHEDULES:
+                try:
+                    simulate(sc.gemm, machine, sched, profile=sc.profile)
+                except ValueError:
+                    pass
+            n += 1
+    return n
+
+
+def run() -> list[str]:
+    scenarios = _family()
+    machines = machine_grid()
+    rb = RaggedBatch.from_ragged_scenarios(scenarios)
+    points = len(scenarios) * len(machines)
+
+    # Warm calibration caches so every path times pure evaluation.
+    evaluate_ragged_grid(rb, machines)
+
+    t_batched = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        evaluate_ragged_grid(rb, machines)
+        t_batched = min(t_batched, time.perf_counter() - t0)
+
+    t0 = time.perf_counter()
+    _scalar_sweep(scenarios, machines)
+    t_scalar = time.perf_counter() - t0
+
+    # Uniform engine at the same point count: the masked scan's overhead.
+    sb = ScenarioBatch.from_scenarios(scenarios)
+    evaluate_grid(sb, machines)
+    t_uniform = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        evaluate_grid(sb, machines)
+        t_uniform = min(t_uniform, time.perf_counter() - t0)
+
+    # Jitted ragged backend (compile reported separately, amortized).
+    from repro.autotune import evaluate_ragged_grid as ragged_jax
+
+    t0 = time.perf_counter()
+    ragged_jax(rb, machines, backend="jax")
+    t_compile = time.perf_counter() - t0
+    t_jax = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        ragged_jax(rb, machines, backend="jax")
+        t_jax = min(t_jax, time.perf_counter() - t0)
+
+    rows = [
+        row("ragged/grid_points", 0.0,
+            f"{len(scenarios)}x{len(machines)}={points} "
+            f"x{len(_RAGGED_SCHEDULES)} ragged schedules"),
+        row("ragged/scalar", 1e6 * t_scalar / points,
+            f"{points / t_scalar:.0f} scenarios/s"),
+        row("ragged/batched", 1e6 * t_batched / points,
+            f"{points / t_batched:.0f} scenarios/s"),
+        row("ragged/batched_speedup", 0.0,
+            f"{t_scalar / t_batched:.0f}x over the scalar loop"),
+        row("ragged/jax", 1e6 * t_jax / points,
+            f"{points / t_jax:.0f} scenarios/s "
+            f"(compile {t_compile:.2f}s, amortized)"),
+        row("ragged/vs_uniform_overhead", 0.0,
+            f"{t_batched / t_uniform:.2f}x the uniform engine's time "
+            f"at equal S"),
+    ]
+
+    # Heuristic accuracy on the skewed grid (skew-aware serial gate).
+    ex = explore_grid(rb, machines=machines)
+    rows += [
+        row("ragged/heuristic_within5", 0.0,
+            f"{100 * ex.accuracy(0.05):.1f}% of {points} skewed points"),
+        row("ragged/heuristic_exact", 0.0,
+            f"{100 * ex.accuracy():.1f}%"),
+    ]
+    return rows

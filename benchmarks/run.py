@@ -8,15 +8,54 @@ Prints ``name,us_per_call,derived`` CSV.  Figure mapping:
   (real CPU timings)              -> bench_cpu_overlap
   batched sweep engine            -> bench_sweep
   autotune (jit engine + tuner)   -> bench_autotune
+  ragged (non-uniform) engine     -> bench_ragged
 
 ``--json [PATH]`` additionally writes a machine-readable name ->
 us_per_call map (default ``BENCH_sweep.json``) so the perf trajectory is
 tracked across PRs; ``--only MOD`` runs a single module.
+
+``--check-regression [BASELINE]`` guards the batched-engine throughput:
+the freshly measured us_per_call of the engine-throughput keys is
+compared against the committed baseline (default ``BENCH_sweep.json``)
+and the run FAILS if any engine got more than 20% slower (us_per_call
+grew past 1/0.8 = 1.25x).  The check runs BEFORE ``--json`` writes: a
+failing run leaves the baseline file untouched, so re-running cannot
+silently ratchet the baseline down to the regressed numbers.
 """
 
 import argparse
 import json
 import sys
+
+# Keys whose us_per_call tracks engine throughput (lower is better);
+# the regression guard watches these, not the model-fidelity rows.
+THROUGHPUT_KEYS = (
+    "sweep/batched",
+    "autotune/numpy_sweep",
+    "autotune/jax_sweep",
+    "ragged/batched",
+    "ragged/jax",
+)
+# >20% throughput drop == us_per_call growing beyond 1/0.8.
+REGRESSION_RATIO = 1.0 / 0.8
+
+
+def check_regression(
+    results: dict[str, float], baseline: dict[str, float]
+) -> list[str]:
+    """Engine-throughput keys that regressed >20% vs the baseline map."""
+    bad = []
+    for key in THROUGHPUT_KEYS:
+        old = baseline.get(key)
+        new = results.get(key)
+        if not old or new is None:
+            continue  # key absent (older baseline) or unmeasured
+        if new > old * REGRESSION_RATIO:
+            bad.append(
+                f"{key}: {old:.1f} -> {new:.1f} us/point "
+                f"({100 * (new / old - 1):.0f}% slower)"
+            )
+    return bad
 
 
 def main() -> None:
@@ -30,6 +69,7 @@ def main() -> None:
         bench_dil_gemm,
         bench_heuristic,
         bench_proportions,
+        bench_ragged,
         bench_schedules,
         bench_shard_overlap,
         bench_sweep,
@@ -39,7 +79,7 @@ def main() -> None:
         bench_dil_gemm, bench_dil_comm, bench_cil, bench_proportions,
         bench_schedules, bench_shard_overlap, bench_comparison,
         bench_heuristic, bench_cpu_overlap, bench_arch_schedules,
-        bench_sweep, bench_autotune,
+        bench_sweep, bench_autotune, bench_ragged,
     ]
 
     ap = argparse.ArgumentParser(description=__doc__)
@@ -56,11 +96,29 @@ def main() -> None:
         default=None,
         help="run a single module (e.g. bench_sweep)",
     )
+    ap.add_argument(
+        "--check-regression",
+        nargs="?",
+        const="BENCH_sweep.json",
+        default=None,
+        metavar="BASELINE",
+        help="fail if batched-engine throughput drops >20%% vs the "
+        "committed baseline JSON (read before --json overwrites it)",
+    )
     args = ap.parse_args()
     if args.only:
         modules = [m for m in modules if m.__name__.endswith(args.only)]
         if not modules:
             sys.exit(f"no benchmark module matches {args.only!r}")
+
+    # Snapshot the baseline up front: --json may overwrite the same file.
+    baseline: dict[str, float] | None = None
+    if args.check_regression:
+        try:
+            with open(args.check_regression) as f:
+                baseline = json.load(f)
+        except (OSError, ValueError):
+            baseline = None
 
     print("name,us_per_call,derived")
     results: dict[str, float] = {}
@@ -74,6 +132,28 @@ def main() -> None:
         except Exception as e:  # pragma: no cover
             failed += 1
             print(f"{mod.__name__},0.0,ERROR:{e}")
+    # Regression gate BEFORE --json: a failing run must leave the
+    # baseline file untouched (overwriting first would make a rerun
+    # compare regressed-vs-regressed and "pass").
+    if args.check_regression:
+        if baseline is None:
+            print(
+                f"# no readable baseline at {args.check_regression}; "
+                "skipping regression check",
+                file=sys.stderr,
+            )
+        else:
+            bad = check_regression(results, baseline)
+            if bad:
+                for b in bad:
+                    print(f"# THROUGHPUT REGRESSION {b}", file=sys.stderr)
+                print(
+                    f"# NOT writing {args.json or 'JSON'}: baseline "
+                    "preserved for the next run",
+                    file=sys.stderr,
+                )
+                sys.exit(2)
+            print("# regression check passed", file=sys.stderr)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(results, f, indent=1, sort_keys=True)

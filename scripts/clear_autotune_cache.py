@@ -6,7 +6,11 @@ Usage:
 By default clears ``$REPRO_AUTOTUNE_CACHE_DIR`` (or
 ``~/.cache/repro_autotune``).  ``-n`` / ``--dry-run`` only reports what
 would be removed.  Only ``autotune-v*.json`` files are touched — the
-directory itself and anything else in it is left alone.
+directory itself and anything else in it is left alone.  The version
+glob intentionally catches every schema generation: the PR-2-era
+``autotune-v1.json`` (profile-less keys) as well as the current
+``autotune-v2.json`` (ragged-profile-digest keys), so orphaned stores
+from before a schema bump are cleaned up too.
 """
 
 from __future__ import annotations

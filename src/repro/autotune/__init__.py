@@ -33,6 +33,7 @@ from repro.autotune.jaxgrid import (
     calibrate_tau,
     calibrate_tau_reference,
     evaluate_grid_raw,
+    evaluate_ragged_grid_raw,
     expected_heuristic_time,
     machine_arrays,
     scenario_arrays,
@@ -40,6 +41,9 @@ from repro.autotune.jaxgrid import (
     soft_pick_weights,
 )
 from repro.autotune.jaxgrid import evaluate_grid as evaluate_grid_jax
+from repro.autotune.jaxgrid import (
+    evaluate_ragged_grid as evaluate_ragged_grid_jax,
+)
 from repro.autotune.tuner import (
     Autotuner,
     TuneDecision,
@@ -66,6 +70,20 @@ def evaluate_grid(scenarios, machines, *, backend: str = "jax", **kw):
     raise ValueError(f"backend must be 'jax'|'numpy', got {backend!r}")
 
 
+def evaluate_ragged_grid(scenarios, machines, *, backend: str = "jax", **kw):
+    """Backend-switched **ragged** grid evaluation (non-uniform step
+    profiles); see ``repro.core.batch.evaluate_ragged_grid``."""
+    if backend == "jax":
+        return evaluate_ragged_grid_jax(scenarios, machines, **kw)
+    if backend == "numpy":
+        from repro.core.batch import (
+            evaluate_ragged_grid as _np_ragged,
+        )
+
+        return _np_ragged(scenarios, machines, **kw)
+    raise ValueError(f"backend must be 'jax'|'numpy', got {backend!r}")
+
+
 __all__ = [
     "SCHEMA_VERSION",
     "AutotuneCache",
@@ -77,6 +95,9 @@ __all__ = [
     "evaluate_grid",
     "evaluate_grid_jax",
     "evaluate_grid_raw",
+    "evaluate_ragged_grid",
+    "evaluate_ragged_grid_jax",
+    "evaluate_ragged_grid_raw",
     "expected_heuristic_time",
     "soft_pick_weights",
     "calibrate_tau",

@@ -7,10 +7,10 @@ tuning cost and every later launcher/server starts with the winner.
 Layout (human-readable on purpose — this is an operational artifact)::
 
     {
-      "schema": 1,
+      "schema": 2,
       "jax": "0.4.37",
       "entries": {
-        "tpu-v5e-axis16/g16/m65536/n4096/k8192/b2": {
+        "tpu-v5e-axis16/g16/m65536/n4096/k8192/b2/u16": {
           "schedule": "hetero_unfused_1d",
           "source": "analytic",          # analytic | measured
           "model_total_s": 0.00123,      # analytic model's time for it
@@ -19,6 +19,17 @@ Layout (human-readable on purpose — this is an operational artifact)::
         ...
       }
     }
+
+Schema history:
+  v1 (PR 2): keys were ``machine/gG/mM/nN/kK/bB`` — uniform schedules
+      only.
+  v2 (this PR): keys gained the ragged step-profile digest (``/u16`` for
+      the uniform 16-step split, ``/skew2-8-<hash>`` etc. for skewed
+      profiles), so tuned decisions are profile-specific.  v1 files are
+      invalidated wholesale: they live under the old ``autotune-v1.json``
+      name (never read by v2 code), and a v1 payload written at the v2
+      path fails the schema check and is treated as empty — old entries
+      can never surface under new keys.
 
 Location: ``$REPRO_AUTOTUNE_CACHE_DIR`` if set, else
 ``~/.cache/repro_autotune``.  The test suite sets the env var to a
@@ -39,7 +50,7 @@ import os
 import tempfile
 from typing import Any
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2  # v2: ragged step-profile digest joined the key schema
 _ENV_VAR = "REPRO_AUTOTUNE_CACHE_DIR"
 
 

@@ -42,10 +42,15 @@ import numpy as np
 from jax.experimental import enable_x64
 
 from repro.core import inefficiency as ineff
-from repro.core.batch import GRID_SCHEDULES, GridResult, _as_batch
+from repro.core.batch import (
+    GRID_SCHEDULES,
+    GridResult,
+    _as_batch,
+    _as_ragged_batch,
+)
 from repro.core.heuristics import MIN_DECOMPOSE_FLOPS
 from repro.core.machine import MachineSpec, Topology
-from repro.core.schedule_types import Schedule
+from repro.core.schedule_types import STUDIED, Schedule
 
 _F = jnp.float64
 _I = jnp.int64
@@ -136,8 +141,9 @@ def scenario_arrays(scenarios) -> tuple[jax.Array, ...]:
 def gemm_exec_jax(m, n, k, b, mp: MachineArrays, *, accumulate=False):
     """Elementwise roofline GEMM time; mirrors ``batch.gemm_exec_vec``."""
     t_mn, pu = mp.tile_mn, mp.parallel_units
-    cm = (m + t_mn - 1) // t_mn
-    cn = (n + t_mn - 1) // t_mn
+    # >= 1 tile even for sub-row ragged chunks (see batch.gemm_exec_vec).
+    cm = jnp.maximum((m + t_mn - 1) // t_mn, 1)
+    cn = jnp.maximum((n + t_mn - 1) // t_mn, 1)
     tiles = cm * cn
     split_cap = jnp.where(m <= t_mn, 2, 8)
     ceil_pu = (pu + tiles - 1) // jnp.maximum(tiles, 1)
@@ -442,6 +448,289 @@ def _eval_one_machine_jax(m, n, k, b, mp, g_max, schedules, dma,
     )
 
 
+# ---------------------------------------------------------------------------
+# Ragged (non-uniform step) evaluation: padded (S, P) fraction matrix +
+# validity masks, jit-compatible (mirrors batch.ragged_step_times).
+# ---------------------------------------------------------------------------
+
+_FICCO_SET = frozenset(STUDIED)
+
+
+def ragged_step_times_jax(
+    m, n, k, b, frac, mp: MachineArrays, sched: Schedule, *,
+    dma: bool = True, dma_into_place: bool = False,
+):
+    """Per-step stream times for one (vmapped) machine; jnp twin of
+    ``repro.core.batch.ragged_step_times``.
+
+    ``frac`` is the padded ``(S, P)`` fraction matrix (static P).
+    Returns ``(comm_steps, compute_steps, deps, comm_active,
+    comp_active, ok)`` ready for :func:`pipeline_jax`.
+    """
+    if sched not in _FICCO_SET:
+        raise ValueError(
+            f"ragged profiles apply to the FiCCO schedules, got {sched}"
+        )
+    g = mp.group
+    S = m.shape[0]
+    P = frac.shape[1]
+    dev_n = jnp.where(n % g == 0, n // g, n)
+    m_div = (m % g == 0) & (m > 0)
+    m_s = m // g
+    mf = m.astype(_F)
+    msf = m_s.astype(_F)
+    kf = k.astype(_F)
+
+    if sched is Schedule.UNIFORM_FUSED_2D:
+        degree, accumulate = 4, True
+        local = None
+        per_step_gemms = jnp.asarray(1, dtype=_I)
+    elif sched is Schedule.UNIFORM_FUSED_1D:
+        degree, accumulate = 4, False
+        local = None
+        per_step_gemms = jnp.asarray(1, dtype=_I)
+    elif sched is Schedule.HETERO_FUSED_1D:
+        degree, accumulate = 3, False
+        local = (m_s, dev_n, k)
+        per_step_gemms = jnp.asarray(1, dtype=_I)
+    else:  # HETERO_UNFUSED_1D
+        degree, accumulate = 2, False
+        local = (m_s, dev_n, k)
+        per_step_gemms = g - 1
+    if dma_into_place:
+        degree = 2
+    c_cil = comm_cil_jax(m_s, dev_n, k, b, mp, degree=degree, dma=dma)
+
+    comm_steps, compute_steps = [], []
+    comm_active, comp_active = [], []
+    for s in range(P):
+        f = frac[:, s]
+        act = f > 0.0
+        if sched is Schedule.UNIFORM_FUSED_2D:
+            k_s = f * kf
+            chunk_bytes = msf * k_s * b
+            rows, cols, inner = mf, dev_n, k_s
+            gather_bytes = mf * k_s * b
+            scatter_bytes = None
+        else:
+            chunk_bytes = (f * msf) * kf * b
+            cols, inner = dev_n, k
+            if sched is Schedule.UNIFORM_FUSED_1D:
+                rows = f * mf
+                gather_bytes = rows * kf * b
+                scatter_bytes = rows * dev_n * b
+            elif sched is Schedule.HETERO_FUSED_1D:
+                rows = f * ((g - 1) * msf)
+                gather_bytes = rows * kf * b
+                scatter_bytes = rows * dev_n * b
+            else:
+                rows = f * msf
+                gather_bytes = None
+                scatter_bytes = (g - 1) * rows * dev_n * b
+        if dma_into_place:
+            gather_bytes = None
+            scatter_bytes = None
+        t_comm = a2a_chunk_step_time_jax(chunk_bytes, mp) * c_cil
+        g_cil = gemm_cil_jax(
+            rows, cols, inner, b, mp, degree=degree, dma=dma
+        )
+        t_gemm = (
+            per_step_gemms
+            * gemm_exec_jax(rows, cols, inner, b, mp, accumulate=accumulate)
+            * g_cil
+        )
+        if gather_bytes is None:
+            t_gather = jnp.zeros((S,), dtype=_F)
+        else:
+            t_gather = jnp.where(
+                gather_bytes > 0, hbm_move_time_jax(gather_bytes, mp), 0.0
+            )
+        if scatter_bytes is None:
+            t_scatter = jnp.zeros((S,), dtype=_F)
+        else:
+            t_scatter = jnp.where(
+                scatter_bytes > 0, hbm_move_time_jax(scatter_bytes, mp), 0.0
+            )
+        t_step = jnp.maximum(t_gemm, t_gather + t_scatter)
+        comm_steps.append(t_comm)
+        comm_active.append(act)
+        compute_steps.append(t_step)
+        comp_active.append(act)
+
+    if local is not None:
+        t_local = gemm_exec_jax(
+            local[0], local[1], local[2], b, mp
+        ) * gemm_cil_jax(
+            local[0], local[1], local[2], b, mp, degree=degree, dma=dma
+        )
+        compute_steps = [t_local] + compute_steps
+        comp_active = [jnp.ones((S,), dtype=bool)] + comp_active
+        deps: list[int | None] = [None] + list(range(P))
+    else:
+        deps = list(range(P))
+    return comm_steps, compute_steps, deps, comm_active, comp_active, m_div
+
+
+def _eval_one_machine_ragged_jax(
+    m, n, k, b, frac, mp, g_max, schedules, dma, dma_into_place
+):
+    """All schedules for one (vmapped) machine over ragged scenarios.
+
+    SERIAL / SHARD_P2P replicate the uniform engine (profile-free); the
+    FiCCO schedules run the masked ragged scan over P padded steps.
+    """
+    g = mp.group
+    S = m.shape[0]
+    P = frac.shape[1]
+    true_f = jnp.ones((S,), dtype=bool)
+
+    dev_n = jnp.where(n % g == 0, n // g, n)
+    mk_bytes = (m * k).astype(_F) * b
+    serial_comm = ag_serial_time_jax(mk_bytes, mp)
+    serial_gemm = gemm_exec_jax(m, dev_n, k, b, mp)
+
+    m_div = (m % g == 0) & (m > 0)
+    m_s = m // g
+
+    def step_active(n_steps):
+        return [s < n_steps for s in range(g_max)]
+
+    total_rows, comm_rows, comp_rows, exp_rows = [], [], [], []
+    steps_rows, valid_rows = [], []
+
+    def put(ok, total, comm_busy, compute_busy, exposed, n_steps):
+        total_rows.append(jnp.where(ok, total, jnp.nan))
+        comm_rows.append(jnp.where(ok, comm_busy, jnp.nan))
+        comp_rows.append(jnp.where(ok, compute_busy, jnp.nan))
+        exp_rows.append(jnp.where(ok, exposed, jnp.nan))
+        steps_rows.append(jnp.asarray(n_steps, dtype=_I))
+        valid_rows.append(ok)
+
+    for sched in schedules:
+        if sched is Schedule.SERIAL:
+            put(true_f, serial_comm + serial_gemm, serial_comm, serial_gemm,
+                serial_comm, 1)
+            continue
+        if sched is Schedule.SHARD_P2P:
+            shard_bytes = (m_s * k).astype(_F) * b
+            c_cil = comm_cil_jax(m_s, dev_n, k, b, mp, degree=2, dma=dma)
+            g_cil = gemm_cil_jax(m_s, dev_n, k, b, mp, degree=2, dma=dma)
+            t_p2p = p2p_step_time_jax(shard_bytes, mp) * c_cil
+            t_gemm = gemm_exec_jax(m_s, dev_n, k, b, mp) * g_cil
+            total, exposed, comm_sum, comp_sum = pipeline_jax(
+                [t_p2p] * (g_max - 1),
+                [t_gemm] * g_max,
+                [None] + list(range(g_max - 1)),
+                step_active(g - 1),
+                step_active(g),
+            )
+            put(m_div, total, comm_sum, comp_sum, exposed, g)
+            continue
+        comm, compute, deps, c_act, w_act, ok = ragged_step_times_jax(
+            m, n, k, b, frac, mp, sched,
+            dma=dma, dma_into_place=dma_into_place,
+        )
+        total, exposed, comm_sum, comp_sum = pipeline_jax(
+            comm, compute, deps, c_act, w_act
+        )
+        put(ok, total, comm_sum, comp_sum, exposed, P)
+
+    return (
+        jnp.stack(total_rows),
+        jnp.stack(comm_rows),
+        jnp.stack(comp_rows),
+        jnp.stack(exp_rows),
+        jnp.stack(steps_rows),
+        jnp.stack(valid_rows),
+        serial_comm,
+        serial_gemm,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("g_max", "schedules", "dma", "dma_into_place"),
+)
+def _ragged_grid_jit(
+    m, n, k, b, frac, mp, *, g_max, schedules, dma, dma_into_place
+):
+    """(M-vmapped) ragged grid; outputs are (M, L, S) / (M, S) stacks."""
+    return jax.vmap(
+        lambda one: _eval_one_machine_ragged_jax(
+            m, n, k, b, frac, one, g_max, schedules, dma, dma_into_place
+        )
+    )(mp)
+
+
+def evaluate_ragged_grid_raw(
+    scenarios,
+    machines_or_arrays,
+    *,
+    dma: bool = True,
+    dma_into_place: bool = False,
+    schedules: tuple[Schedule, ...] = GRID_SCHEDULES,
+    g_max: int | None = None,
+):
+    """Jit-evaluated ragged grid as device arrays (leading machine axis).
+
+    ``scenarios`` is a RaggedBatch / list of RaggedScenario; the padded
+    fraction matrix enters the jitted program as an ordinary operand, so
+    re-running with a different skew at the same (S, P) shape costs no
+    recompile.
+    """
+    rb = _as_ragged_batch(scenarios)
+    with enable_x64():
+        if isinstance(machines_or_arrays, MachineArrays):
+            mp = machines_or_arrays
+            if g_max is None:
+                g_max = int(np.max(np.asarray(mp.group)))
+        else:
+            ms = tuple(machines_or_arrays)
+            mp = machine_arrays(ms)
+            g_max = max(m.group for m in ms)
+        m, n, k, b = scenario_arrays(rb)
+        frac = jnp.asarray(rb.frac, dtype=_F)
+        return _ragged_grid_jit(
+            m, n, k, b, frac, mp,
+            g_max=g_max, schedules=tuple(schedules),
+            dma=dma, dma_into_place=dma_into_place,
+        )
+
+
+def evaluate_ragged_grid(
+    scenarios,
+    machines,
+    *,
+    dma: bool = True,
+    dma_into_place: bool = False,
+    schedules: tuple[Schedule, ...] = GRID_SCHEDULES,
+) -> GridResult:
+    """Drop-in jitted replacement for ``batch.evaluate_ragged_grid``."""
+    rb = _as_ragged_batch(scenarios)
+    machines = tuple(machines)
+    out = evaluate_ragged_grid_raw(
+        rb, machines, dma=dma, dma_into_place=dma_into_place,
+        schedules=schedules,
+    )
+    total, comm_busy, compute_busy, exposed, steps, valid, sc, sg = (
+        np.asarray(a) for a in out
+    )
+    return GridResult(
+        schedules=tuple(schedules),
+        scenarios=rb,
+        machines=machines,
+        total=np.transpose(total, (1, 2, 0)),
+        comm_busy=np.transpose(comm_busy, (1, 2, 0)),
+        compute_busy=np.transpose(compute_busy, (1, 2, 0)),
+        exposed=np.transpose(exposed, (1, 2, 0)),
+        steps=np.transpose(steps, (1, 0)),
+        serial_comm=np.transpose(sc, (1, 0)),
+        serial_gemm=np.transpose(sg, (1, 0)),
+        valid=np.transpose(valid, (1, 2, 0)),
+        dma=dma,
+    )
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("g_max", "schedules", "dma", "dma_into_place"),
@@ -738,6 +1027,7 @@ def shortlist(
     top: int = 3,
     dma: bool = True,
     backend: str = "jax",
+    profile=None,
 ) -> list[tuple[Schedule, float]]:
     """Top-``top`` valid schedules for one GEMM, fastest first.
 
@@ -745,11 +1035,24 @@ def shortlist(
     reference engine (useful where no accelerator/XLA is wanted on the
     hot path).  Model times accompany each schedule so callers can
     decide whether measuring is worth it (close calls) or not.
+    ``profile`` ranks the schedules under a ragged step profile instead
+    of the uniform split (skew-aware tuning).
     """
     from repro.core import batch as _batch
 
-    eval_fn = evaluate_grid if backend == "jax" else _batch.evaluate_grid
-    grid = eval_fn([gemm], (machine,), dma=dma)
+    if profile is not None:
+        rb = _batch.RaggedBatch.from_batch_and_profiles(
+            _batch.ScenarioBatch.from_gemms([gemm]), [profile]
+        )
+        eval_fn = (
+            evaluate_ragged_grid
+            if backend == "jax"
+            else _batch.evaluate_ragged_grid
+        )
+        grid = eval_fn(rb, (machine,), dma=dma)
+    else:
+        eval_fn = evaluate_grid if backend == "jax" else _batch.evaluate_grid
+        grid = eval_fn([gemm], (machine,), dma=dma)
     total = np.where(grid.valid[:, 0, 0], grid.total[:, 0, 0], np.inf)
     order = np.argsort(total, kind="stable")
     out = []
@@ -766,6 +1069,9 @@ __all__ = [
     "scenario_arrays",
     "evaluate_grid",
     "evaluate_grid_raw",
+    "evaluate_ragged_grid",
+    "evaluate_ragged_grid_raw",
+    "ragged_step_times_jax",
     "gemm_exec_jax",
     "comm_time_jax",
     "ag_serial_time_jax",

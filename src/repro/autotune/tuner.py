@@ -41,7 +41,13 @@ from repro.autotune.cache import AutotuneCache
 
 @dataclasses.dataclass(frozen=True)
 class TuneKey:
-    """Cache identity of one data-dependent AG->GEMM site."""
+    """Cache identity of one data-dependent AG->GEMM site.
+
+    ``profile`` is the ragged step-profile digest
+    (:meth:`repro.core.workload.StepProfile.digest`): ``uG`` for the
+    paper's uniform G-step split, a name+hash for skewed profiles.  Its
+    arrival is the schema-v2 key change — see ``repro.autotune.cache``.
+    """
 
     machine: str
     group: int
@@ -49,24 +55,31 @@ class TuneKey:
     n: int
     k: int
     dtype_bytes: int
+    profile: str = "uniform"
 
     def __str__(self) -> str:
         return (
             f"{self.machine}/g{self.group}/m{self.m}/n{self.n}"
-            f"/k{self.k}/b{self.dtype_bytes}"
+            f"/k{self.k}/b{self.dtype_bytes}/{self.profile}"
         )
 
     @classmethod
     def for_gemm(
-        cls, gemm: GemmShape, machine: MachineSpec, group: int | None = None
+        cls,
+        gemm: GemmShape,
+        machine: MachineSpec,
+        group: int | None = None,
+        profile=None,
     ) -> "TuneKey":
+        g = int(group if group is not None else machine.group)
         return cls(
             machine=machine.name,
-            group=int(group if group is not None else machine.group),
+            group=g,
             m=gemm.m,
             n=gemm.n,
             k=gemm.k,
             dtype_bytes=gemm.dtype_bytes,
+            profile=f"u{g}" if profile is None else profile.digest(),
         )
 
 
@@ -124,6 +137,7 @@ class Autotuner:
         machine: MachineSpec | None = None,
         *,
         group: int | None = None,
+        profile=None,
     ) -> TuneDecision:
         """Cached winner if present, else the best *executable* analytic
         winner (recorded).
@@ -135,13 +149,17 @@ class Autotuner:
         ``ficco_linear`` applies — a persisted winner is always one the
         runtime will actually execute, never silently swapped for serial.
 
+        ``profile`` tunes for a ragged step profile (capacity-skewed EP
+        dispatch): the decision is keyed and ranked per profile digest,
+        so a hot-expert skew and the uniform split coexist in the cache.
+
         Never raises: any model/backend failure degrades to the static
         heuristic (``select_schedule``) — the zero-cost fallback — and
         that decision is *not* persisted, so a healthy later process
         re-tunes.
         """
         machine = machine or TPU_V5E
-        key = str(TuneKey.for_gemm(gemm, machine, group))
+        key = str(TuneKey.for_gemm(gemm, machine, group, profile=profile))
         hit = self.cache.get(key)
         if hit is not None:
             try:
@@ -159,16 +177,22 @@ class Autotuner:
         self.misses += 1
         eff = machine_for_group(machine, group) if group else machine
         try:
-            ranked = self._shortlist(gemm, eff, top=None)
-            ranked = [
-                (s, t) for s, t in ranked
-                if _runtime_executable(gemm, eff.group, s)
-            ]
+            ranked = self._shortlist(gemm, eff, top=None, profile=profile)
+            if profile is None:
+                # Uniform AG->GEMM path: ficco_linear chunks the shard
+                # one level deeper, so filter by its divisibility rule.
+                # Ragged picks go to the profile-quantized kernel path
+                # (ficco_a2a_ffn), which handles arbitrary chunk sizes —
+                # the cost model's own validity mask already applied.
+                ranked = [
+                    (s, t) for s, t in ranked
+                    if _runtime_executable(gemm, eff.group, s)
+                ]
             sched, model_t = ranked[0]  # serial always survives the filter
         except Exception:
             # Zero-cost fallback, against the group-retargeted machine so
             # the decision tree + serial gate see the real group size.
-            dec = select_schedule(gemm, eff)
+            dec = select_schedule(gemm, eff, profile=profile)
             return TuneDecision(dec.schedule, "heuristic")
         self._record(key, sched, "analytic", model_total_s=model_t)
         return TuneDecision(sched, "analytic", model_t)
@@ -180,13 +204,14 @@ class Autotuner:
         *,
         group: int | None = None,
         top: int = 3,
+        profile=None,
     ) -> list[tuple[Schedule, float]]:
         """Analytic top-``top`` candidates (schedule, modelled seconds)."""
         machine = machine or TPU_V5E
         eff = machine_for_group(machine, group) if group else machine
-        return self._shortlist(gemm, eff, top=top)
+        return self._shortlist(gemm, eff, top=top, profile=profile)
 
-    def _shortlist(self, gemm, machine, *, top):
+    def _shortlist(self, gemm, machine, *, top, profile=None):
         from repro.autotune import jaxgrid  # local: keeps import light
 
         if top is None:
@@ -202,7 +227,9 @@ class Autotuner:
 
             if not _jax.core.trace_state_clean():
                 backend = "numpy"
-        out = jaxgrid.shortlist(gemm, machine, top=top, backend=backend)
+        out = jaxgrid.shortlist(
+            gemm, machine, top=top, backend=backend, profile=profile
+        )
         if not out:
             raise ValueError(f"no valid schedule for {gemm}")
         return out
@@ -347,10 +374,16 @@ def autotune_schedule(
     machine: MachineSpec | None = None,
     group: int | None = None,
     dtype_bytes: int = 2,
+    profile=None,
 ) -> Schedule:
-    """One-call convenience: tuned schedule for a global (M, N, K) GEMM."""
+    """One-call convenience: tuned schedule for a global (M, N, K) GEMM.
+
+    ``profile`` (a :class:`~repro.core.workload.StepProfile`) tunes for
+    a ragged (e.g. capacity-skewed EP) step decomposition.
+    """
     return get_tuner().pick(
-        GemmShape(m, n, k, dtype_bytes), machine, group=group
+        GemmShape(m, n, k, dtype_bytes), machine, group=group,
+        profile=profile,
     ).schedule
 
 

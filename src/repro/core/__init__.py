@@ -33,9 +33,12 @@ from repro.core.workload import (
     TABLE_I,
     CollectiveKind,
     GemmShape,
+    RaggedScenario,
     Scenario,
+    StepProfile,
     geomean,
     machine_grid,
+    ragged_scenario_grid,
     scenario_grid,
     synthetic_scenarios,
 )
@@ -64,8 +67,10 @@ from repro.core.simulator import SimResult, best_schedule, simulate
 from repro.core.batch import (
     GRID_SCHEDULES,
     GridResult,
+    RaggedBatch,
     ScenarioBatch,
     evaluate_grid,
+    evaluate_ragged_grid,
 )
 from repro.core.heuristics import (
     HeuristicDecision,
@@ -89,15 +94,18 @@ from repro.core.explorer import (
 __all__ = [
     "MACHINES", "MI300X", "TPU_V5E", "MachineSpec", "Topology",
     "machine_for_group",
-    "SCENARIOS", "TABLE_I", "CollectiveKind", "GemmShape", "Scenario",
-    "geomean", "machine_grid", "scenario_grid", "synthetic_scenarios",
+    "SCENARIOS", "TABLE_I", "CollectiveKind", "GemmShape", "RaggedScenario",
+    "Scenario", "StepProfile",
+    "geomean", "machine_grid", "ragged_scenario_grid", "scenario_grid",
+    "synthetic_scenarios",
     "ALL_VARIANTS", "SIGNATURES", "STUDIED", "CommShape", "FiccoVariant",
     "Granularity", "Schedule", "Uniformity",
     "GemmExec", "a2a_chunk_step_time", "ag_serial_time", "comm_cil",
     "gemm_cil", "gemm_dil", "gemm_exec", "gemm_time_decomposed",
     "p2p_step_time",
     "SimResult", "best_schedule", "simulate",
-    "GRID_SCHEDULES", "GridResult", "ScenarioBatch", "evaluate_grid",
+    "GRID_SCHEDULES", "GridResult", "RaggedBatch", "ScenarioBatch",
+    "evaluate_grid", "evaluate_ragged_grid",
     "HeuristicDecision", "calibrate_serial_gate", "calibrate_tau",
     "machine_serial_gate", "machine_threshold",
     "select_schedule", "select_schedule_batch",

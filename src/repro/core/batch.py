@@ -39,7 +39,12 @@ from repro.core import inefficiency as ineff
 from repro.core.machine import MachineSpec, Topology
 from repro.core.schedule_types import STUDIED, Schedule
 from repro.core.simulator import SimResult
-from repro.core.workload import GemmShape, Scenario
+from repro.core.workload import (
+    GemmShape,
+    RaggedScenario,
+    Scenario,
+    StepProfile,
+)
 
 # Canonical schedule order — matches the dict order of
 # ``simulator.best_schedule`` so argmin tie-breaking is identical.
@@ -108,9 +113,85 @@ def _as_batch(scenarios) -> ScenarioBatch:
     if isinstance(scenarios, ScenarioBatch):
         return scenarios
     scenarios = list(scenarios)
-    if scenarios and isinstance(scenarios[0], Scenario):
+    if scenarios and isinstance(scenarios[0], (Scenario, RaggedScenario)):
         return ScenarioBatch.from_scenarios(scenarios)
     return ScenarioBatch.from_gemms(scenarios)
+
+
+@dataclasses.dataclass(frozen=True)
+class RaggedBatch(ScenarioBatch):
+    """Struct-of-arrays view of S *ragged* scenarios.
+
+    ``frac`` is the ``(S, P)`` padded per-step fraction matrix (rows sum
+    to 1; zero entries are masked tail / empty steps).  Mixed profile
+    lengths batch together by zero-padding to the longest profile —
+    the masked scan charges padded steps exactly nothing.
+    """
+
+    frac: np.ndarray = None  # (S, P) float64
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.frac is None:
+            raise ValueError("RaggedBatch requires a frac matrix")
+        if self.frac.ndim != 2 or self.frac.shape[0] != self.m.shape[0]:
+            raise ValueError(
+                f"frac must be (S, P) with S={self.m.shape[0]}, "
+                f"got {self.frac.shape}"
+            )
+
+    @property
+    def max_steps(self) -> int:
+        return self.frac.shape[1]
+
+    @property
+    def imbalance(self) -> np.ndarray:
+        """(S,) max/mean active-step share (1.0 == uniform)."""
+        active = self.frac > 0.0
+        return self.frac.max(axis=1) * active.sum(axis=1)
+
+    def profile(self, i: int) -> StepProfile:
+        return StepProfile(tuple(float(f) for f in self.frac[i])).trimmed()
+
+    @classmethod
+    def from_ragged_scenarios(cls, scenarios) -> "RaggedBatch":
+        scenarios = list(scenarios)
+        p_max = max(s.profile.steps for s in scenarios)
+        frac = np.zeros((len(scenarios), p_max), dtype=_F)
+        for i, s in enumerate(scenarios):
+            frac[i, : s.profile.steps] = s.profile.fractions
+        base = ScenarioBatch.from_scenarios(scenarios)
+        return cls(
+            m=base.m, n=base.n, k=base.k, dtype_bytes=base.dtype_bytes,
+            names=base.names, frac=frac,
+        )
+
+    @classmethod
+    def from_batch_and_profiles(cls, sb: ScenarioBatch, profiles) -> "RaggedBatch":
+        profiles = list(profiles)
+        if len(profiles) != len(sb):
+            raise ValueError(
+                f"{len(profiles)} profiles for {len(sb)} scenarios"
+            )
+        p_max = max(p.steps for p in profiles)
+        frac = np.zeros((len(sb), p_max), dtype=_F)
+        for i, p in enumerate(profiles):
+            frac[i, : p.steps] = p.fractions
+        return cls(
+            m=sb.m, n=sb.n, k=sb.k, dtype_bytes=sb.dtype_bytes,
+            names=sb.names, frac=frac,
+        )
+
+
+def _as_ragged_batch(scenarios) -> RaggedBatch:
+    if isinstance(scenarios, RaggedBatch):
+        return scenarios
+    scenarios = list(scenarios)
+    if not (scenarios and isinstance(scenarios[0], RaggedScenario)):
+        raise TypeError(
+            "ragged evaluation needs RaggedScenario items or a RaggedBatch"
+        )
+    return RaggedBatch.from_ragged_scenarios(scenarios)
 
 
 # ---------------------------------------------------------------------------
@@ -134,8 +215,11 @@ def gemm_exec_vec(
     decompositions the scalar model would reject) yield NaN.
     """
     t_mn, pu = machine.tile_mn, machine.parallel_units
-    cm = (m + t_mn - 1) // t_mn
-    cn = (n + t_mn - 1) // t_mn
+    # Clamp to >= 1 tile: ragged profiles can produce sub-row fractional
+    # chunks whose floor-div would yield 0 tiles (0/0 occupancy).  A
+    # no-op for integer m, n >= 1, so the uniform grid is untouched.
+    cm = np.maximum((m + t_mn - 1) // t_mn, 1)
+    cn = np.maximum((n + t_mn - 1) // t_mn, 1)
     tiles = cm * cn
     split_cap = np.where(m <= t_mn, 2, 8)
     ceil_pu = (pu + tiles - 1) // np.maximum(tiles, 1)
@@ -272,7 +356,8 @@ def comm_cil_vec(
 # ---------------------------------------------------------------------------
 
 
-def pipeline_vec(comm_steps, compute_steps, deps):
+def pipeline_vec(comm_steps, compute_steps, deps,
+                 comm_active=None, comp_active=None):
     """Vectorized two-channel pipeline over ``(S,)`` step arrays.
 
     ``comm_steps`` / ``compute_steps`` are short lists (length ~group) of
@@ -282,11 +367,21 @@ def pipeline_vec(comm_steps, compute_steps, deps):
     per-schedule totals agree bit-for-bit with the scalar recurrence
     rather than merely to rounding tolerance.
 
+    ``comm_active`` / ``comp_active`` turn the scan into a **masked
+    ragged scan**: matching lists of per-step boolean arrays (or scalars)
+    marking real steps.  An inactive step adds exactly 0.0 time and can
+    never stall the compute channel, so profiles of different lengths
+    batch together zero-padded and reproduce their unpadded recurrences
+    bit-for-bit (the same contract as ``jaxgrid.pipeline_jax``).  With
+    masks omitted the original uniform code path runs unchanged.
+
     Returns ``(total, exposed, comm_sum, compute_sum)``.
     """
     finish = []
     t = None
-    for c in comm_steps:
+    for s, c in enumerate(comm_steps):
+        if comm_active is not None:
+            c = np.where(comm_active[s], c, 0.0)
         t = c if t is None else t + c
         finish.append(t)
     zero = np.zeros_like(compute_steps[0])
@@ -294,10 +389,14 @@ def pipeline_vec(comm_steps, compute_steps, deps):
     exposed = zero
     comp_sum = None
     for i, w in enumerate(compute_steps):
+        if comp_active is not None:
+            w = np.where(comp_active[i], w, 0.0)
         dep = deps[i]
         if dep is not None:
             ready = finish[dep]
             stalled = ready > t_comp
+            if comp_active is not None:
+                stalled = stalled & comp_active[i]
             exposed = exposed + np.where(stalled, ready - t_comp, 0.0)
             t_comp = np.where(stalled, ready, t_comp)
         t_comp = t_comp + w
@@ -529,6 +628,282 @@ def _eval_one_machine(
     return out, steps, valid, serial_comm, serial_gemm
 
 
+# ---------------------------------------------------------------------------
+# Ragged (non-uniform step) evaluation.
+# ---------------------------------------------------------------------------
+
+_FICCO_SCHEDULES = frozenset(STUDIED)
+
+
+def ragged_step_times(
+    m,
+    n,
+    k,
+    b,
+    frac,
+    machine: MachineSpec,
+    sched: Schedule,
+    *,
+    dma: bool = True,
+    dma_into_place: bool = False,
+):
+    """Per-step stream times of a ragged FiCCO decomposition (one machine).
+
+    ``frac`` is the ``(S, P)`` per-step fraction matrix; step ``s`` of
+    scenario ``i`` carries ``frac[i, s]`` of the decomposed dimension
+    (capacity rows for the 1D schedules, K columns for 2D), so its comm
+    chunk, gathered GEMM rows and gather/scatter traffic all scale with
+    it.  The uniform engine is the special case ``frac[i, s] == 1/g``
+    with ``P == g``.
+
+    Returns ``(comm_steps, compute_steps, deps, comm_active, comp_active,
+    ok)`` — lists over the (local-step +) P pipeline steps of ``(S,)``
+    arrays/masks, ready for the masked :func:`pipeline_vec`.  This is the
+    single source of truth for per-step times: the NumPy engine consumes
+    it batched and the scalar ``simulate(..., profile=...)`` path calls
+    it with ``S == 1``, so the two can only disagree in their pipeline
+    scans (which the differential tests pin to each other and to the
+    independent jax implementation).
+    """
+    if sched not in _FICCO_SCHEDULES:
+        raise ValueError(
+            f"ragged profiles apply to the FiCCO schedules, got {sched}"
+        )
+    g = machine.group
+    S = m.shape[0]
+    P = frac.shape[1]
+    dev_n = np.where(n % g == 0, n // g, n)
+    m_div = (m % g == 0) & (m > 0)
+    m_s = m // g
+    mf = m.astype(_F)
+    msf = m_s.astype(_F)
+    kf = k.astype(_F)
+
+    if sched is Schedule.UNIFORM_FUSED_2D:
+        degree, accumulate = 4, True
+        local = None
+        per_step_gemms = 1
+    elif sched is Schedule.UNIFORM_FUSED_1D:
+        degree, accumulate = 4, False
+        local = None
+        per_step_gemms = 1
+    elif sched is Schedule.HETERO_FUSED_1D:
+        degree, accumulate = 3, False
+        local = (m_s, dev_n, k)
+        per_step_gemms = 1
+    else:  # HETERO_UNFUSED_1D
+        degree, accumulate = 2, False
+        local = (m_s, dev_n, k)
+        per_step_gemms = g - 1
+    if dma_into_place:
+        degree = 2
+    c_cil = comm_cil_vec(m_s, dev_n, k, b, machine, degree=degree, dma=dma)
+
+    comm_steps, compute_steps = [], []
+    comm_active, comp_active = [], []
+    for s in range(P):
+        f = frac[:, s]
+        act = f > 0.0
+        if sched is Schedule.UNIFORM_FUSED_2D:
+            # The K reduction is cut raggedly; M stays whole per step.
+            k_s = f * kf
+            chunk_bytes = msf * k_s * b
+            rows, cols, inner = mf, dev_n, k_s
+            gather_bytes = mf * k_s * b
+            scatter_bytes = None
+        else:
+            chunk_bytes = (f * msf) * kf * b
+            cols, inner = dev_n, k
+            if sched is Schedule.UNIFORM_FUSED_1D:
+                rows = f * mf  # gathered step rows across the whole group
+                gather_bytes = rows * kf * b
+                scatter_bytes = rows * dev_n * b
+            elif sched is Schedule.HETERO_FUSED_1D:
+                rows = f * ((g - 1) * msf)  # remote rows only
+                gather_bytes = rows * kf * b
+                scatter_bytes = rows * dev_n * b
+            else:  # HETERO_UNFUSED_1D: g-1 per-peer GEMMs per step
+                rows = f * msf
+                gather_bytes = None
+                scatter_bytes = (g - 1) * rows * dev_n * b
+        if dma_into_place:
+            gather_bytes = None
+            scatter_bytes = None
+        t_comm = a2a_chunk_step_time_vec(chunk_bytes, machine) * c_cil
+        g_cil = gemm_cil_vec(
+            rows, cols, inner, b, machine, degree=degree, dma=dma
+        )
+        t_gemm = (
+            per_step_gemms
+            * gemm_exec_vec(
+                rows, cols, inner, b, machine, accumulate=accumulate
+            )
+            * g_cil
+        )
+        if gather_bytes is None:
+            t_gather = np.zeros(S)
+        else:
+            t_gather = np.where(
+                gather_bytes > 0,
+                hbm_move_time_vec(gather_bytes, machine),
+                0.0,
+            )
+        if scatter_bytes is None:
+            t_scatter = np.zeros(S)
+        else:
+            t_scatter = np.where(
+                scatter_bytes > 0,
+                hbm_move_time_vec(scatter_bytes, machine),
+                0.0,
+            )
+        t_step = np.maximum(t_gemm, t_gather + t_scatter)
+        comm_steps.append(t_comm)
+        comm_active.append(act)
+        compute_steps.append(t_step)
+        comp_active.append(act)
+
+    if local is not None:
+        t_local = gemm_exec_vec(
+            local[0], local[1], local[2], b, machine
+        ) * gemm_cil_vec(
+            local[0], local[1], local[2], b, machine, degree=degree, dma=dma
+        )
+        compute_steps = [t_local] + compute_steps
+        comp_active = [np.ones(S, dtype=bool)] + comp_active
+        deps: list[int | None] = [None] + list(range(P))
+    else:
+        deps = list(range(P))
+    return comm_steps, compute_steps, deps, comm_active, comp_active, m_div
+
+
+def _eval_one_machine_ragged(
+    rb: RaggedBatch,
+    machine: MachineSpec,
+    schedules,
+    dma: bool,
+    dma_into_place: bool,
+):
+    """All schedules for one machine over ragged scenarios; (L, S) arrays.
+
+    SERIAL and SHARD_P2P are profile-independent (they move the same
+    aggregate bytes whatever the skew) and replicate the uniform engine
+    exactly; the FiCCO schedules run the masked ragged scan.
+    """
+    g = machine.group
+    m, n, k, b = rb.m, rb.n, rb.k, rb.dtype_bytes
+    S = len(rb)
+
+    dev_n = np.where(n % g == 0, n // g, n)
+    mk_bytes = (m * k).astype(_F) * b
+    serial_comm = ag_serial_time_vec(mk_bytes, machine)
+    serial_gemm = gemm_exec_vec(m, dev_n, k, b, machine)
+
+    m_div = (m % g == 0) & (m > 0)
+    m_s = m // g
+
+    out = {
+        name: np.full((len(schedules), S), np.nan)
+        for name in ("total", "comm_busy", "compute_busy", "exposed")
+    }
+    steps = np.zeros(len(schedules), dtype=np.int64)
+    valid = np.zeros((len(schedules), S), dtype=bool)
+
+    def put(l, ok, total, comm_busy, compute_busy, exposed, n_steps):
+        out["total"][l] = np.where(ok, total, np.nan)
+        out["comm_busy"][l] = np.where(ok, comm_busy, np.nan)
+        out["compute_busy"][l] = np.where(ok, compute_busy, np.nan)
+        out["exposed"][l] = np.where(ok, exposed, np.nan)
+        steps[l] = n_steps
+        valid[l] = ok
+
+    for l, sched in enumerate(schedules):
+        if sched is Schedule.SERIAL:
+            total = serial_comm + serial_gemm
+            put(
+                l, np.ones(S, dtype=bool), total, serial_comm, serial_gemm,
+                serial_comm, 1,
+            )
+            continue
+        if sched is Schedule.SHARD_P2P:
+            shard_bytes = (m_s * k).astype(_F) * b
+            c_cil = comm_cil_vec(m_s, dev_n, k, b, machine, degree=2, dma=dma)
+            g_cil = gemm_cil_vec(m_s, dev_n, k, b, machine, degree=2, dma=dma)
+            t_p2p = p2p_step_time_vec(shard_bytes, machine) * c_cil
+            t_gemm = gemm_exec_vec(m_s, dev_n, k, b, machine) * g_cil
+            total, exposed, comm_sum, comp_sum = pipeline_vec(
+                [t_p2p] * (g - 1),
+                [t_gemm] * g,
+                [None] + list(range(g - 1)),
+            )
+            put(l, m_div, total, comm_sum, comp_sum, exposed, g)
+            continue
+        comm, compute, deps, c_act, w_act, ok = ragged_step_times(
+            m, n, k, b, rb.frac, machine, sched,
+            dma=dma, dma_into_place=dma_into_place,
+        )
+        total, exposed, comm_sum, comp_sum = pipeline_vec(
+            comm, compute, deps, c_act, w_act
+        )
+        put(l, ok, total, comm_sum, comp_sum, exposed, rb.max_steps)
+
+    return out, steps, valid, serial_comm, serial_gemm
+
+
+def evaluate_ragged_grid(
+    scenarios,
+    machines,
+    *,
+    dma: bool = True,
+    dma_into_place: bool = False,
+    schedules: tuple[Schedule, ...] = GRID_SCHEDULES,
+) -> GridResult:
+    """Ragged counterpart of :func:`evaluate_grid`.
+
+    ``scenarios`` is a :class:`RaggedBatch` or a list of
+    :class:`~repro.core.workload.RaggedScenario`.  Mixed profile lengths
+    batch together (padded + masked).  Returns the same
+    :class:`GridResult` shape as the uniform engine, so everything
+    downstream (``GridExploration``, benchmarks, tuners) works unchanged.
+    """
+    rb = _as_ragged_batch(scenarios)
+    machines = tuple(machines)
+    L, S, M = len(schedules), len(rb), len(machines)
+    total = np.empty((L, S, M))
+    comm_busy = np.empty((L, S, M))
+    compute_busy = np.empty((L, S, M))
+    exposed = np.empty((L, S, M))
+    steps = np.empty((L, M), dtype=np.int64)
+    serial_comm = np.empty((S, M))
+    serial_gemm = np.empty((S, M))
+    valid = np.empty((L, S, M), dtype=bool)
+    for j, machine in enumerate(machines):
+        out, st, va, sc, sg = _eval_one_machine_ragged(
+            rb, machine, schedules, dma, dma_into_place
+        )
+        total[:, :, j] = out["total"]
+        comm_busy[:, :, j] = out["comm_busy"]
+        compute_busy[:, :, j] = out["compute_busy"]
+        exposed[:, :, j] = out["exposed"]
+        steps[:, j] = st
+        valid[:, :, j] = va
+        serial_comm[:, j] = sc
+        serial_gemm[:, j] = sg
+    return GridResult(
+        schedules=tuple(schedules),
+        scenarios=rb,
+        machines=machines,
+        total=total,
+        comm_busy=comm_busy,
+        compute_busy=compute_busy,
+        exposed=exposed,
+        steps=steps,
+        serial_comm=serial_comm,
+        serial_gemm=serial_gemm,
+        valid=valid,
+        dma=dma,
+    )
+
+
 def evaluate_grid(
     scenarios,
     machines,
@@ -586,8 +961,11 @@ __all__ = [
     "GRID_SCHEDULES",
     "SCHEDULE_INDEX",
     "ScenarioBatch",
+    "RaggedBatch",
     "GridResult",
     "evaluate_grid",
+    "evaluate_ragged_grid",
+    "ragged_step_times",
     "gemm_exec_vec",
     "comm_time_vec",
     "ag_serial_time_vec",

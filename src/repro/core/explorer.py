@@ -14,7 +14,13 @@ import dataclasses
 import numpy as np
 
 from repro.core import inefficiency as ineff
-from repro.core.batch import GridResult, ScenarioBatch, evaluate_grid
+from repro.core.batch import (
+    GridResult,
+    RaggedBatch,
+    ScenarioBatch,
+    evaluate_grid,
+    evaluate_ragged_grid,
+)
 from repro.core.heuristics import (
     HeuristicDecision,
     select_schedule,
@@ -31,7 +37,7 @@ from repro.core.schedule_types import (
     Uniformity,
 )
 from repro.core.simulator import SimResult, simulate
-from repro.core.workload import GemmShape, Scenario
+from repro.core.workload import GemmShape, RaggedScenario, Scenario
 
 
 @dataclasses.dataclass(frozen=True)
@@ -154,23 +160,38 @@ def explore_grid(
     through the jit-compiled on-accelerator engine in
     ``repro.autotune.jaxgrid`` (identical numbers within 1e-5; faster
     per sweep once compiled, and differentiable for calibration).
+
+    **Ragged scenarios** (:class:`~repro.core.workload.RaggedScenario`
+    lists / a :class:`~repro.core.batch.RaggedBatch`, e.g. from
+    ``workload.ragged_scenario_grid``) route through the masked ragged
+    engines on either backend; the heuristic picks then carry the
+    skew-aware serial gate (``imbalance``).
     """
+    ragged = isinstance(scenarios, RaggedBatch) or (
+        isinstance(scenarios, (list, tuple))
+        and len(scenarios) > 0
+        and isinstance(scenarios[0], RaggedScenario)
+    )
     if backend == "jax":
         from repro.autotune import jaxgrid  # local: core must not need jax
 
-        eval_fn = jaxgrid.evaluate_grid
+        eval_fn = (
+            jaxgrid.evaluate_ragged_grid if ragged else jaxgrid.evaluate_grid
+        )
     elif backend == "numpy":
-        eval_fn = evaluate_grid
+        eval_fn = evaluate_ragged_grid if ragged else evaluate_grid
     else:
         raise ValueError(f"backend must be 'numpy'|'jax', got {backend!r}")
     grid = eval_fn(
         scenarios, machines, dma=dma, dma_into_place=dma_into_place
     )
     sb = grid.scenarios
+    imbalance = sb.imbalance if isinstance(sb, RaggedBatch) else None
     heuristic = np.stack(
         [
             select_schedule_batch(
-                sb.m, sb.n, sb.k, sb.dtype_bytes, machine, tau=tau
+                sb.m, sb.n, sb.k, sb.dtype_bytes, machine, tau=tau,
+                imbalance=imbalance,
             )
             for machine in grid.machines
         ],

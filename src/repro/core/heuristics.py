@@ -191,6 +191,7 @@ def select_schedule(
     tau: float | None = None,
     allow_serial_guard: bool = True,
     serial_gate: float | None = None,
+    profile=None,
 ) -> HeuristicDecision:
     """Static schedule pick (Fig. 12a tree + the learned serial gate).
 
@@ -198,6 +199,13 @@ def select_schedule(
     ``float("inf")`` to disable the gate (the paper's original tree).
     The gate only applies when ``allow_serial_guard`` is True — both are
     "stay serial" escapes the paper does not model.
+
+    ``profile`` (a :class:`~repro.core.workload.StepProfile`) makes the
+    gate **skew-aware**: a ragged decomposition's largest chunk sets the
+    pipeline's critical step, so the chunking-overhead score is scaled
+    by the profile's imbalance (max/mean active-step share) — heavily
+    skewed EP dispatches fall back to serial sooner, which is exactly
+    what the ragged grid's analytic optima show.
     """
     metric = gemm.otb * gemm.bytes_mt  # == gemm.flops
     t = machine_threshold(machine, tau)
@@ -213,7 +221,8 @@ def select_schedule(
             if serial_gate is not None
             else machine_serial_gate(machine)
         )
-        if serial_gate_score(gemm, machine) > gate:
+        imbalance = 1.0 if profile is None else float(profile.imbalance)
+        if serial_gate_score(gemm, machine) * imbalance > gate:
             return HeuristicDecision(
                 Schedule.SERIAL, metric, t,
                 "comm-bound: chunking overhead exceeds hidden compute "
@@ -250,12 +259,17 @@ def select_schedule_batch(
     tau: float | None = None,
     allow_serial_guard: bool = True,
     serial_gate: float | None = None,
+    imbalance=None,
 ):
     """Vectorized :func:`select_schedule` over ``(S,)`` shape arrays.
 
     Returns an int array of indices into ``repro.core.batch.GRID_SCHEDULES``
     (the same order the batched simulator uses), replicating the scalar
     decision tree branch for branch.
+
+    ``imbalance`` is the per-scenario ragged-profile imbalance factor
+    (``RaggedBatch.imbalance``; 1.0 == uniform): it scales the serial
+    gate score exactly like the scalar tree's ``profile`` argument.
     """
     from repro.core.batch import SCHEDULE_INDEX  # local: avoids a cycle
 
@@ -274,8 +288,9 @@ def select_schedule_batch(
             if serial_gate is not None
             else machine_serial_gate(machine)
         )
+        imb = 1.0 if imbalance is None else np.asarray(imbalance, np.float64)
         stay_serial = (flops < MIN_DECOMPOSE_FLOPS) | (
-            serial_gate_score_batch(m, n, k, b, machine) > gate
+            serial_gate_score_batch(m, n, k, b, machine) * imb > gate
         )
     else:
         stay_serial = np.zeros(m.shape, dtype=bool)

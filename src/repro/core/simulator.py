@@ -22,7 +22,7 @@ import dataclasses
 from repro.core import inefficiency as ineff
 from repro.core.machine import MachineSpec
 from repro.core.schedule_types import Schedule
-from repro.core.workload import GemmShape
+from repro.core.workload import GemmShape, StepProfile
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,6 +76,45 @@ def _pipeline(
     return max(t_comp, finish_comm[-1] if finish_comm else 0.0), exposed
 
 
+def _pipeline_masked(
+    comm: list[float],
+    compute: list[float],
+    deps: list[int | None],
+    comm_active: list[bool],
+    comp_active: list[bool],
+) -> tuple[float, float, float, float]:
+    """Masked ragged pipeline: the scalar twin of the batched engines'
+    masked scans (``batch.pipeline_vec`` with masks, ``jaxgrid.
+    pipeline_jax``).
+
+    Inactive steps add exactly 0.0 time on their channel and can never
+    stall the compute channel, so a zero-padded profile reproduces its
+    trimmed recurrence bit-for-bit.  Returns ``(total, exposed,
+    comm_busy, compute_busy)``.
+    """
+    finish: list[float] = []
+    t = 0.0
+    for c, a in zip(comm, comm_active):
+        t = t + (c if a else 0.0)
+        finish.append(t)
+    t_comp = 0.0
+    exposed = 0.0
+    comp_sum = 0.0
+    for i, work in enumerate(compute):
+        a = comp_active[i]
+        w = work if a else 0.0
+        dep = deps[i]
+        if dep is not None and a:
+            ready = finish[dep]
+            if ready > t_comp:
+                exposed += ready - t_comp
+                t_comp = ready
+        t_comp += w
+        comp_sum += w
+    comm_sum = finish[-1] if finish else 0.0
+    return max(t_comp, comm_sum), exposed, comm_sum, comp_sum
+
+
 def simulate(
     gemm: GemmShape,
     machine: MachineSpec,
@@ -83,6 +122,7 @@ def simulate(
     *,
     dma: bool = True,
     dma_into_place: bool = False,
+    profile: StepProfile | None = None,
 ) -> SimResult:
     """Simulate one data-dependent AG->GEMM (or A2A->GEMM) scenario.
 
@@ -93,6 +133,13 @@ def simulate(
     residual time.  On the paper's GPU realization those streams exist
     because receive buffers are separate (hence uniform schedules' HIGH
     CIL signature); TPU strided remote DMA removes them.
+
+    ``profile`` selects the **ragged** path: per-step chunk sizes follow
+    the :class:`~repro.core.workload.StepProfile` (capacity-skewed EP
+    dispatch, hetero-chunk FiCCO variants) instead of the paper's
+    uniform 1/g split.  SERIAL and SHARD_P2P are profile-independent —
+    they move the same aggregate bytes whatever the skew — so a profile
+    passed with those schedules is accepted and ignored.
     """
     g = machine.group
     b = gemm.dtype_bytes
@@ -114,6 +161,11 @@ def simulate(
     if schedule is Schedule.SHARD_P2P:
         return _sim_shard_p2p(gemm, dev, machine, serial_comm, serial_gemm, dma)
 
+    if profile is not None:
+        return _sim_ficco_ragged(
+            gemm, machine, schedule, profile, serial_comm, serial_gemm,
+            dma, dma_into_place,
+        )
     return _sim_ficco(
         gemm, dev, machine, schedule, serial_comm, serial_gemm, dma,
         dma_into_place,
@@ -246,6 +298,51 @@ def _sim_ficco(
     total, exposed = _pipeline(comm, compute, deps)
     return SimResult(
         schedule, total, sum(comm), sum(compute), exposed, n_comm,
+        serial_comm, serial_gemm,
+    )
+
+
+def _sim_ficco_ragged(
+    gemm: GemmShape,
+    machine: MachineSpec,
+    schedule: Schedule,
+    profile: StepProfile,
+    serial_comm: float,
+    serial_gemm: float,
+    dma: bool,
+    dma_into_place: bool,
+) -> SimResult:
+    """Ragged FiCCO: per-step times from the shared step-time model
+    (``batch.ragged_step_times`` with S == 1), scanned by the scalar
+    masked pipeline.  Raises ValueError exactly where the batched
+    engine's validity mask is False (indivisible M)."""
+    import numpy as np  # local: the scalar core otherwise avoids numpy
+
+    from repro.core import batch as _batch  # local: avoids a cycle
+
+    m = np.array([gemm.m], dtype=np.int64)
+    n = np.array([gemm.n], dtype=np.int64)
+    k = np.array([gemm.k], dtype=np.int64)
+    b = np.array([gemm.dtype_bytes], dtype=np.int64)
+    frac = np.array([profile.fractions], dtype=np.float64)
+    comm_v, compute_v, deps, c_act, w_act, ok = _batch.ragged_step_times(
+        m, n, k, b, frac, machine, schedule,
+        dma=dma, dma_into_place=dma_into_place,
+    )
+    if not bool(ok[0]):
+        raise ValueError(
+            f"M={gemm.m} not divisible by group {machine.group} for "
+            f"ragged {schedule}"
+        )
+    comm = [float(c[0]) for c in comm_v]
+    compute = [float(w[0]) for w in compute_v]
+    comm_active = [bool(a[0]) for a in c_act]
+    comp_active = [bool(a[0]) for a in w_act]
+    total, exposed, comm_busy, compute_busy = _pipeline_masked(
+        comm, compute, deps, comm_active, comp_active
+    )
+    return SimResult(
+        schedule, total, comm_busy, compute_busy, exposed, profile.steps,
         serial_comm, serial_gemm,
     )
 

@@ -155,6 +155,225 @@ def synthetic_scenarios(count: int = 16, seed: int = 0) -> list[Scenario]:
     return out
 
 
+# --------------------------------------------------------------------------
+# Ragged step profiles: non-uniform per-step work (capacity-skewed EP
+# dispatch, hetero-chunk FiCCO variants).
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StepProfile:
+    """Per-step work fractions of a non-uniform FiCCO decomposition.
+
+    ``fractions[s]`` is the share of the decomposed dimension (capacity
+    rows for 1D schedules, K columns for 2D) carried by step ``s``; the
+    shares sum to 1.  Zero entries are legal and model masked tail steps
+    (a padded profile) or experts that received no tokens — the engines
+    charge them exactly zero time and they can never stall the pipeline.
+
+    The uniform ``g``-step schedule the paper studies is
+    ``StepProfile.uniform(g)``; everything else widens the design space
+    beyond the paper (ROADMAP "Non-uniform step lists").
+    """
+
+    fractions: tuple[float, ...]
+    name: str = "custom"
+
+    def __post_init__(self):
+        if not self.fractions:
+            raise ValueError("profile needs at least one step")
+        if any(f < 0.0 for f in self.fractions):
+            raise ValueError(f"negative step fraction in {self.fractions}")
+        total = sum(self.fractions)
+        if not math.isclose(total, 1.0, rel_tol=1e-9, abs_tol=1e-12):
+            raise ValueError(f"fractions must sum to 1, got {total!r}")
+
+    @property
+    def steps(self) -> int:
+        return len(self.fractions)
+
+    @property
+    def active_steps(self) -> int:
+        return sum(1 for f in self.fractions if f > 0.0)
+
+    @property
+    def imbalance(self) -> float:
+        """max/mean share over *active* steps: 1.0 == uniform."""
+        act = [f for f in self.fractions if f > 0.0]
+        return max(act) * len(act)
+
+    @property
+    def is_uniform(self) -> bool:
+        return all(
+            math.isclose(f, 1.0 / self.steps, rel_tol=1e-12)
+            for f in self.fractions
+        )
+
+    def padded(self, steps: int) -> "StepProfile":
+        """Zero-extend to ``steps`` entries (for batching mixed lengths)."""
+        if steps < self.steps:
+            raise ValueError(f"cannot pad {self.steps} steps down to {steps}")
+        return dataclasses.replace(
+            self, fractions=self.fractions + (0.0,) * (steps - self.steps)
+        )
+
+    def trimmed(self) -> "StepProfile":
+        """Drop trailing zero steps (inverse of :meth:`padded`)."""
+        last = max(
+            (s for s, f in enumerate(self.fractions) if f > 0.0), default=0
+        )
+        return dataclasses.replace(self, fractions=self.fractions[: last + 1])
+
+    def quantize(self, total: int) -> tuple[int, ...]:
+        """Integer per-step sizes summing to ``total`` (largest remainder).
+
+        Deterministic Hamilton rounding: floor every share, then hand the
+        remainder out by descending fractional part (ties to the lower
+        step index).  This is what the kernel layer uses to turn a load
+        profile into concrete chunk row counts.
+        """
+        raw = [f * total for f in self.fractions]
+        base = [int(math.floor(r)) for r in raw]
+        rem = total - sum(base)
+        order = sorted(
+            range(self.steps), key=lambda s: (-(raw[s] - base[s]), s)
+        )
+        for s in order[:rem]:
+            base[s] += 1
+        return tuple(base)
+
+    def digest(self) -> str:
+        """Short stable identity string (autotune cache keys).
+
+        Computed on the trimmed profile: zero padding is proven not to
+        change any engine figure, so a padded profile must share its
+        cache key with its trimmed twin rather than fragment the store.
+        """
+        p = self.trimmed()
+        if p.is_uniform:
+            return f"u{p.steps}"
+        import hashlib
+
+        h = hashlib.sha256()
+        for f in p.fractions:
+            h.update(repr(round(f, 12)).encode())
+        return f"{p.name}-{p.steps}-{h.hexdigest()[:10]}"
+
+    # -- constructors ---------------------------------------------------
+
+    @classmethod
+    def from_weights(cls, weights, name: str = "custom") -> "StepProfile":
+        weights = [float(w) for w in weights]
+        total = sum(weights)
+        if total <= 0.0:
+            raise ValueError("weights must have positive sum")
+        return cls(tuple(w / total for w in weights), name=name)
+
+    @classmethod
+    def uniform(cls, steps: int) -> "StepProfile":
+        return cls((1.0 / steps,) * steps, name="uniform")
+
+    @classmethod
+    def skewed(cls, steps: int, skew: float) -> "StepProfile":
+        """Geometric capacity skew: step ``s`` carries weight ``skew**s``.
+
+        ``skew=1`` is uniform; ``skew=2`` means each step carries twice
+        the previous one's tokens (a hot-expert tail ramp); ``skew<1``
+        front-loads.  The skew-factor sweep of the ragged scenario grid
+        walks this knob.
+        """
+        if skew <= 0.0:
+            raise ValueError(f"skew must be > 0, got {skew}")
+        return cls.from_weights(
+            [skew**s for s in range(steps)], name=f"skew{skew:g}"
+        )
+
+    @classmethod
+    def zipf(cls, steps: int, alpha: float = 1.0) -> "StepProfile":
+        """Zipf expert-load profile: weight ``1/(s+1)**alpha`` (hot head)."""
+        return cls.from_weights(
+            [1.0 / (s + 1) ** alpha for s in range(steps)],
+            name=f"zipf{alpha:g}",
+        )
+
+    @classmethod
+    def top_k_hot(
+        cls, steps: int, hot: int = 1, hot_share: float = 0.5
+    ) -> "StepProfile":
+        """``hot`` steps split ``hot_share`` of the tokens; the rest split
+        the remainder (top-k routing with a few saturated experts)."""
+        if not 0 < hot < steps:
+            raise ValueError(f"need 0 < hot < steps, got hot={hot}")
+        if not 0.0 < hot_share < 1.0:
+            raise ValueError(f"hot_share must be in (0, 1), got {hot_share}")
+        cold = steps - hot
+        return cls.from_weights(
+            [hot_share / hot] * hot + [(1.0 - hot_share) / cold] * cold,
+            name=f"top{hot}h{hot_share:g}",
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class RaggedScenario:
+    """A collective -> GEMM scenario with a non-uniform step profile.
+
+    The profile describes how the decomposed dimension is split across
+    FiCCO steps (e.g. per-chunk token counts of a capacity-skewed EP
+    dispatch).  SERIAL and SHARD_P2P are profile-independent: they move
+    the same aggregate bytes whatever the skew.
+    """
+
+    name: str
+    parallelism: str
+    model: str
+    gemm: GemmShape
+    profile: StepProfile
+    collective: CollectiveKind = CollectiveKind.ALL_TO_ALL
+
+    @classmethod
+    def from_scenario(
+        cls, scenario: Scenario, profile: StepProfile, suffix: str = ""
+    ) -> "RaggedScenario":
+        return cls(
+            name=scenario.name + (suffix or f"/{profile.name}"),
+            parallelism=scenario.parallelism,
+            model=scenario.model,
+            gemm=scenario.gemm,
+            profile=profile,
+            collective=scenario.collective,
+        )
+
+
+def ragged_scenario_grid(
+    *,
+    steps: int = 8,
+    skews: tuple[float, ...] = (1.0, 2.0, 4.0),
+    zipf_alphas: tuple[float, ...] = (1.0,),
+    top_k: tuple[tuple[int, float], ...] = ((2, 0.6),),
+    scenarios=None,
+) -> list[RaggedScenario]:
+    """Capacity-skewed EP-dispatch scenario families.
+
+    Crosses the EP rows of Table I (or any caller-supplied scenarios)
+    with a skew-factor sweep plus Zipf and top-k-hot expert load
+    profiles — the non-uniform step lists real MoE serving produces.
+    Feed the result straight to ``explore_grid`` (both backends accept
+    ragged scenarios) or ``repro.core.batch.evaluate_ragged_grid``.
+    """
+    if scenarios is None:
+        scenarios = [s for s in TABLE_I if s.parallelism == "EP"]
+    profiles: list[StepProfile] = [
+        StepProfile.skewed(steps, s) for s in skews
+    ]
+    profiles += [StepProfile.zipf(steps, a) for a in zipf_alphas]
+    profiles += [StepProfile.top_k_hot(steps, h, share) for h, share in top_k]
+    out: list[RaggedScenario] = []
+    for sc in scenarios:
+        for p in profiles:
+            out.append(RaggedScenario.from_scenario(sc, p))
+    return out
+
+
 def tp_token_rows(global_batch: int, seq_len: int, dp: int = 16) -> int:
     """Per-replica token rows of one TP-SP block (M of its AG->GEMMs)."""
     b = global_batch // dp if global_batch >= dp else global_batch
@@ -203,7 +422,9 @@ def scenario_grid(
     decomposes them evenly (the batched engine masks indivisible
     combinations anyway).  Pair with :func:`machine_grid` for the
     machine axis; the full cross is what ``benchmarks/bench_sweep.py``
-    pushes through ``explore_grid``.
+    pushes through ``explore_grid``.  The non-uniform counterpart is
+    :func:`ragged_scenario_grid` (capacity-skewed EP families), which
+    ``explore_grid`` also accepts directly.
     """
     from repro.configs import ARCHS, get_config  # local: keep layering thin
 

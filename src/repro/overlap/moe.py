@@ -61,6 +61,20 @@ def serial_a2a_ffn(
     return back.reshape(e, c, d)
 
 
+def skewed_chunk_sizes(capacity: int, profile) -> tuple[int, ...]:
+    """Integer per-chunk capacity slice sizes following an expert load
+    profile (:class:`repro.core.workload.StepProfile`).
+
+    Deterministic largest-remainder quantization; zero-sized chunks
+    (masked profile tail, experts that received nothing) are kept in the
+    tuple so chunk indices line up with profile steps — the kernel path
+    simply skips them.
+    """
+    sizes = profile.quantize(capacity)
+    assert sum(sizes) == capacity
+    return sizes
+
+
 def ficco_a2a_ffn(
     x: jax.Array,
     w_up: jax.Array,
@@ -68,20 +82,48 @@ def ficco_a2a_ffn(
     *,
     axis_name: str,
     chunks: int | None = None,
+    chunk_sizes=None,
+    profile=None,
 ) -> jax.Array:
     """FiCCO: capacity dimension cut into chunks; each chunk's dispatch
     A2A overlaps the previous chunk's expert GEMM (XLA async collectives
-    on the ICI DMA engines do the hiding)."""
+    on the ICI DMA engines do the hiding).
+
+    The default cut is uniform (``chunks`` slices of ``C/chunks``).  The
+    **skew-aware path** follows a non-uniform expert load instead: pass
+    ``chunk_sizes`` (static ints summing to the capacity ``C``) or a
+    ``profile`` (:class:`repro.core.workload.StepProfile`, quantized via
+    :func:`skewed_chunk_sizes`).  Hot-expert token mass then travels in
+    proportionally larger chunks whose expert GEMMs are also larger —
+    the layout the ragged schedule engine (``simulate(...,
+    profile=...)``, ``evaluate_ragged_grid``) models.  All sizes are
+    trace-time constants, so the loop unrolls jit-compatibly with one
+    dispatch/combine A2A pair per non-empty chunk.
+    """
     g = axis_size(axis_name)
-    n_chunks = chunks or g
     e, c, d = x.shape
-    if c % n_chunks:
-        return serial_a2a_ffn(x, w_up, w_down, axis_name=axis_name)
-    c_c = c // n_chunks
+    if chunk_sizes is None and profile is not None:
+        chunk_sizes = skewed_chunk_sizes(c, profile)
+    if chunk_sizes is None:
+        n_chunks = chunks or g
+        if c % n_chunks:
+            return serial_a2a_ffn(x, w_up, w_down, axis_name=axis_name)
+        chunk_sizes = (c // n_chunks,) * n_chunks
+    else:
+        chunk_sizes = tuple(int(s) for s in chunk_sizes)
+        if any(s < 0 for s in chunk_sizes) or sum(chunk_sizes) != c:
+            raise ValueError(
+                f"chunk_sizes {chunk_sizes} must be >= 0 and sum to "
+                f"capacity {c}"
+            )
     e_local = e // g
     outs = []
-    for s in range(n_chunks):
-        piece = lax.dynamic_slice(x, (0, s * c_c, 0), (e, c_c, d))
+    offset = 0
+    for c_c in chunk_sizes:
+        if c_c == 0:
+            continue  # empty chunk (masked tail / unloaded expert slot)
+        piece = lax.dynamic_slice(x, (0, offset, 0), (e, c_c, d))
+        offset += c_c
         recv = lax.all_to_all(
             piece.reshape(g, e_local, c_c, d),
             axis_name,
@@ -93,7 +135,9 @@ def ficco_a2a_ffn(
         send = expert_out.reshape(e_local, g, c_c, d).transpose(1, 0, 2, 3)
         back = lax.all_to_all(send, axis_name, split_axis=0, concat_axis=0)
         outs.append(back.reshape(e, c_c, d))
+    if len(outs) == 1:
+        return outs[0]
     return jnp.concatenate(outs, axis=1)
 
 
-__all__ = ["serial_a2a_ffn", "ficco_a2a_ffn"]
+__all__ = ["serial_a2a_ffn", "ficco_a2a_ffn", "skewed_chunk_sizes"]

@@ -411,6 +411,145 @@ class TestTunerAndCache:
         assert s is GRID_SCHEDULES[int(grid.best_idx()[0, 0])]
 
 
+class TestCacheSchemaV2:
+    """Schema v2: the ragged step-profile digest joined the key schema
+    (ISSUE 3).  v1 stores written by PR 2 must be invalidated cleanly —
+    no KeyError on old entries, no old decision surfacing under a new
+    key — and the clear script must handle both file names."""
+
+    def test_schema_and_default_path_bumped(self):
+        from repro.autotune import SCHEMA_VERSION, default_cache_path
+
+        assert SCHEMA_VERSION == 2
+        assert default_cache_path().endswith("autotune-v2.json")
+
+    def _write_v1_store(self, directory):
+        """A realistic PR-2-era store: v1 schema, profile-less keys."""
+        import jax
+
+        os.makedirs(directory, exist_ok=True)
+        path = os.path.join(directory, "autotune-v1.json")
+        with open(path, "w") as f:
+            json.dump(
+                {
+                    "schema": 1,
+                    "jax": jax.__version__,
+                    "entries": {
+                        "mi300x-8/g8/m65536/n8192/k8192/b2": {
+                            "schedule": "hetero-fused-1d",
+                            "source": "measured",
+                            "model_total_s": None,
+                            "measured_total_s": 1e-9,  # poisoned-fast
+                        }
+                    },
+                },
+                f,
+            )
+        return path
+
+    def test_v1_store_invalidated_cleanly(self):
+        """A v1 file on disk never feeds a v2 tuner: the tuner starts
+        cold (no KeyError, no stale decision) and re-tunes under the
+        profile-suffixed key."""
+        from repro.autotune import Autotuner, AutotuneCache
+
+        cache_dir = os.environ["REPRO_AUTOTUNE_CACHE_DIR"]
+        self._write_v1_store(cache_dir)
+        c = AutotuneCache()
+        assert len(c) == 0  # old entries invisible, not an error
+        t = Autotuner(cache=c)
+        gemm = GemmShape(65536, 8192, 8192)
+        d = t.pick(gemm, MI300X)  # same site the v1 store "measured"
+        assert d.source == "analytic"  # re-tuned, not the stale winner
+        assert all(key.endswith("/u8") for key in c.entries)
+
+    def test_v1_payload_at_v2_path_treated_as_empty(self):
+        """Even a v1-schema payload written AT the v2 file name is
+        rejected wholesale by the schema stamp."""
+        from repro.autotune import AutotuneCache, default_cache_path
+
+        import jax
+
+        path = default_cache_path()
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(
+                {
+                    "schema": 1,
+                    "jax": jax.__version__,
+                    "entries": {"old/key": {"schedule": "serial"}},
+                },
+                f,
+            )
+        assert len(AutotuneCache()) == 0
+
+    def test_keys_carry_profile_digest(self):
+        from repro.autotune import Autotuner, TuneKey
+        from repro.core import StepProfile
+
+        gemm = GemmShape(65536, 8192, 8192)
+        assert str(TuneKey.for_gemm(gemm, MI300X)).endswith("/b2/u8")
+        skew = StepProfile.skewed(8, 4.0)
+        key = str(TuneKey.for_gemm(gemm, MI300X, profile=skew))
+        assert key.endswith("/" + skew.digest())
+
+        t = Autotuner(backend="numpy")
+        d_uniform = t.pick(gemm, MI300X)
+        d_skew = t.pick(gemm, MI300X, profile=skew)
+        assert len(t.cache.entries) == 2  # distinct keys coexist
+        assert d_uniform.source == "analytic"
+        assert d_skew.source == "analytic"
+        # both hit their own record on re-query
+        assert t.pick(gemm, MI300X).source == "cache"
+        assert t.pick(gemm, MI300X, profile=skew).source == "cache"
+
+    def test_ragged_pick_not_filtered_by_uniform_runtime_rule(self):
+        """Profile-keyed picks go to the ragged kernel path (arbitrary
+        quantized chunk sizes), so ficco_linear's one-level-deeper
+        divisibility filter must not apply: m=96, g=8 has m%g==0 but
+        (m/g)%g!=0 — the uniform pick falls back to serial/p2p, while
+        the ragged pick may keep the model's FiCCO winner."""
+        from repro.autotune import Autotuner
+        from repro.core import StepProfile
+        from repro.core.batch import evaluate_ragged_grid, RaggedBatch
+        from repro.core.workload import RaggedScenario
+
+        gemm = GemmShape(65544, 8192, 8192)  # m%8==0 but (m/8)%8 != 0
+        profile = StepProfile.skewed(8, 2.0)
+        t = Autotuner(backend="numpy")
+        d = t.pick(gemm, MI300X, profile=profile)
+        rb = RaggedBatch.from_ragged_scenarios(
+            [RaggedScenario("x", "EP", "t", gemm, profile)]
+        )
+        grid = evaluate_ragged_grid(rb, (MI300X,))
+        best = GRID_SCHEDULES[int(grid.best_idx()[0, 0])]
+        assert d.schedule is best  # the model optimum, unfiltered
+
+    def test_padded_profile_shares_cache_key_with_trimmed(self):
+        from repro.core import StepProfile
+
+        p = StepProfile.skewed(5, 3.0)
+        assert p.padded(9).digest() == p.digest()
+        assert StepProfile.uniform(4).padded(8).digest() == "u4"
+
+    def test_clear_script_handles_old_and_new_names(self, tmp_path):
+        from repro.autotune import AutotuneCache
+
+        cache_dir = str(tmp_path / "cc")
+        v1 = self._write_v1_store(cache_dir)
+        env = dict(os.environ, REPRO_AUTOTUNE_CACHE_DIR=cache_dir)
+        c = AutotuneCache(path=os.path.join(cache_dir, "autotune-v2.json"))
+        c.put("k/u8", {"schedule": "serial", "source": "analytic"})
+        v2 = c.path
+        assert os.path.exists(v1) and os.path.exists(v2)
+        out = subprocess.run(
+            [sys.executable, "scripts/clear_autotune_cache.py"],
+            env=env, capture_output=True, text=True,
+        )
+        assert out.returncode == 0, out.stderr
+        assert not os.path.exists(v1) and not os.path.exists(v2)
+
+
 _ROUNDTRIP_SCRIPT = r"""
 import functools, json, os, sys
 import numpy as np

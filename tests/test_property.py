@@ -20,16 +20,27 @@ from repro.core import (
     TPU_V5E,
     GemmShape,
     Schedule,
+    StepProfile,
     gemm_dil,
     gemm_exec,
     select_schedule,
     simulate,
 )
+from repro.core.simulator import _pipeline_masked
 from repro.core.workload import geomean
 from repro.kernels.chunked_gemm import chunked_matmul
 from repro.models.layers import blockwise_attention
 
 dims = st.sampled_from([1024, 2048, 4096, 8192, 16384, 65536, 131072])
+
+# Ragged step profiles: raw per-step weights (zeros allowed — masked
+# steps), normalized by StepProfile.from_weights.
+ragged_weights = st.lists(
+    st.floats(min_value=0.0, max_value=1.0, allow_nan=False),
+    min_size=1,
+    max_size=8,
+).filter(lambda ws: sum(ws) > 1e-6)
+step_times = st.floats(min_value=1e-6, max_value=10.0, allow_nan=False)
 
 
 class TestCostModelProperties:
@@ -73,6 +84,144 @@ class TestCostModelProperties:
     def test_serial_equals_parts(self, m, n, k):
         r = simulate(GemmShape(m, n, k), MI300X, Schedule.SERIAL)
         assert abs(r.total - (r.serial_comm + r.serial_gemm)) < 1e-12
+
+
+def _coherent_steps(profile: StepProfile, c: float, w: float):
+    """Step time lists where comm AND compute scale with each step's
+    share (total comm time == n*c*sum(f) == c*n/n... fixed totals)."""
+    n = profile.steps
+    comm = [n * f * c for f in profile.fractions]
+    compute = [n * f * w for f in profile.fractions]
+    active = [f > 0.0 for f in profile.fractions]
+    return comm, compute, active
+
+
+class TestRaggedPipelineProperties:
+    """Invariants of the masked ragged pipeline (ISSUE 3 satellite).
+
+    All at the pipeline-recurrence level, where totals are linear in the
+    step times and the math is exact: fixed total work == fixed channel
+    sums whatever the profile.
+    """
+
+    @given(weights=ragged_weights, c=step_times, w=step_times)
+    @settings(max_examples=50, deadline=None)
+    def test_total_bounded_by_channel_sums(self, weights, c, w):
+        """max(comm, compute) <= total <= comm + compute, any skew."""
+        p = StepProfile.from_weights(weights)
+        comm, compute, active = _coherent_steps(p, c, w)
+        deps = list(range(p.steps))
+        total, exposed, cs, ws = _pipeline_masked(
+            comm, compute, deps, active, active
+        )
+        slack = 1e-9 * (cs + ws)
+        assert max(cs, ws) - slack <= total <= cs + ws + slack
+        assert 0.0 <= exposed <= cs + slack
+
+    @given(weights=ragged_weights, c=step_times, w=step_times)
+    @settings(max_examples=50, deadline=None)
+    def test_dependency_free_totals_permutation_invariant(self, weights, c, w):
+        """With no cross-channel deps the total is max of the channel
+        sums — invariant under any permutation of the step lists."""
+        p = StepProfile.from_weights(weights)
+        comm, compute, active = _coherent_steps(p, c, w)
+        deps = [None] * p.steps
+        total, _, cs, ws = _pipeline_masked(
+            comm, compute, deps, active, active
+        )
+        assert total == pytest.approx(max(cs, ws), rel=1e-12)
+        rev = _pipeline_masked(
+            comm[::-1], compute[::-1], deps, active[::-1], active[::-1]
+        )
+        assert rev[0] == pytest.approx(total, rel=1e-12)
+
+    @given(weights=ragged_weights, c=step_times, w=step_times)
+    @settings(max_examples=50, deadline=None)
+    def test_one_chunk_concentration_is_serialization_upper_bound(
+        self, weights, c, w
+    ):
+        """Concentrating ALL work into a single chunk fully serializes
+        the pipeline (total == comm + compute); every other profile at
+        the same channel sums does no worse."""
+        p = StepProfile.from_weights(weights)
+        comm, compute, active = _coherent_steps(p, c, w)
+        deps = list(range(p.steps))
+        total, _, cs, ws = _pipeline_masked(
+            comm, compute, deps, active, active
+        )
+        one = StepProfile((0.0,) * (p.steps - 1) + (1.0,))
+        comm1, compute1, active1 = _coherent_steps(one, c, w)
+        total1 = _pipeline_masked(
+            comm1, compute1, deps, active1, active1
+        )[0]
+        assert total1 == pytest.approx(cs + ws, rel=1e-12)
+        assert total <= total1 * (1.0 + 1e-12)
+
+    @given(weights=ragged_weights, c=step_times, w=step_times)
+    @settings(max_examples=30, deadline=None)
+    def test_zero_padding_never_changes_anything(self, weights, c, w):
+        p = StepProfile.from_weights(weights)
+        comm, compute, active = _coherent_steps(p, c, w)
+        deps = list(range(p.steps))
+        base = _pipeline_masked(comm, compute, deps, active, active)
+        padded = _pipeline_masked(
+            comm + [123.0, 456.0],
+            compute + [7.0, 8.0],
+            deps + [p.steps, p.steps + 1],
+            active + [False, False],
+            active + [False, False],
+        )
+        assert base == padded
+
+
+class TestRaggedModelProperties:
+    @given(
+        m=dims, n=dims, k=dims,
+        skew=st.floats(min_value=0.25, max_value=8.0, allow_nan=False),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_serial_exposed_comm_invariant_under_skew(self, m, n, k, skew):
+        """Adding skew at fixed total work never decreases the serial
+        schedule's modeled exposed comm — SERIAL moves the same
+        aggregate bytes whatever the profile, so it stays constant."""
+        g = GemmShape(m, n, k)
+        base = simulate(g, MI300X, Schedule.SERIAL)
+        skewed = simulate(
+            g, MI300X, Schedule.SERIAL,
+            profile=StepProfile.skewed(8, skew),
+        )
+        assert skewed.exposed_comm >= base.exposed_comm * (1.0 - 1e-12)
+        assert skewed.total == base.total
+
+    @given(
+        m=dims, n=dims, k=dims,
+        skew=st.floats(min_value=0.25, max_value=8.0, allow_nan=False),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_ragged_engines_agree_for_any_shape(self, m, n, k, skew):
+        """The scalar and batched ragged engines agree (or both reject)
+        for ANY shape x geometric skew."""
+        from repro.core.batch import RaggedBatch, evaluate_ragged_grid
+        from repro.core.workload import RaggedScenario
+
+        gemm = GemmShape(m, n, k)
+        profile = StepProfile.skewed(8, skew)
+        rb = RaggedBatch.from_ragged_scenarios(
+            [RaggedScenario("x", "EP", "t", gemm, profile)]
+        )
+        grid = evaluate_ragged_grid(rb, (MI300X,))
+        for sched in (
+            Schedule.UNIFORM_FUSED_1D, Schedule.HETERO_UNFUSED_1D
+        ):
+            l = grid.schedule_idx(sched)
+            try:
+                want = simulate(gemm, MI300X, sched, profile=profile)
+            except ValueError:
+                assert not grid.valid[l, 0, 0]
+                continue
+            assert grid.total[l, 0, 0] == pytest.approx(
+                want.total, rel=1e-12
+            )
 
 
 class TestKernelProperties:
