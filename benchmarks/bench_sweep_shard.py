@@ -1,0 +1,62 @@
+"""Sharded sweep subsystem: per-shard throughput + scaling efficiency.
+
+Pushes a synthetic scenario batch through ``repro.sweep.sweep_grid`` in
+reduce mode (the memory-bounded form that 1e6-1e7-point sweeps use) and
+reports:
+
+  * ``sweepshard/reduce``     — us per (scenario, machine) point through
+    the sharded path (1 shard) — the engine-throughput key the
+    regression gate watches;
+  * ``sweepshard/sharded8``   — the same sweep over 8 shards;
+  * ``sweepshard/efficiency`` — t(1 shard) / t(8 shards): sharding
+    overhead (plan + slicing + per-shard summaries) as a fraction of
+    useful work.  ~1.0 means the scenario axis scales freely; this is
+    the per-process number multi-host deployments multiply out.
+"""
+
+import time
+
+from repro.core.workload import machine_grid
+from repro.sweep import sweep_grid, synthetic_batch
+
+from benchmarks.common import row
+
+_S = 32768
+_SHARDS = 8
+
+
+def _timed_sweep(sb, machines, n_shards: int) -> float:
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        sweep_grid(sb, machines, num_shards=n_shards, mode="reduce")
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run() -> list[str]:
+    machines = machine_grid(groups=(8,))
+    sb = synthetic_batch(_S, seed=0)
+    points = _S * len(machines)
+
+    # Warm per-machine calibration caches so shards time pure evaluation.
+    sweep_grid(sb, machines, num_shards=1, mode="reduce")
+
+    t1 = _timed_sweep(sb, machines, 1)
+    tn = _timed_sweep(sb, machines, _SHARDS)
+    eff = t1 / tn
+
+    res = sweep_grid(sb, machines, num_shards=_SHARDS, mode="reduce")
+    merged = res.summary()
+
+    return [
+        row("sweepshard/points", 0.0,
+            f"{_S}x{len(machines)}={points} points over {_SHARDS} shards"),
+        row("sweepshard/reduce", 1e6 * t1 / points,
+            f"{points / t1:.0f} points/s unsharded (1 shard)"),
+        row("sweepshard/sharded8", 1e6 * tn / points,
+            f"{points / tn:.0f} points/s over {_SHARDS} shards"),
+        row("sweepshard/efficiency", 0.0,
+            f"{eff:.2f}x t1/t{_SHARDS} (1.0 == free sharding); "
+            f"per-shard {merged['scenarios_per_sec']:.0f} scenarios/s"),
+    ]

@@ -15,13 +15,13 @@ import argparse
 import time
 
 from repro.core import (
-    MI300X, TABLE_I, TPU_V5E, explore_grid, geomean, machine_grid,
-    prune_report, scenario_grid,
+    MI300X, TABLE_I, TPU_V5E, engine_names, explore_grid, geomean,
+    get_engine, machine_grid, prune_report, scenario_grid,
 )
 
 ap = argparse.ArgumentParser(description=__doc__)
-ap.add_argument("--backend", choices=("numpy", "jax"), default="numpy",
-                help="grid engine: NumPy reference or jitted JAX")
+ap.add_argument("--backend", choices=engine_names(), default="numpy",
+                help="grid engine from the repro.core.engine registry")
 args = ap.parse_args()
 
 for machine in (MI300X, TPU_V5E):
@@ -50,8 +50,8 @@ for name, t, studied in prune_report(TABLE_I[1], MI300X):
 # ===== batched engine: the whole design space in three lines ==========
 scenarios = scenario_grid()
 machines = machine_grid()
-if args.backend == "jax":  # compile once outside the timed region
-    explore_grid(scenarios, machines=machines, backend="jax")
+if get_engine(args.backend).jit:  # compile once outside the timed region
+    explore_grid(scenarios, machines=machines, backend=args.backend)
 t0 = time.perf_counter()
 ex = explore_grid(scenarios, machines=machines, backend=args.backend)
 dt = time.perf_counter() - t0

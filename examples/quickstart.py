@@ -25,12 +25,14 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core import MACHINES, SCENARIOS, explore_grid, select_schedule
+from repro.core import (
+    MACHINES, SCENARIOS, engine_names, explore_grid, select_schedule,
+)
 from repro.overlap import ficco_linear
 
 ap = argparse.ArgumentParser(description=__doc__)
-ap.add_argument("--backend", choices=("numpy", "jax"), default="numpy",
-                help="grid engine: NumPy reference or jitted JAX")
+ap.add_argument("--backend", choices=engine_names(), default="numpy",
+                help="grid engine from the repro.core.engine registry")
 ap.add_argument("--machine", choices=sorted(MACHINES), default="mi300x-8")
 ap.add_argument("--schedule", choices=("auto", "autotune"), default="auto",
                 help="auto: static heuristic; autotune: cached runtime tuner")

@@ -57,31 +57,31 @@ from repro.autotune.tuner import (
 
 
 def evaluate_grid(scenarios, machines, *, backend: str = "jax", **kw):
-    """Backend-switched grid evaluation: ``"jax"`` (jitted) or ``"numpy"``
-    (the reference engine in ``repro.core.batch``).  Identical
-    :class:`~repro.core.batch.GridResult` either way.
+    """Backend-switched grid evaluation via the engine registry:
+    ``"jax"`` (jitted), ``"numpy"`` (the reference engine in
+    ``repro.core.batch``), ``"scalar"``, or any registered engine.
+    Identical :class:`~repro.core.engine.GridResult` either way.
     """
-    if backend == "jax":
-        return evaluate_grid_jax(scenarios, machines, **kw)
-    if backend == "numpy":
-        from repro.core.batch import evaluate_grid as _np_grid
+    from repro.core.engine import get_engine
 
-        return _np_grid(scenarios, machines, **kw)
-    raise ValueError(f"backend must be 'jax'|'numpy', got {backend!r}")
+    return get_engine(backend).evaluate(scenarios, machines, **kw)
 
 
 def evaluate_ragged_grid(scenarios, machines, *, backend: str = "jax", **kw):
     """Backend-switched **ragged** grid evaluation (non-uniform step
     profiles); see ``repro.core.batch.evaluate_ragged_grid``."""
-    if backend == "jax":
-        return evaluate_ragged_grid_jax(scenarios, machines, **kw)
-    if backend == "numpy":
-        from repro.core.batch import (
-            evaluate_ragged_grid as _np_ragged,
-        )
+    from repro.core.engine import (
+        as_scenario_sequence,
+        get_engine,
+        is_ragged,
+    )
 
-        return _np_ragged(scenarios, machines, **kw)
-    raise ValueError(f"backend must be 'jax'|'numpy', got {backend!r}")
+    scenarios = as_scenario_sequence(scenarios)
+    if not is_ragged(scenarios):
+        raise TypeError(
+            "ragged evaluation needs RaggedScenario items or a RaggedBatch"
+        )
+    return get_engine(backend).evaluate(scenarios, machines, **kw)
 
 
 __all__ = [

@@ -712,22 +712,8 @@ def evaluate_ragged_grid(
         rb, machines, dma=dma, dma_into_place=dma_into_place,
         schedules=schedules,
     )
-    total, comm_busy, compute_busy, exposed, steps, valid, sc, sg = (
-        np.asarray(a) for a in out
-    )
-    return GridResult(
-        schedules=tuple(schedules),
-        scenarios=rb,
-        machines=machines,
-        total=np.transpose(total, (1, 2, 0)),
-        comm_busy=np.transpose(comm_busy, (1, 2, 0)),
-        compute_busy=np.transpose(compute_busy, (1, 2, 0)),
-        exposed=np.transpose(exposed, (1, 2, 0)),
-        steps=np.transpose(steps, (1, 0)),
-        serial_comm=np.transpose(sc, (1, 0)),
-        serial_gemm=np.transpose(sg, (1, 0)),
-        valid=np.transpose(valid, (1, 2, 0)),
-        dma=dma,
+    return GridResult.from_machine_major(
+        out, schedules=schedules, scenarios=rb, machines=machines, dma=dma
     )
 
 
@@ -799,22 +785,8 @@ def evaluate_grid(
         sb, machines, dma=dma, dma_into_place=dma_into_place,
         schedules=schedules,
     )
-    total, comm_busy, compute_busy, exposed, steps, valid, sc, sg = (
-        np.asarray(a) for a in out
-    )
-    return GridResult(
-        schedules=tuple(schedules),
-        scenarios=sb,
-        machines=machines,
-        total=np.transpose(total, (1, 2, 0)),
-        comm_busy=np.transpose(comm_busy, (1, 2, 0)),
-        compute_busy=np.transpose(compute_busy, (1, 2, 0)),
-        exposed=np.transpose(exposed, (1, 2, 0)),
-        steps=np.transpose(steps, (1, 0)),
-        serial_comm=np.transpose(sc, (1, 0)),
-        serial_gemm=np.transpose(sg, (1, 0)),
-        valid=np.transpose(valid, (1, 2, 0)),
-        dma=dma,
+    return GridResult.from_machine_major(
+        out, schedules=schedules, scenarios=sb, machines=machines, dma=dma
     )
 
 
@@ -1031,36 +1003,22 @@ def shortlist(
 ) -> list[tuple[Schedule, float]]:
     """Top-``top`` valid schedules for one GEMM, fastest first.
 
-    ``backend="jax"`` consults the jitted engine; ``"numpy"`` the
-    reference engine (useful where no accelerator/XLA is wanted on the
+    ``backend`` names any engine in the :mod:`repro.core.engine`
+    registry (``"jax"`` consults the jitted engine; ``"numpy"`` the
+    reference engine — useful where no accelerator/XLA is wanted on the
     hot path).  Model times accompany each schedule so callers can
     decide whether measuring is worth it (close calls) or not.
     ``profile`` ranks the schedules under a ragged step profile instead
     of the uniform split (skew-aware tuning).
-    """
-    from repro.core import batch as _batch
 
-    if profile is not None:
-        rb = _batch.RaggedBatch.from_batch_and_profiles(
-            _batch.ScenarioBatch.from_gemms([gemm]), [profile]
-        )
-        eval_fn = (
-            evaluate_ragged_grid
-            if backend == "jax"
-            else _batch.evaluate_ragged_grid
-        )
-        grid = eval_fn(rb, (machine,), dma=dma)
-    else:
-        eval_fn = evaluate_grid if backend == "jax" else _batch.evaluate_grid
-        grid = eval_fn([gemm], (machine,), dma=dma)
-    total = np.where(grid.valid[:, 0, 0], grid.total[:, 0, 0], np.inf)
-    order = np.argsort(total, kind="stable")
-    out = []
-    for l in order[:top]:
-        if not np.isfinite(total[l]):
-            break
-        out.append((grid.schedules[int(l)], float(total[l])))
-    return out
+    This is a thin alias of :func:`repro.core.engine.shortlist`, kept
+    for backward compatibility.
+    """
+    from repro.core.engine import shortlist as _shortlist
+
+    return _shortlist(
+        gemm, machine, top=top, dma=dma, backend=backend, profile=profile
+    )
 
 
 __all__ = [

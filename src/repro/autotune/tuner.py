@@ -108,10 +108,11 @@ def _runtime_executable(gemm: GemmShape, group: int, sched: Schedule) -> bool:
 class Autotuner:
     """Tiered schedule selection with a persistent decision store.
 
-    ``backend`` picks the analytic engine: ``"jax"`` (jitted, default)
-    or ``"numpy"`` (reference).  Every decision — including analytic
-    ones — is recorded, so repeated trace-time queries from ``jax.jit``
-    re-traces cost one dict lookup.
+    ``backend`` names the analytic engine in the
+    :mod:`repro.core.engine` registry: ``"jax"`` (jitted, default),
+    ``"numpy"`` (reference) or any registered third-party engine.
+    Every decision — including analytic ones — is recorded, so repeated
+    trace-time queries from ``jax.jit`` re-traces cost one dict lookup.
     """
 
     def __init__(
@@ -121,8 +122,9 @@ class Autotuner:
         backend: str = "jax",
         persist: bool = True,
     ):
-        if backend not in ("jax", "numpy"):
-            raise ValueError(f"backend must be 'jax'|'numpy', got {backend!r}")
+        from repro.core.engine import get_engine
+
+        get_engine(backend)  # fail fast: ValueError lists valid engines
         self.cache = cache if cache is not None else AutotuneCache()
         self.backend = backend
         self.persist = persist
@@ -212,23 +214,22 @@ class Autotuner:
         return self._shortlist(gemm, eff, top=top, profile=profile)
 
     def _shortlist(self, gemm, machine, *, top, profile=None):
-        from repro.autotune import jaxgrid  # local: keeps import light
+        from repro.core import engine as _engine
 
         if top is None:
-            from repro.core.batch import GRID_SCHEDULES
-
-            top = len(GRID_SCHEDULES)
-        backend = self.backend
-        if backend == "jax":
+            top = len(_engine.GRID_SCHEDULES)
+        eng = _engine.get_engine(self.backend)
+        if not eng.trace_safe:
             # Trace-time queries (ficco_linear under jit/shard_map) must
             # not stage the cost model into the caller's computation —
-            # shapes are concrete there, so the host engine answers.
+            # shapes are concrete there, so a trace-safe host engine
+            # answers instead.
             import jax as _jax
 
             if not _jax.core.trace_state_clean():
-                backend = "numpy"
-        out = jaxgrid.shortlist(
-            gemm, machine, top=top, backend=backend, profile=profile
+                eng = _engine.get_engine("numpy")
+        out = _engine.shortlist(
+            gemm, machine, top=top, engine=eng, profile=profile
         )
         if not out:
             raise ValueError(f"no valid schedule for {gemm}")

@@ -5,6 +5,7 @@ Layers:
   * inefficiency        — DIL / CIL analytic models (§IV), paper-calibrated
   * schedule_types      — the design space (Fig. 11a)
   * simulator           — two-channel discrete schedule simulator (Fig. 11b)
+  * engine              — unified Engine protocol + backend registry
   * batch               — NumPy-vectorized batched grid engine (S x M x L)
   * heuristics          — static OTB x MT schedule selection (Fig. 12a)
   * explorer            — full design-space exploration + pruning argument
@@ -64,9 +65,18 @@ from repro.core.inefficiency import (
     p2p_step_time,
 )
 from repro.core.simulator import SimResult, best_schedule, simulate
-from repro.core.batch import (
+from repro.core.engine import (
     GRID_SCHEDULES,
+    Engine,
     GridResult,
+    JaxEngine,
+    NumpyEngine,
+    ScalarEngine,
+    engine_names,
+    get_engine,
+    register_engine,
+)
+from repro.core.batch import (
     RaggedBatch,
     ScenarioBatch,
     evaluate_grid,
@@ -106,6 +116,8 @@ __all__ = [
     "SimResult", "best_schedule", "simulate",
     "GRID_SCHEDULES", "GridResult", "RaggedBatch", "ScenarioBatch",
     "evaluate_grid", "evaluate_ragged_grid",
+    "Engine", "ScalarEngine", "NumpyEngine", "JaxEngine",
+    "engine_names", "get_engine", "register_engine",
     "HeuristicDecision", "calibrate_serial_gate", "calibrate_tau",
     "machine_serial_gate", "machine_threshold",
     "select_schedule", "select_schedule_batch",

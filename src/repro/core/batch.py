@@ -36,24 +36,19 @@ import dataclasses
 import numpy as np
 
 from repro.core import inefficiency as ineff
+from repro.core.engine import (  # canonical home: repro.core.engine
+    GRID_SCHEDULES,
+    SCHEDULE_INDEX,
+    GridResult,
+)
 from repro.core.machine import MachineSpec, Topology
 from repro.core.schedule_types import STUDIED, Schedule
-from repro.core.simulator import SimResult
 from repro.core.workload import (
     GemmShape,
     RaggedScenario,
     Scenario,
     StepProfile,
 )
-
-# Canonical schedule order — matches the dict order of
-# ``simulator.best_schedule`` so argmin tie-breaking is identical.
-GRID_SCHEDULES: tuple[Schedule, ...] = (
-    Schedule.SERIAL,
-    Schedule.SHARD_P2P,
-    *STUDIED,
-)
-SCHEDULE_INDEX = {s: i for i, s in enumerate(GRID_SCHEDULES)}
 
 _F = np.float64
 
@@ -409,70 +404,6 @@ def pipeline_vec(comm_steps, compute_steps, deps,
 # ---------------------------------------------------------------------------
 # Grid evaluation.
 # ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass(frozen=True)
-class GridResult:
-    """Dense result table over (schedule, scenario, machine).
-
-    ``total``/``comm_busy``/``compute_busy``/``exposed`` have shape
-    ``(L, S, M)`` with L = ``len(schedules)``; ``serial_comm`` /
-    ``serial_gemm`` are ``(S, M)``.  Entries where the scalar simulator
-    would raise (indivisible decompositions) are NaN with ``valid`` False.
-    """
-
-    schedules: tuple[Schedule, ...]
-    scenarios: ScenarioBatch
-    machines: tuple[MachineSpec, ...]
-    total: np.ndarray
-    comm_busy: np.ndarray
-    compute_busy: np.ndarray
-    exposed: np.ndarray
-    steps: np.ndarray  # (L, M) int
-    serial_comm: np.ndarray
-    serial_gemm: np.ndarray
-    valid: np.ndarray
-    dma: bool
-
-    @property
-    def serial_total(self) -> np.ndarray:
-        return self.serial_comm + self.serial_gemm
-
-    @property
-    def speedup(self) -> np.ndarray:
-        """(L, S, M) speedup of each schedule vs the serial reference."""
-        return self.serial_total[None, :, :] / self.total
-
-    def best_idx(self) -> np.ndarray:
-        """(S, M) index into ``schedules`` of the fastest valid schedule."""
-        masked = np.where(self.valid, self.total, np.inf)
-        return np.argmin(masked, axis=0)
-
-    def best_total(self) -> np.ndarray:
-        masked = np.where(self.valid, self.total, np.inf)
-        return np.min(masked, axis=0)
-
-    def schedule_idx(self, schedule: Schedule) -> int:
-        return self.schedules.index(schedule)
-
-    def sim_result(self, schedule: Schedule, i: int, j: int) -> SimResult:
-        """Materialize one scalar :class:`SimResult` from the grid."""
-        l = self.schedule_idx(schedule)
-        if not self.valid[l, i, j]:
-            raise ValueError(
-                f"{schedule} invalid for scenario {i} on "
-                f"{self.machines[j].name} (indivisible decomposition)"
-            )
-        return SimResult(
-            schedule,
-            float(self.total[l, i, j]),
-            float(self.comm_busy[l, i, j]),
-            float(self.compute_busy[l, i, j]),
-            float(self.exposed[l, i, j]),
-            int(self.steps[l, j]),
-            float(self.serial_comm[i, j]),
-            float(self.serial_gemm[i, j]),
-        )
 
 
 def _eval_one_machine(
@@ -849,76 +780,14 @@ def _eval_one_machine_ragged(
     return out, steps, valid, serial_comm, serial_gemm
 
 
-def evaluate_ragged_grid(
-    scenarios,
+def _assemble_grid(
+    sb: ScenarioBatch,
     machines,
-    *,
-    dma: bool = True,
-    dma_into_place: bool = False,
-    schedules: tuple[Schedule, ...] = GRID_SCHEDULES,
+    schedules,
+    dma: bool,
+    eval_one,
 ) -> GridResult:
-    """Ragged counterpart of :func:`evaluate_grid`.
-
-    ``scenarios`` is a :class:`RaggedBatch` or a list of
-    :class:`~repro.core.workload.RaggedScenario`.  Mixed profile lengths
-    batch together (padded + masked).  Returns the same
-    :class:`GridResult` shape as the uniform engine, so everything
-    downstream (``GridExploration``, benchmarks, tuners) works unchanged.
-    """
-    rb = _as_ragged_batch(scenarios)
-    machines = tuple(machines)
-    L, S, M = len(schedules), len(rb), len(machines)
-    total = np.empty((L, S, M))
-    comm_busy = np.empty((L, S, M))
-    compute_busy = np.empty((L, S, M))
-    exposed = np.empty((L, S, M))
-    steps = np.empty((L, M), dtype=np.int64)
-    serial_comm = np.empty((S, M))
-    serial_gemm = np.empty((S, M))
-    valid = np.empty((L, S, M), dtype=bool)
-    for j, machine in enumerate(machines):
-        out, st, va, sc, sg = _eval_one_machine_ragged(
-            rb, machine, schedules, dma, dma_into_place
-        )
-        total[:, :, j] = out["total"]
-        comm_busy[:, :, j] = out["comm_busy"]
-        compute_busy[:, :, j] = out["compute_busy"]
-        exposed[:, :, j] = out["exposed"]
-        steps[:, j] = st
-        valid[:, :, j] = va
-        serial_comm[:, j] = sc
-        serial_gemm[:, j] = sg
-    return GridResult(
-        schedules=tuple(schedules),
-        scenarios=rb,
-        machines=machines,
-        total=total,
-        comm_busy=comm_busy,
-        compute_busy=compute_busy,
-        exposed=exposed,
-        steps=steps,
-        serial_comm=serial_comm,
-        serial_gemm=serial_gemm,
-        valid=valid,
-        dma=dma,
-    )
-
-
-def evaluate_grid(
-    scenarios,
-    machines,
-    *,
-    dma: bool = True,
-    dma_into_place: bool = False,
-    schedules: tuple[Schedule, ...] = GRID_SCHEDULES,
-) -> GridResult:
-    """Evaluate all ``schedules`` for S scenarios x M machines at once.
-
-    ``scenarios`` may be a :class:`ScenarioBatch`, a list of
-    :class:`~repro.core.workload.Scenario`, or a list of
-    :class:`~repro.core.workload.GemmShape`.
-    """
-    sb = _as_batch(scenarios)
+    """Machine-loop assembly shared by the uniform and ragged engines."""
     machines = tuple(machines)
     L, S, M = len(schedules), len(sb), len(machines)
     total = np.empty((L, S, M))
@@ -930,9 +799,7 @@ def evaluate_grid(
     serial_gemm = np.empty((S, M))
     valid = np.empty((L, S, M), dtype=bool)
     for j, machine in enumerate(machines):
-        out, st, va, sc, sg = _eval_one_machine(
-            sb, machine, schedules, dma, dma_into_place
-        )
+        out, st, va, sc, sg = eval_one(machine)
         total[:, :, j] = out["total"]
         comm_busy[:, :, j] = out["comm_busy"]
         compute_busy[:, :, j] = out["compute_busy"]
@@ -954,6 +821,54 @@ def evaluate_grid(
         serial_gemm=serial_gemm,
         valid=valid,
         dma=dma,
+    )
+
+
+def evaluate_ragged_grid(
+    scenarios,
+    machines,
+    *,
+    dma: bool = True,
+    dma_into_place: bool = False,
+    schedules: tuple[Schedule, ...] = GRID_SCHEDULES,
+) -> GridResult:
+    """Ragged counterpart of :func:`evaluate_grid`.
+
+    ``scenarios`` is a :class:`RaggedBatch` or a list of
+    :class:`~repro.core.workload.RaggedScenario`.  Mixed profile lengths
+    batch together (padded + masked).  Returns the same
+    :class:`GridResult` shape as the uniform engine, so everything
+    downstream (``GridExploration``, benchmarks, tuners) works unchanged.
+    """
+    rb = _as_ragged_batch(scenarios)
+    return _assemble_grid(
+        rb, machines, schedules, dma,
+        lambda machine: _eval_one_machine_ragged(
+            rb, machine, schedules, dma, dma_into_place
+        ),
+    )
+
+
+def evaluate_grid(
+    scenarios,
+    machines,
+    *,
+    dma: bool = True,
+    dma_into_place: bool = False,
+    schedules: tuple[Schedule, ...] = GRID_SCHEDULES,
+) -> GridResult:
+    """Evaluate all ``schedules`` for S scenarios x M machines at once.
+
+    ``scenarios`` may be a :class:`ScenarioBatch`, a list of
+    :class:`~repro.core.workload.Scenario`, or a list of
+    :class:`~repro.core.workload.GemmShape`.
+    """
+    sb = _as_batch(scenarios)
+    return _assemble_grid(
+        sb, machines, schedules, dma,
+        lambda machine: _eval_one_machine(
+            sb, machine, schedules, dma, dma_into_place
+        ),
     )
 
 

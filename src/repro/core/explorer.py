@@ -14,13 +14,8 @@ import dataclasses
 import numpy as np
 
 from repro.core import inefficiency as ineff
-from repro.core.batch import (
-    GridResult,
-    RaggedBatch,
-    ScenarioBatch,
-    evaluate_grid,
-    evaluate_ragged_grid,
-)
+from repro.core.batch import GridResult, RaggedBatch
+from repro.core.engine import Engine, get_engine
 from repro.core.heuristics import (
     HeuristicDecision,
     select_schedule,
@@ -37,7 +32,7 @@ from repro.core.schedule_types import (
     Uniformity,
 )
 from repro.core.simulator import SimResult, simulate
-from repro.core.workload import GemmShape, RaggedScenario, Scenario
+from repro.core.workload import GemmShape, Scenario
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,6 +79,30 @@ class GridExploration:
 
     grid: GridResult
     heuristic_idx: np.ndarray  # (S, M) indices into grid.schedules
+
+    @classmethod
+    def from_grid(
+        cls, grid: GridResult, *, tau: float | None = None
+    ) -> "GridExploration":
+        """Attach vectorized heuristic picks to an already-evaluated grid.
+
+        Works on any engine's :class:`GridResult` (the heuristic is
+        engine-independent); ragged grids feed their per-scenario
+        imbalance into the skew-aware serial gate.
+        """
+        sb = grid.scenarios
+        imbalance = sb.imbalance if isinstance(sb, RaggedBatch) else None
+        heuristic = np.stack(
+            [
+                select_schedule_batch(
+                    sb.m, sb.n, sb.k, sb.dtype_bytes, machine, tau=tau,
+                    imbalance=imbalance,
+                )
+                for machine in grid.machines
+            ],
+            axis=1,
+        )
+        return cls(grid, heuristic)
 
     @property
     def best_idx(self) -> np.ndarray:
@@ -145,6 +164,7 @@ def explore_grid(
     dma_into_place: bool = False,
     tau: float | None = None,
     backend: str = "numpy",
+    engine: Engine | None = None,
 ) -> GridExploration:
     """Batched :func:`explore` over S scenarios x M machines at once.
 
@@ -156,48 +176,25 @@ def explore_grid(
 
     ``scenarios`` accepts Scenario lists, GemmShape lists or a prebuilt
     :class:`~repro.core.batch.ScenarioBatch` (e.g. from
-    ``workload.scenario_grid``).  ``backend="jax"`` routes the grid
-    through the jit-compiled on-accelerator engine in
-    ``repro.autotune.jaxgrid`` (identical numbers within 1e-5; faster
-    per sweep once compiled, and differentiable for calibration).
+    ``workload.scenario_grid``).  ``backend`` names any engine in the
+    :mod:`repro.core.engine` registry — ``"numpy"`` (default),
+    ``"jax"`` (jit-compiled, identical numbers within 1e-5, faster per
+    sweep once compiled, differentiable for calibration) or
+    ``"scalar"`` (the reference simulator loop); an unknown name raises
+    a ``ValueError`` listing the registered engines.  ``engine=``
+    passes an :class:`~repro.core.engine.Engine` instance directly.
 
     **Ragged scenarios** (:class:`~repro.core.workload.RaggedScenario`
     lists / a :class:`~repro.core.batch.RaggedBatch`, e.g. from
     ``workload.ragged_scenario_grid``) route through the masked ragged
-    engines on either backend; the heuristic picks then carry the
+    engines on any backend; the heuristic picks then carry the
     skew-aware serial gate (``imbalance``).
     """
-    ragged = isinstance(scenarios, RaggedBatch) or (
-        isinstance(scenarios, (list, tuple))
-        and len(scenarios) > 0
-        and isinstance(scenarios[0], RaggedScenario)
-    )
-    if backend == "jax":
-        from repro.autotune import jaxgrid  # local: core must not need jax
-
-        eval_fn = (
-            jaxgrid.evaluate_ragged_grid if ragged else jaxgrid.evaluate_grid
-        )
-    elif backend == "numpy":
-        eval_fn = evaluate_ragged_grid if ragged else evaluate_grid
-    else:
-        raise ValueError(f"backend must be 'numpy'|'jax', got {backend!r}")
-    grid = eval_fn(
+    eng = engine if engine is not None else get_engine(backend)
+    grid = eng.evaluate(
         scenarios, machines, dma=dma, dma_into_place=dma_into_place
     )
-    sb = grid.scenarios
-    imbalance = sb.imbalance if isinstance(sb, RaggedBatch) else None
-    heuristic = np.stack(
-        [
-            select_schedule_batch(
-                sb.m, sb.n, sb.k, sb.dtype_bytes, machine, tau=tau,
-                imbalance=imbalance,
-            )
-            for machine in grid.machines
-        ],
-        axis=1,
-    )
-    return GridExploration(grid, heuristic)
+    return GridExploration.from_grid(grid, tau=tau)
 
 
 def _variant_proxy_time(

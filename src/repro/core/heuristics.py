@@ -120,19 +120,23 @@ def calibrate_serial_gate(
     candidates=(0.3, 0.5, 0.7, 0.9, 1.0, 1.2, 1.5, 2.0, 3.0),
     *,
     freeze: bool = False,
+    backend: str = "numpy",
 ) -> float:
     """Learn the serial/overlap gate from a grid: pick the candidate that
     maximizes grid-wide within-5% accuracy of the gated heuristic.
 
     One batched sweep supplies the analytic optima; every candidate is a
     vectorized re-gating.  ``freeze=True`` records the winner as a
-    per-machine override for each machine in ``machines``.
+    per-machine override for each machine in ``machines``.  ``backend``
+    names any registered engine (``repro.core.engine``); the jitted
+    ``"jax"`` engine pays off on large calibration grids.
     """
     from repro.core import batch as _batch  # local: avoids a cycle
+    from repro.core.engine import get_engine
 
     machines = tuple(machines)
     sb = _batch.ScenarioBatch.from_scenarios(scenarios)
-    grid = _batch.evaluate_grid(sb, machines)
+    grid = get_engine(backend).evaluate(sb, machines)
     best_total = grid.best_total()
     s_idx = np.arange(len(sb))[:, None]
     m_idx = np.arange(len(machines))[None, :]
@@ -313,18 +317,22 @@ def calibrate_tau(
     machine: MachineSpec,
     scenarios,
     candidates=(0.02, 0.05, 0.1, 0.2, 0.5, 1.0),
+    *,
+    backend: str = "numpy",
 ) -> float:
     """One-time TAU fit: maximize agreement with the simulator-optimal
     schedule over a calibration set (paper tunes thresholds per machine).
 
-    Runs as one batched sweep: the simulator-optimal schedules come from a
-    single ``evaluate_grid`` call and each TAU candidate is a vectorized
-    re-threshold — no per-(tau, scenario) scalar simulation.
+    Runs as one batched sweep: the simulator-optimal schedules come from
+    a single engine evaluation (``backend`` names any registered engine)
+    and each TAU candidate is a vectorized re-threshold — no
+    per-(tau, scenario) scalar simulation.
     """
     from repro.core import batch as _batch  # local: avoids a cycle
+    from repro.core.engine import get_engine
 
     sb = _batch.ScenarioBatch.from_scenarios(scenarios)
-    grid = _batch.evaluate_grid(sb, (machine,))
+    grid = get_engine(backend).evaluate(sb, (machine,))
     best = grid.best_idx()[:, 0]
 
     best_tau, best_acc = candidates[0], -1.0

@@ -1,0 +1,56 @@
+"""repro.sweep — sharded design-space sweeps (devices + hosts).
+
+The scenario axis of the FiCCO design-space grid is embarrassingly
+parallel; this package cuts it with deterministic
+:class:`~repro.sweep.plan.ShardPlan`\\ s, evaluates shards through any
+registered engine (:mod:`repro.core.engine`), SPMD over local jax
+devices when asked, round-robin over identical host processes, and
+either gathers the shards back into one bit-identical
+:class:`~repro.core.engine.GridResult` or streams compact per-shard
+summaries (1e6-1e7-point sweeps).
+
+The three-line sharded sweep::
+
+    from repro.sweep import sweep_grid, synthetic_batch
+    res = sweep_grid(synthetic_batch(100_000), machines,
+                     num_shards=16, mode="reduce")
+    print(res.summary())
+
+and the CLI driver is ``scripts/sweep.py`` (per-shard JSON streaming,
+multi-host owner mapping, device-parallel evaluation).
+"""
+
+from repro.sweep.plan import (
+    ShardPlan,
+    owner_of,
+    plan_shards,
+    shards_for_host,
+)
+from repro.sweep.runner import (
+    ShardSummary,
+    SweepResult,
+    concat_batches,
+    concat_grid_results,
+    merge_summaries,
+    shard_batch,
+    summarize_shard,
+    sweep_grid,
+)
+from repro.sweep.synth import synthetic_batch, synthetic_ragged_batch
+
+__all__ = [
+    "ShardPlan",
+    "plan_shards",
+    "owner_of",
+    "shards_for_host",
+    "ShardSummary",
+    "SweepResult",
+    "shard_batch",
+    "concat_batches",
+    "concat_grid_results",
+    "summarize_shard",
+    "merge_summaries",
+    "sweep_grid",
+    "synthetic_batch",
+    "synthetic_ragged_batch",
+]

@@ -1,0 +1,86 @@
+"""Synthetic scenario batches at sweep scale (1e6-1e7 lanes).
+
+``workload.scenario_grid`` enumerates the registry architectures (~720
+scenarios); the sweep subsystem wants millions.  These constructors
+build :class:`~repro.core.batch.ScenarioBatch` / ``RaggedBatch``
+struct-of-arrays *directly* — four int64 arrays (plus one float matrix
+for ragged) — so a 1e7-lane batch costs ~300 MB of array memory and no
+Python-object churn.
+
+Everything is seeded and vectorized: the same ``(n, seed)`` reproduces
+the same batch on every host, which is what lets multi-host sweeps
+regenerate their owned shard locally instead of broadcasting operands.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.batch import RaggedBatch, ScenarioBatch
+
+# M is drawn in multiples of this, so every group size up to 32
+# decomposes evenly (matching workload.scenario_grid's convention); the
+# engines mask indivisible combinations anyway.
+_M_QUANTUM = 1024
+
+
+def synthetic_batch(
+    n: int,
+    *,
+    seed: int = 0,
+    dtype_bytes: tuple[int, ...] = (2, 1),
+) -> ScenarioBatch:
+    """n log-uniform GEMM scenarios, deterministic in ``seed``.
+
+    Shapes span the paper's regime: M in [1k, 2M] token rows (multiples
+    of 1024), N/K in [1k, 64k] model dims (multiples of 128).
+    """
+    rng = np.random.default_rng(seed)
+    m = _M_QUANTUM * np.exp(
+        rng.uniform(np.log(1), np.log(2048), n)
+    ).astype(np.int64)
+    n_dim = 128 * np.exp(rng.uniform(np.log(8), np.log(512), n)).astype(
+        np.int64
+    )
+    k_dim = 128 * np.exp(rng.uniform(np.log(8), np.log(512), n)).astype(
+        np.int64
+    )
+    b = rng.choice(np.asarray(dtype_bytes, dtype=np.int64), size=n)
+    return ScenarioBatch(m=m, n=n_dim, k=k_dim, dtype_bytes=b)
+
+
+def synthetic_ragged_batch(
+    n: int,
+    *,
+    steps: int = 8,
+    seed: int = 0,
+    dtype_bytes: tuple[int, ...] = (2, 1),
+    concentration: float = 0.7,
+) -> RaggedBatch:
+    """n ragged scenarios with Dirichlet step profiles (skewed EP-like).
+
+    ``concentration < 1`` produces hot-expert skew; rows renormalize to
+    sum to 1 exactly, and a random tail of steps is zeroed on ~25% of
+    rows to model masked/empty dispatch steps (mixed profile lengths).
+    """
+    if steps < 1:
+        raise ValueError(f"steps must be >= 1, got {steps}")
+    sb = synthetic_batch(n, seed=seed, dtype_bytes=dtype_bytes)
+    rng = np.random.default_rng(seed + 1)
+    frac = rng.dirichlet(np.full(steps, concentration), size=n)
+    if steps > 1:
+        # Mask a tail on a quarter of the rows: profiles shorter than
+        # ``steps`` (a 1-step profile is already the degenerate [1.0]).
+        short = rng.random(n) < 0.25
+        tail = rng.integers(1, steps, size=n)
+        cols = np.arange(steps)[None, :]
+        frac = np.where(
+            short[:, None] & (cols >= tail[:, None]), 0.0, frac
+        )
+    frac /= frac.sum(axis=1, keepdims=True)
+    return RaggedBatch(
+        m=sb.m, n=sb.n, k=sb.k, dtype_bytes=sb.dtype_bytes, frac=frac
+    )
+
+
+__all__ = ["synthetic_batch", "synthetic_ragged_batch"]

@@ -1,0 +1,24 @@
+"""Shared GridResult bit-identity assertion (one site for the contract).
+
+Importable both from pytest modules and from the subprocess drivers
+(both have ``tests/`` on ``sys.path``: pytest inserts the test dir,
+scripts get their own directory as ``sys.path[0]``).
+"""
+
+import numpy as np
+
+
+def assert_grid_identical(got, want, ctx: str = "") -> None:
+    """Every GridResult field equal bit for bit (NaN == NaN)."""
+    for f in ("total", "comm_busy", "compute_busy", "exposed"):
+        assert np.array_equal(
+            getattr(got, f), getattr(want, f), equal_nan=True
+        ), f"{ctx}{f}"
+    assert np.array_equal(got.valid, want.valid), f"{ctx}valid"
+    assert np.array_equal(got.steps, want.steps), f"{ctx}steps"
+    assert np.array_equal(
+        got.serial_comm, want.serial_comm
+    ), f"{ctx}serial_comm"
+    assert np.array_equal(
+        got.serial_gemm, want.serial_gemm
+    ), f"{ctx}serial_gemm"

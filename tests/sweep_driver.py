@@ -1,0 +1,119 @@
+"""Sharded-sweep correctness driver (subprocess, 2 forced host devices).
+
+The main pytest process must keep seeing ONE device, so the
+device-parallel sweep runs here, spawned by ``tests/test_sweep.py``.
+Checks that a sweep sharded over >= 2 devices reproduces the unsharded
+jitted engine's GridResult EXACTLY — bit for bit, for uniform and
+ragged grids, including a scenario count not divisible by the device
+count (padded remainder) — and that multi-host chunking composes with
+device parallelism.  Prints ``ALL-OK`` on success.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=2 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import sys  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import MI300X, TPU_V5E, get_engine  # noqa: E402
+from repro.sweep import (  # noqa: E402
+    concat_grid_results,
+    sweep_grid,
+    synthetic_batch,
+    synthetic_ragged_batch,
+)
+
+from grid_asserts import assert_grid_identical  # noqa: E402
+
+MACHINES = (MI300X, TPU_V5E)
+failures: list[str] = []
+
+
+def check(name: str, fn):
+    try:
+        fn()
+        print(f"ok {name}")
+    except Exception:
+        failures.append(name)
+        print(f"FAIL {name}")
+        traceback.print_exc()
+
+
+def uniform_device_sharded_exact():
+    # 23 scenarios over 2 devices: padded-remainder path (12 + 11).
+    sb = synthetic_batch(23, seed=11)
+    ref = get_engine("jax").evaluate(sb, MACHINES)
+    res = sweep_grid(sb, MACHINES, device_parallel=True, mode="gather")
+    assert_grid_identical(res.grid, ref, "uniform ")
+
+
+def ragged_device_sharded_exact():
+    rb = synthetic_ragged_batch(19, seed=12)
+    ref = get_engine("jax").evaluate(rb, MACHINES)
+    res = sweep_grid(rb, MACHINES, device_parallel=True, mode="gather")
+    assert_grid_identical(res.grid, ref, "ragged ")
+    # Profiles travel with their scenario shard: reassembled frac rows
+    # are the originals, byte for byte.
+    assert np.array_equal(res.grid.scenarios.frac, rb.frac)
+
+
+def divisible_count_exact():
+    sb = synthetic_batch(16, seed=13)  # divisible by 2: no padding
+    ref = get_engine("jax").evaluate(sb, MACHINES)
+    res = sweep_grid(sb, MACHINES, device_parallel=True, mode="gather")
+    assert_grid_identical(res.grid, ref, "divisible ")
+
+
+def hosts_compose_with_devices():
+    # 2 hosts x 4 shards, each shard pmapped over the 2 devices; the
+    # union of both hosts' grids is the unsharded grid.
+    sb = synthetic_batch(21, seed=14)
+    ref = get_engine("jax").evaluate(sb, MACHINES)
+    parts = {}
+    for host in (0, 1):
+        res = sweep_grid(
+            sb, MACHINES, num_shards=4, host_index=host, host_count=2,
+            device_parallel=True, mode="gather",
+        )
+        for shard, summ in zip(res.owned, res.summaries):
+            start, stop = res.plan.bounds[shard]
+            parts[shard] = (start, stop)
+        parts[f"grid{host}"] = res
+    # Reassemble in shard order from the two hosts' owned slices.
+    h0, h1 = parts["grid0"], parts["grid1"]
+    by_shard = {}
+    for res in (h0, h1):
+        offset = 0
+        for shard in res.owned:
+            size = res.plan.sizes[shard]
+            from repro.sweep.runner import _slice_grid
+
+            by_shard[shard] = _slice_grid(res.grid, offset, offset + size)
+            offset += size
+    merged = concat_grid_results(
+        [by_shard[i] for i in sorted(k for k in by_shard)]
+    )
+    assert_grid_identical(merged, ref, "hosts+devices ")
+
+
+def main():
+    assert len(jax.devices()) == 2, jax.devices()
+    check("uniform_device_sharded_exact", uniform_device_sharded_exact)
+    check("ragged_device_sharded_exact", ragged_device_sharded_exact)
+    check("divisible_count_exact", divisible_count_exact)
+    check("hosts_compose_with_devices", hosts_compose_with_devices)
+    if failures:
+        print("FAILED:", failures)
+        sys.exit(1)
+    print("ALL-OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,229 @@
+"""Engine facade tests (``repro.core.engine``).
+
+The registry is the single routing point from ``backend=`` strings to
+engines; these tests pin (a) the unknown-backend ValueError naming every
+registered engine, (b) ScalarEngine/NumpyEngine bit-identity (the scalar
+simulator is the ground truth the batched scan replicates exactly), and
+(c) the capability flags downstream code keys off.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    MI300X,
+    TABLE_I,
+    TPU_V5E,
+    GemmShape,
+    engine_names,
+    explore_grid,
+    get_engine,
+    register_engine,
+)
+from repro.core.engine import Engine, NumpyEngine
+from repro.core.workload import ragged_scenario_grid
+
+from grid_asserts import assert_grid_identical
+
+MACHINES = (MI300X, TPU_V5E)
+# A small zoo including shapes the simulator rejects (indivisible /
+# degenerate decompositions), so the valid-mask paths are exercised.
+GEMMS = [
+    GemmShape(8192, 57344, 8192),
+    GemmShape(1001, 4096, 4096),  # m not divisible by any group
+    GemmShape(32, 4096, 4096),  # hetero chunk rows would be 0
+    GemmShape(8192, 8192, 8191),  # k indivisible -> 2D masked
+]
+
+
+class TestRegistry:
+    def test_builtin_engines_registered(self):
+        assert {"scalar", "numpy", "jax"} <= set(engine_names())
+
+    def test_get_engine_singleton(self):
+        assert get_engine("numpy") is get_engine("numpy")
+
+    def test_unknown_backend_lists_registered(self):
+        with pytest.raises(ValueError) as e:
+            get_engine("torch")
+        msg = str(e.value)
+        for name in engine_names():
+            assert name in msg
+        assert "torch" in msg
+
+    def test_explore_grid_unknown_backend(self):
+        with pytest.raises(ValueError) as e:
+            explore_grid(TABLE_I, machines=(MI300X,), backend="bogus")
+        assert "numpy" in str(e.value) and "jax" in str(e.value)
+
+    def test_engine_instance_passthrough(self):
+        eng = NumpyEngine()
+        assert get_engine(eng) is eng
+        with pytest.raises(TypeError):
+            get_engine(42)
+
+    def test_register_custom_engine(self):
+        class Fake(NumpyEngine):
+            name = "fake-for-test"
+
+        register_engine("fake-for-test", Fake)
+        try:
+            assert get_engine("fake-for-test").name == "fake-for-test"
+            with pytest.raises(ValueError):
+                register_engine("fake-for-test", Fake)  # no silent clobber
+            register_engine("fake-for-test", Fake, replace=True)
+        finally:
+            from repro.core import engine as engine_mod
+
+            engine_mod._REGISTRY.pop("fake-for-test", None)
+            engine_mod._INSTANCES.pop("fake-for-test", None)
+
+    def test_capability_flags(self):
+        np_eng = get_engine("numpy")
+        jx_eng = get_engine("jax")
+        sc_eng = get_engine("scalar")
+        for eng in (np_eng, jx_eng, sc_eng):
+            assert isinstance(eng, Engine)
+            assert eng.supports_ragged
+        assert np_eng.trace_safe and sc_eng.trace_safe
+        assert not jx_eng.trace_safe
+        assert jx_eng.jit and jx_eng.differentiable
+        assert not np_eng.jit and not sc_eng.jit
+
+
+class TestScalarVsNumpy:
+    def test_uniform_bit_identical(self):
+        ref = get_engine("numpy").evaluate(GEMMS, MACHINES)
+        got = get_engine("scalar").evaluate(GEMMS, MACHINES)
+        assert_grid_identical(got, ref)
+
+    def test_table_i_bit_identical(self):
+        ref = get_engine("numpy").evaluate(list(TABLE_I), MACHINES)
+        got = get_engine("scalar").evaluate(list(TABLE_I), MACHINES)
+        assert_grid_identical(got, ref)
+
+    def test_ragged_bit_identical(self):
+        fam = ragged_scenario_grid(steps=8, skews=(1.0, 4.0))[:6]
+        ref = get_engine("numpy").evaluate(fam, (MI300X,))
+        got = get_engine("scalar").evaluate(fam, (MI300X,))
+        assert_grid_identical(got, ref)
+
+    def test_dma_into_place_bit_identical(self):
+        ref = get_engine("numpy").evaluate(
+            GEMMS, (MI300X,), dma_into_place=True
+        )
+        got = get_engine("scalar").evaluate(
+            GEMMS, (MI300X,), dma_into_place=True
+        )
+        assert_grid_identical(got, ref)
+
+    def test_serial_reference_on_all_invalid_subset(self):
+        """serial_comm/serial_gemm are analytic metadata: present even
+        when every requested schedule is indivisible for a scenario."""
+        from repro.core import Schedule
+
+        args = ([GemmShape(1001, 4096, 4096)], (MI300X,))
+        kw = dict(schedules=(Schedule.UNIFORM_FUSED_2D,))
+        ref = get_engine("numpy").evaluate(*args, **kw)
+        got = get_engine("scalar").evaluate(*args, **kw)
+        assert not ref.valid.any()
+        assert np.array_equal(got.serial_comm, ref.serial_comm)
+        assert np.array_equal(got.serial_gemm, ref.serial_gemm)
+        assert (ref.serial_comm > 0).all()
+
+    def test_generator_input_routes_ragged(self):
+        """An iterator of RaggedScenario must not silently drop its
+        profiles (engines materialize generic iterables first)."""
+        from repro.core.batch import RaggedBatch
+
+        fam = ragged_scenario_grid(steps=8, skews=(3.0,))[:4]
+        ref = get_engine("numpy").evaluate(fam, (MI300X,))
+        got = get_engine("numpy").evaluate(iter(fam), (MI300X,))
+        assert isinstance(got.scenarios, RaggedBatch)
+        assert np.array_equal(got.total, ref.total, equal_nan=True)
+
+
+class TestExploreGridThroughRegistry:
+    def test_scalar_backend_matches_numpy(self):
+        ex_np = explore_grid(TABLE_I, machines=MACHINES, backend="numpy")
+        ex_sc = explore_grid(TABLE_I, machines=MACHINES, backend="scalar")
+        assert np.array_equal(
+            ex_sc.grid.total, ex_np.grid.total, equal_nan=True
+        )
+        assert np.array_equal(ex_sc.heuristic_idx, ex_np.heuristic_idx)
+
+    def test_engine_kwarg(self):
+        ex = explore_grid(
+            TABLE_I, machines=(MI300X,), engine=get_engine("numpy")
+        )
+        assert ex.exact.shape == (len(TABLE_I), 1)
+
+    def test_from_grid_classmethod(self):
+        from repro.core.explorer import GridExploration
+
+        grid = get_engine("numpy").evaluate(list(TABLE_I), (MI300X,))
+        ex = GridExploration.from_grid(grid)
+        ex_ref = explore_grid(TABLE_I, machines=(MI300X,))
+        assert np.array_equal(ex.heuristic_idx, ex_ref.heuristic_idx)
+
+
+class TestCalibratorsThroughRegistry:
+    def test_calibrate_tau_backend_param(self):
+        from repro.core.heuristics import calibrate_tau
+
+        a = calibrate_tau(MI300X, list(TABLE_I))
+        b = calibrate_tau(MI300X, list(TABLE_I), backend="scalar")
+        assert a == b
+
+    def test_calibrate_serial_gate_backend_param(self):
+        from repro.core.heuristics import calibrate_serial_gate
+
+        a = calibrate_serial_gate((MI300X,), list(TABLE_I))
+        b = calibrate_serial_gate(
+            (MI300X,), list(TABLE_I), backend="scalar"
+        )
+        assert a == b
+
+    def test_unknown_backend_raises(self):
+        from repro.core.heuristics import calibrate_tau
+
+        with pytest.raises(ValueError):
+            calibrate_tau(MI300X, list(TABLE_I), backend="bogus")
+
+
+class TestShortlist:
+    def test_generic_shortlist_numpy(self):
+        from repro.core.engine import shortlist
+
+        out = shortlist(TABLE_I[0].gemm, MI300X, backend="numpy")
+        assert 1 <= len(out) <= 3
+        totals = [t for _, t in out]
+        assert totals == sorted(totals)
+
+    def test_shortlist_engine_instance(self):
+        from repro.core.engine import shortlist
+
+        out = shortlist(
+            TABLE_I[0].gemm, MI300X, engine=get_engine("scalar")
+        )
+        ref = shortlist(TABLE_I[0].gemm, MI300X, backend="numpy")
+        assert out == ref
+
+
+@pytest.mark.autotune
+class TestJaxEngineAgreement:
+    def test_jax_matches_numpy_through_registry(self):
+        ref = get_engine("numpy").evaluate(GEMMS, MACHINES)
+        got = get_engine("jax").evaluate(GEMMS, MACHINES)
+        assert np.array_equal(got.valid, ref.valid)
+        np.testing.assert_allclose(
+            got.total[ref.valid], ref.total[ref.valid], rtol=1e-9
+        )
+
+    def test_jaxgrid_shortlist_alias(self):
+        from repro.autotune.jaxgrid import shortlist as jx_shortlist
+        from repro.core.engine import shortlist as eng_shortlist
+
+        a = jx_shortlist(TABLE_I[0].gemm, MI300X, backend="numpy")
+        b = eng_shortlist(TABLE_I[0].gemm, MI300X, backend="numpy")
+        assert a == b

@@ -1,0 +1,277 @@
+"""Sharded sweep subsystem tests (``repro.sweep``).
+
+Edge cases the sharding must survive: scenario counts not divisible by
+the shard count, single-shard/single-device degenerate plans, ragged
+profiles traveling with their scenario shard, and — the acceptance bar —
+sharded evaluation reproducing the unsharded GridResult bit for bit
+(in-process over shards/hosts here; over >= 2 forced host devices in the
+subprocess driver ``tests/sweep_driver.py``).
+"""
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import MI300X, TPU_V5E, get_engine
+from repro.sweep import (
+    ShardSummary,
+    concat_batches,
+    concat_grid_results,
+    merge_summaries,
+    owner_of,
+    plan_shards,
+    shard_batch,
+    shards_for_host,
+    sweep_grid,
+    synthetic_batch,
+    synthetic_ragged_batch,
+)
+
+from grid_asserts import assert_grid_identical
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+MACHINES = (MI300X, TPU_V5E)
+
+
+class TestShardPlan:
+    def test_divisible(self):
+        p = plan_shards(12, 4)
+        assert p.sizes == (3, 3, 3, 3)
+        assert p.bounds[0] == (0, 3) and p.bounds[-1] == (9, 12)
+        assert p.pad == 0
+
+    def test_non_divisible_remainder_spread(self):
+        p = plan_shards(7, 3)
+        assert p.sizes == (3, 2, 2)
+        assert sum(p.sizes) == 7
+        # contiguous cover, no gaps or overlaps
+        assert p.bounds == ((0, 3), (3, 5), (5, 7))
+
+    def test_single_shard_degenerate(self):
+        p = plan_shards(5, 1)
+        assert p.bounds == ((0, 5),)
+
+    def test_more_shards_than_scenarios(self):
+        p = plan_shards(2, 4)
+        assert p.sizes == (1, 1, 0, 0)
+
+    def test_equalized_padding(self):
+        p = plan_shards(7, 3, equalize=True)
+        assert p.padded_size == 3
+        assert p.pad == 2
+        assert p.bounds == ((0, 3), (3, 6), (6, 7))
+
+    def test_owner_map_deterministic_and_exhaustive(self):
+        p = plan_shards(100, 7)
+        owned = [shards_for_host(p, h, 3) for h in range(3)]
+        flat = sorted(s for o in owned for s in o)
+        assert flat == list(range(7))
+        assert all(owner_of(s, 3) == h for h, o in enumerate(owned)
+                   for s in o)
+
+    def test_invalid_args(self):
+        with pytest.raises(ValueError):
+            plan_shards(10, 0)
+        with pytest.raises(ValueError):
+            shards_for_host(plan_shards(4, 2), 2, 2)
+
+
+class TestSynthetic:
+    def test_deterministic(self):
+        a = synthetic_batch(100, seed=7)
+        b = synthetic_batch(100, seed=7)
+        assert np.array_equal(a.m, b.m) and np.array_equal(a.k, b.k)
+
+    def test_ragged_rows_sum_to_one(self):
+        rb = synthetic_ragged_batch(64, seed=3)
+        np.testing.assert_allclose(rb.frac.sum(axis=1), 1.0, rtol=1e-12)
+        assert (rb.frac >= 0).all()
+
+    def test_ragged_single_step_degenerate(self):
+        rb = synthetic_ragged_batch(4, steps=1)
+        assert np.array_equal(rb.frac, np.ones((4, 1)))
+        with pytest.raises(ValueError):
+            synthetic_ragged_batch(4, steps=0)
+
+
+class TestShardedEqualsUnsharded:
+    def test_uniform_non_divisible(self):
+        sb = synthetic_batch(101, seed=0)  # 101 over 4 shards
+        ref = get_engine("numpy").evaluate(sb, MACHINES)
+        res = sweep_grid(sb, MACHINES, num_shards=4, mode="gather")
+        assert_grid_identical(res.grid, ref)
+
+    def test_uniform_single_shard_degenerate(self):
+        sb = synthetic_batch(17, seed=1)
+        ref = get_engine("numpy").evaluate(sb, MACHINES)
+        res = sweep_grid(sb, MACHINES, num_shards=1, mode="gather")
+        assert_grid_identical(res.grid, ref)
+
+    def test_ragged_profiles_travel_with_shards(self):
+        rb = synthetic_ragged_batch(37, seed=5)
+        ref = get_engine("numpy").evaluate(rb, MACHINES)
+        res = sweep_grid(rb, MACHINES, num_shards=5, mode="gather")
+        assert_grid_identical(res.grid, ref)
+        # the reassembled batch carries the original frac rows exactly
+        assert np.array_equal(res.grid.scenarios.frac, rb.frac)
+        # and each shard's slice is the matching row block
+        parts = shard_batch(rb, res.plan)
+        for (start, stop), piece in zip(res.plan.bounds, parts):
+            assert np.array_equal(piece.frac, rb.frac[start:stop])
+
+    def test_two_hosts_disjoint_and_exhaustive(self):
+        sb = synthetic_batch(41, seed=2)
+        ref = get_engine("numpy").evaluate(sb, MACHINES)
+        results = [
+            sweep_grid(sb, MACHINES, num_shards=4, host_index=h,
+                       host_count=2, mode="gather")
+            for h in (0, 1)
+        ]
+        assert results[0].owned == (0, 2) and results[1].owned == (1, 3)
+        # hosts cover disjoint scenario sets whose union is everything
+        covered = sorted(
+            i for res in results for s in res.owned
+            for i in range(*res.plan.bounds[s])
+        )
+        assert covered == list(range(41))
+        # reassemble in shard order -> bit-identical full grid
+        from repro.sweep.runner import _slice_grid
+
+        by_shard = {}
+        for res in results:
+            offset = 0
+            for shard in res.owned:
+                size = res.plan.sizes[shard]
+                by_shard[shard] = _slice_grid(
+                    res.grid, offset, offset + size
+                )
+                offset += size
+        merged = concat_grid_results([by_shard[i] for i in range(4)])
+        assert_grid_identical(merged, ref)
+
+    def test_more_shards_than_scenarios(self):
+        sb = synthetic_batch(3, seed=9)
+        ref = get_engine("numpy").evaluate(sb, MACHINES)
+        res = sweep_grid(sb, MACHINES, num_shards=8, mode="gather")
+        assert_grid_identical(res.grid, ref)
+        assert sum(s.n_scenarios == 0 for s in res.summaries) == 5
+
+    def test_gather_with_all_empty_owned_shards(self):
+        """A host whose round-robin shards are all empty still honors
+        the gather contract: an S=0 GridResult, never None."""
+        sb = synthetic_batch(1, seed=10)
+        res = sweep_grid(
+            sb, MACHINES, num_shards=4, host_index=1, host_count=2,
+            mode="gather",
+        )
+        assert res.grid is not None
+        assert res.grid.total.shape[1] == 0
+        assert res.grid.machines == MACHINES
+
+    def test_scalar_engine_shards_too(self):
+        sb = synthetic_batch(6, seed=4)
+        ref = get_engine("numpy").evaluate(sb, MACHINES)
+        res = sweep_grid(sb, MACHINES, backend="scalar", num_shards=2)
+        assert_grid_identical(res.grid, ref)
+
+
+class TestReduceMode:
+    def test_counts_match_gather(self):
+        sb = synthetic_batch(60, seed=6)
+        ref = get_engine("numpy").evaluate(sb, MACHINES)
+        streamed: list[ShardSummary] = []
+        res = sweep_grid(
+            sb, MACHINES, num_shards=3, mode="reduce",
+            on_shard=streamed.append,
+        )
+        assert res.grid is None
+        assert len(streamed) == 3
+        merged = merge_summaries(res.summaries)
+        best = ref.best_idx()
+        want = {
+            s.value: int((best == l).sum())
+            for l, s in enumerate(ref.schedules)
+        }
+        assert merged["best_counts"] == want
+        assert merged["n_scenarios"] == 60
+        assert merged["n_points"] == 60 * len(MACHINES)
+
+    def test_summary_json_roundtrip(self):
+        sb = synthetic_batch(10, seed=8)
+        res = sweep_grid(sb, MACHINES, num_shards=2, mode="reduce")
+        for s in res.summaries:
+            assert json.loads(json.dumps(s.to_json()))["n_scenarios"] > 0
+
+    def test_bad_mode_rejected(self):
+        with pytest.raises(ValueError):
+            sweep_grid(synthetic_batch(4), MACHINES, mode="scatter")
+
+
+class TestConcat:
+    def test_concat_batches_ragged_mixed_p(self):
+        a = synthetic_ragged_batch(5, seed=1, steps=4)
+        b = synthetic_ragged_batch(5, seed=2, steps=8)
+        cat = concat_batches([a, b])
+        assert cat.frac.shape == (10, 8)
+        # zero-padded columns change nothing (masked-scan contract)
+        assert np.array_equal(cat.frac[:5, :4], a.frac)
+        assert (cat.frac[:5, 4:] == 0).all()
+
+    def test_concat_mismatched_machines_rejected(self):
+        sb = synthetic_batch(8, seed=1)
+        g1 = get_engine("numpy").evaluate(sb, (MI300X,))
+        g2 = get_engine("numpy").evaluate(sb, (TPU_V5E,))
+        with pytest.raises(ValueError):
+            concat_grid_results([g1, g2])
+
+
+def test_sweep_cli_smoke(tmp_path):
+    """scripts/sweep.py streams per-shard JSON lines + a host summary."""
+    out = tmp_path / "sweep.jsonl"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(_ROOT / "src") + os.pathsep + env.get(
+        "PYTHONPATH", ""
+    )
+    proc = subprocess.run(
+        [
+            sys.executable, str(_ROOT / "scripts" / "sweep.py"),
+            "--scenarios", "300", "--shards", "4", "--mode", "reduce",
+            "--out", str(out),
+        ],
+        capture_output=True, text=True, timeout=600, env=env,
+    )
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    lines = [json.loads(ln) for ln in out.read_text().splitlines()]
+    shard_lines = [ln for ln in lines if "shard_summary" in ln]
+    host_lines = [ln for ln in lines if "host_summary" in ln]
+    assert len(shard_lines) == 4 and len(host_lines) == 1
+    assert host_lines[0]["host_summary"]["n_scenarios"] == 300
+
+
+@pytest.mark.slow
+@pytest.mark.multidev
+def test_device_sharded_sweep_multidevice():
+    """Sharded sweep over 2 forced host devices == unsharded GridResult,
+    bit for bit, uniform and ragged (subprocess driver)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(_ROOT / "src") + os.pathsep + env.get(
+        "PYTHONPATH", ""
+    )
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, str(_ROOT / "tests" / "sweep_driver.py")],
+        capture_output=True, text=True, timeout=1200, env=env,
+    )
+    if proc.returncode != 0 or "ALL-OK" not in proc.stdout:
+        raise AssertionError(
+            f"sweep driver failed\n--- stdout ---\n{proc.stdout[-8000:]}"
+            f"\n--- stderr ---\n{proc.stderr[-8000:]}"
+        )
+    assert "ok uniform_device_sharded_exact" in proc.stdout
+    assert "ok ragged_device_sharded_exact" in proc.stdout
+    assert "ok hosts_compose_with_devices" in proc.stdout
