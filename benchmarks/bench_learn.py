@@ -1,0 +1,145 @@
+"""Learned heuristic tranche: training throughput + gate accuracy.
+
+Four sections:
+
+  * **features**: vectorized feature-extraction throughput
+    (``repro.learn.features``) over the training batch.
+  * **train**: end-to-end gate training — reduce-mode sharded sweeps
+    accumulate the integer sufficient statistics (no gathered grid),
+    then the greedy tree grower fits the threshold family.
+  * **within5_skewed**: within-5% accuracy of the learned gate on the
+    *held-out* capacity-skewed EP family (the grid whose ~64-76% scalar
+    gate accuracy motivated the learned tranche) — the value column
+    carries the percentage so ``--check-regression`` can gate on it.
+  * **within5_uniform**: the PR-1 uniform design-space grid, guarding
+    that the skew-aware family never regresses the uniform ~84%.
+
+Training data is seeded synthetic (Dirichlet ragged + log-uniform
+scenarios) and disjoint from both evaluation grids.
+
+Determinism: earlier benchmark modules freeze per-machine TAU overrides
+(``bench_sweep`` runs the paper's one-time threshold calibration), which
+would make these accuracy keys depend on module order.  ``run``
+snapshots and clears the heuristic override dicts for its duration, so
+``learn/*`` numbers are identical standalone (``--only learn``) and in
+the full suite — a requirement for the ``--check-regression`` accuracy
+floor.
+"""
+
+import contextlib
+import time
+
+from repro.core import (
+    TABLE_I,
+    ScenarioBatch,
+    machine_grid,
+    scenario_grid,
+    synthetic_scenarios,
+)
+from repro.core.batch import RaggedBatch
+from repro.core.engine import get_engine
+from repro.core.workload import ragged_scenario_grid
+from repro.learn import (
+    gate_accuracy,
+    scenario_features,
+    sweep_stats,
+    train_gate_from_stats,
+)
+from repro.sweep import synthetic_batch, synthetic_ragged_batch
+
+from benchmarks.common import row
+
+_TRAIN_N = 2000
+_SHARDS = 8
+
+
+@contextlib.contextmanager
+def _frozen_default_thresholds():
+    """Run with the frozen default TAU / serial gate (no overrides)."""
+    from repro.core import heuristics as _h
+
+    tau = dict(_h._TAU_OVERRIDES)
+    gate = dict(_h._SERIAL_GATE_OVERRIDES)
+    _h._TAU_OVERRIDES.clear()
+    _h._SERIAL_GATE_OVERRIDES.clear()
+    try:
+        yield
+    finally:
+        _h._TAU_OVERRIDES.clear()
+        _h._TAU_OVERRIDES.update(tau)
+        _h._SERIAL_GATE_OVERRIDES.clear()
+        _h._SERIAL_GATE_OVERRIDES.update(gate)
+
+
+def _train(machines):
+    """Sharded-sweep statistics (ragged + uniform) -> learned gate."""
+    stats_r, _ = sweep_stats(
+        synthetic_ragged_batch(_TRAIN_N, seed=7), machines,
+        num_shards=_SHARDS,
+    )
+    stats_u, _ = sweep_stats(
+        synthetic_batch(_TRAIN_N, seed=8), machines, num_shards=_SHARDS
+    )
+    return train_gate_from_stats(stats_r + stats_u)
+
+
+def run() -> list[str]:
+    with _frozen_default_thresholds():
+        return _run()
+
+
+def _run() -> list[str]:
+    machines = machine_grid()
+    train_points = 2 * _TRAIN_N * len(machines)
+
+    rb = synthetic_ragged_batch(_TRAIN_N, seed=7)
+    scenario_features(rb, machines[0])  # warm calibration caches
+    t0 = time.perf_counter()
+    for machine in machines:
+        scenario_features(rb, machine)
+    t_feat = time.perf_counter() - t0
+    feat_points = _TRAIN_N * len(machines)
+
+    t0 = time.perf_counter()
+    gate = _train(machines)
+    t_train = time.perf_counter() - t0
+
+    # Held-out skewed EP family (the bench_ragged grid).
+    base = [s for s in TABLE_I if s.parallelism == "EP"]
+    base += synthetic_scenarios(12)
+    fam = ragged_scenario_grid(
+        steps=8, skews=(1.0, 2.0, 4.0), zipf_alphas=(1.0,),
+        top_k=((2, 0.6),), scenarios=base,
+    )
+    grid_skew = get_engine("numpy").evaluate(
+        RaggedBatch.from_ragged_scenarios(fam), machines
+    )
+    skew_scalar = 100 * gate_accuracy(grid_skew)
+    skew_learned = 100 * gate_accuracy(grid_skew, gate)
+
+    # PR-1 uniform design-space grid (~720 x 8): the do-no-harm guard.
+    grid_unif = get_engine("numpy").evaluate(
+        ScenarioBatch.from_scenarios(scenario_grid()), machines
+    )
+    unif_scalar = 100 * gate_accuracy(grid_unif)
+    unif_learned = 100 * gate_accuracy(grid_unif, gate)
+
+    n_skew = grid_skew.total.shape[1] * grid_skew.total.shape[2]
+    n_unif = grid_unif.total.shape[1] * grid_unif.total.shape[2]
+    return [
+        row("learn/features", 1e6 * t_feat / feat_points,
+            f"{feat_points / t_feat:.0f} scenario-features/s"),
+        row("learn/train", 1e6 * t_train / train_points,
+            f"{train_points} points via {_SHARDS}-shard reduce sweeps, "
+            f"{gate.n_leaves} leaves, {t_train:.2f}s"),
+        row("learn/within5_skewed", skew_learned,
+            f"{skew_learned:.1f}% of {n_skew} held-out skewed points "
+            f"(scalar gate: {skew_scalar:.1f}%)"),
+        row("learn/within5_skewed_scalar", skew_scalar,
+            "scalar-gate baseline on the same grid"),
+        row("learn/within5_uniform", unif_learned,
+            f"{unif_learned:.1f}% of {n_unif} uniform grid points "
+            f"(scalar gate: {unif_scalar:.1f}%)"),
+        row("learn/within5_uniform_scalar", unif_scalar,
+            "scalar-gate baseline on the same grid"),
+    ]

@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV.  Figure mapping:
   autotune (jit engine + tuner)   -> bench_autotune
   ragged (non-uniform) engine     -> bench_ragged
   sharded sweep subsystem         -> bench_sweep_shard
+  learned gate + calibration      -> bench_learn (--only learn)
 
 ``--json [PATH]`` additionally writes a machine-readable name ->
 us_per_call map (default ``BENCH_sweep.json``) so the perf trajectory is
@@ -37,9 +38,30 @@ THROUGHPUT_KEYS = (
     "ragged/batched",
     "ragged/jax",
     "sweepshard/reduce",
+    "learn/features",
+    "learn/train",
 )
+# Keys whose value is an accuracy percentage (higher is better); the
+# guard fails if one drops more than ACCURACY_SLACK_PCT points below
+# the committed baseline.  These are deterministic (seeded training
+# data, analytic grids), so the slack only absorbs intentional
+# re-recordings, not run-to-run noise.
+ACCURACY_KEYS = (
+    "learn/within5_skewed",
+    "learn/within5_uniform",
+)
+ACCURACY_SLACK_PCT = 2.0
 # >20% throughput drop == us_per_call growing beyond 1/0.8.
 REGRESSION_RATIO = 1.0 / 0.8
+
+# ``--only`` group aliases: documented short workload names resolved to
+# their exact module name BEFORE the endswith match.  Not redundant with
+# the suffix rule: "learn" as a bare suffix would also catch any future
+# module that happens to end in "learn", while the alias pins the
+# documented name to one module.
+ONLY_ALIASES = {
+    "learn": "bench_learn",
+}
 
 
 def check_regression(
@@ -47,7 +69,7 @@ def check_regression(
     baseline: dict[str, float],
     ratio: float = REGRESSION_RATIO,
 ) -> list[str]:
-    """Engine-throughput keys that regressed >20% vs the baseline map."""
+    """Engine-throughput / accuracy keys that regressed vs the baseline."""
     bad = []
     for key in THROUGHPUT_KEYS:
         old = baseline.get(key)
@@ -58,6 +80,16 @@ def check_regression(
             bad.append(
                 f"{key}: {old:.1f} -> {new:.1f} us/point "
                 f"({100 * (new / old - 1):.0f}% slower)"
+            )
+    for key in ACCURACY_KEYS:
+        old = baseline.get(key)
+        new = results.get(key)
+        if not old or new is None:
+            continue
+        if new < old - ACCURACY_SLACK_PCT:
+            bad.append(
+                f"{key}: {old:.1f}% -> {new:.1f}% "
+                f"(accuracy dropped {old - new:.1f} points)"
             )
     return bad
 
@@ -72,6 +104,7 @@ def main() -> None:
         bench_dil_comm,
         bench_dil_gemm,
         bench_heuristic,
+        bench_learn,
         bench_proportions,
         bench_ragged,
         bench_schedules,
@@ -85,6 +118,7 @@ def main() -> None:
         bench_schedules, bench_shard_overlap, bench_comparison,
         bench_heuristic, bench_cpu_overlap, bench_arch_schedules,
         bench_sweep, bench_autotune, bench_ragged, bench_sweep_shard,
+        bench_learn,
     ]
 
     ap = argparse.ArgumentParser(description=__doc__)
@@ -121,7 +155,9 @@ def main() -> None:
     )
     args = ap.parse_args()
     if args.only:
-        wanted = [w for w in args.only.split(",") if w]
+        wanted = [
+            ONLY_ALIASES.get(w, w) for w in args.only.split(",") if w
+        ]
         modules = [
             m for m in modules
             if any(m.__name__.endswith(w) for w in wanted)

@@ -119,6 +119,9 @@ def main() -> None:
     merged["host_index"] = args.host_index
     merged["host_count"] = args.host_count
     merged["owned_shards"] = list(res.owned)
+    # Total shard count of the deterministic plan: what the gather-side
+    # aggregator (scripts/merge_sweep.py) checks completeness against.
+    merged["plan_shards"] = len(res.plan.bounds)
     stream.write(json.dumps({"host_summary": merged}) + "\n")
     stream.flush()
     if args.out:

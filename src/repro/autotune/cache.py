@@ -53,6 +53,16 @@ from typing import Any
 SCHEMA_VERSION = 2  # v2: ragged step-profile digest joined the key schema
 _ENV_VAR = "REPRO_AUTOTUNE_CACHE_DIR"
 
+# Artifact segment: non-decision payloads (learned gates, fitted machine
+# models) share the store under a reserved key prefix.  TuneKey strings
+# always start with a machine name segment, never this prefix, so tuner
+# lookups and artifact lookups can never collide.
+ARTIFACT_PREFIX = "__artifact__"
+
+
+def artifact_key(kind: str, name: str) -> str:
+    return f"{ARTIFACT_PREFIX}/{kind}/{name}"
+
 
 def _jax_version() -> str:
     try:
@@ -182,9 +192,51 @@ class AutotuneCache:
     def __contains__(self, key: str) -> bool:
         return key in self.entries
 
+    # -- artifact segment (learned gates, fitted machine models) --------
+
+    def put_artifact(
+        self,
+        kind: str,
+        name: str,
+        payload: dict[str, Any],
+        *,
+        persist: bool = True,
+    ) -> None:
+        """Store a non-decision artifact (e.g. a ``repro.learn`` gate).
+
+        Artifacts live in the same versioned file under the reserved
+        ``__artifact__/`` key prefix, so they inherit the cache's
+        atomic-write, merge-on-save and schema/jax-version invalidation
+        behavior for free.
+        """
+        self.put(artifact_key(kind, name), payload, persist=persist)
+
+    def get_artifact(self, kind: str, name: str) -> dict[str, Any] | None:
+        return self.get(artifact_key(kind, name))
+
+    def artifact_names(self, kind: str) -> tuple[str, ...]:
+        prefix = f"{ARTIFACT_PREFIX}/{kind}/"
+        return tuple(
+            sorted(
+                k[len(prefix):]
+                for k in self.entries
+                if k.startswith(prefix)
+            )
+        )
+
+    def decision_entries(self) -> dict[str, dict[str, Any]]:
+        """Tuned-decision entries only (artifact segment filtered out)."""
+        return {
+            k: v
+            for k, v in self.entries.items()
+            if not k.startswith(f"{ARTIFACT_PREFIX}/")
+        }
+
 
 __all__ = [
     "SCHEMA_VERSION",
+    "ARTIFACT_PREFIX",
+    "artifact_key",
     "AutotuneCache",
     "default_cache_dir",
     "default_cache_path",

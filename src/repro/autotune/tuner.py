@@ -121,6 +121,7 @@ class Autotuner:
         *,
         backend: str = "jax",
         persist: bool = True,
+        gate=None,
     ):
         from repro.core.engine import get_engine
 
@@ -130,6 +131,38 @@ class Autotuner:
         self.persist = persist
         self.hits = 0
         self.misses = 0
+        self._gate = gate
+        self._artifact_gate = None
+        self._artifact_loaded = False
+
+    def learned_gate(self):
+        """The learned serial-gate family this tuner's fallback consults.
+
+        Resolution order: explicit ``gate=`` constructor argument, the
+        process-wide default (``repro.learn.gate.set_default_gate`` —
+        re-checked on every call, so installing or clearing a default
+        after this tuner was built takes effect immediately), then a
+        gate persisted in this cache's artifact segment (loaded once).
+        The learned family takes precedence over the hand-tuned scalar
+        gate inside ``select_schedule``; None means "no learned gate"
+        and the scalar gate applies as before.
+        """
+        if self._gate is not None:
+            return self._gate
+        try:
+            from repro.learn.gate import get_default_gate, load_gate
+        except Exception:  # pragma: no cover - learn is a sibling package
+            return None
+        ambient = get_default_gate()
+        if ambient is not None:
+            return ambient
+        if not self._artifact_loaded:
+            self._artifact_loaded = True
+            try:
+                self._artifact_gate = load_gate(cache=self.cache)
+            except Exception:
+                self._artifact_gate = None
+        return self._artifact_gate
 
     # -- tier 1+2: cache / analytic ------------------------------------
 
@@ -193,8 +226,17 @@ class Autotuner:
             sched, model_t = ranked[0]  # serial always survives the filter
         except Exception:
             # Zero-cost fallback, against the group-retargeted machine so
-            # the decision tree + serial gate see the real group size.
-            dec = select_schedule(gemm, eff, profile=profile)
+            # the decision tree + serial gate see the real group size;
+            # a learned gate (sweep-trained threshold family) is
+            # consulted ahead of the hand-tuned scalar gate.  The
+            # never-raise contract outranks the gate: a malformed gate
+            # artifact degrades to the scalar-gated tree.
+            try:
+                dec = select_schedule(
+                    gemm, eff, profile=profile, gate=self.learned_gate()
+                )
+            except Exception:
+                dec = select_schedule(gemm, eff, profile=profile)
             return TuneDecision(dec.schedule, "heuristic")
         self._record(key, sched, "analytic", model_total_s=model_t)
         return TuneDecision(sched, "analytic", model_t)

@@ -92,6 +92,7 @@ from repro.core.heuristics import (
     select_schedule_batch,
     serial_gate_score,
     serial_gate_score_batch,
+    serial_gate_terms_batch,
 )
 from repro.core.explorer import (
     Exploration,
@@ -122,6 +123,7 @@ __all__ = [
     "machine_serial_gate", "machine_threshold",
     "select_schedule", "select_schedule_batch",
     "serial_gate_score", "serial_gate_score_batch",
+    "serial_gate_terms_batch",
     "Exploration", "GridExploration", "explore", "explore_grid",
     "prune_report",
 ]

@@ -417,15 +417,25 @@ _INSTANCES: dict[str, Engine] = {}
 
 
 def register_engine(
-    name: str, factory: Callable[[], Engine], *, replace: bool = False
+    name: str,
+    factory: Callable[[], Engine],
+    *,
+    overwrite: bool = False,
 ) -> None:
     """Register an engine factory under ``name``.
 
-    Third parties (tests, experimental backends) can register their own;
-    ``replace=True`` overrides an existing registration.
+    Third parties (tests, experimental backends such as
+    ``repro.learn.measured``) can register their own.  A name collision
+    raises — registering over an existing engine would silently reroute
+    every ``backend=`` caller — unless ``overwrite=True`` is passed
+    explicitly; the error lists the registered names, mirroring
+    :func:`get_engine`'s unknown-name diagnostic.
     """
-    if not replace and name in _REGISTRY:
-        raise ValueError(f"engine {name!r} already registered")
+    if not overwrite and name in _REGISTRY:
+        raise ValueError(
+            f"engine {name!r} already registered (pass overwrite=True to "
+            f"replace it); registered engines: {', '.join(engine_names())}"
+        )
     _REGISTRY[name] = factory
     _INSTANCES.pop(name, None)
 

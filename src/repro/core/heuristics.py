@@ -72,8 +72,8 @@ def machine_serial_gate(machine: MachineSpec) -> float:
     return _SERIAL_GATE_OVERRIDES.get(machine.name, DEFAULT_SERIAL_GATE)
 
 
-def serial_gate_score_batch(m, n, k, dtype_bytes, machine: MachineSpec):
-    """Vectorized gate score: comm/compute ratio x net chunking overhead.
+def serial_gate_terms_batch(m, n, k, dtype_bytes, machine: MachineSpec):
+    """Vectorized ``(r, inflate)`` terms of the serial-gate score.
 
     All quantities are static machine-model numbers (no profiling):
     ``r`` compares the serial all-gather against the peak-rate
@@ -81,9 +81,9 @@ def serial_gate_score_batch(m, n, k, dtype_bytes, machine: MachineSpec):
     ratio from the shared link model (g FiCCO steps of 1/g^2-sized
     chunks vs one serial all-gather — both via the same
     ``repro.core.batch`` formulas the engines use, so a comm-model fix
-    propagates here automatically).  Overlap can hide at most the GEMM;
-    chunking costs ``(inflate * CIL - 1)`` of the comm — serial wins
-    when the latter (scaled by r) exceeds 1.
+    propagates here automatically).  ``repro.learn.features`` reuses
+    these terms as learned-gate inputs, so the heuristic and the
+    learner can never drift apart on their definitions.
     """
     from repro.core import batch as _batch  # local: avoids a cycle
 
@@ -103,7 +103,27 @@ def serial_gate_score_batch(m, n, k, dtype_bytes, machine: MachineSpec):
             mk_bytes / (g * g), machine
         )
         inflate = t_chunked_ag / t_serial_ag
+    return r, inflate
+
+
+def serial_gate_score_from_terms(r, inflate):
+    """Gate score from precomputed :func:`serial_gate_terms_batch` terms
+    (lets callers that also need the terms compute them once)."""
+    with np.errstate(invalid="ignore"):
         return r * (inflate * _GATE_COMM_CIL - 1.0)
+
+
+def serial_gate_score_batch(m, n, k, dtype_bytes, machine: MachineSpec):
+    """Vectorized gate score: comm/compute ratio x net chunking overhead.
+
+    Overlap can hide at most the GEMM; chunking costs
+    ``(inflate * CIL - 1)`` of the comm — serial wins when the latter
+    (scaled by r) exceeds 1.  See :func:`serial_gate_terms_batch` for
+    the two terms.
+    """
+    return serial_gate_score_from_terms(
+        *serial_gate_terms_batch(m, n, k, dtype_bytes, machine)
+    )
 
 
 def serial_gate_score(gemm: GemmShape, machine: MachineSpec) -> float:
@@ -196,6 +216,7 @@ def select_schedule(
     allow_serial_guard: bool = True,
     serial_gate: float | None = None,
     profile=None,
+    gate=None,
 ) -> HeuristicDecision:
     """Static schedule pick (Fig. 12a tree + the learned serial gate).
 
@@ -210,6 +231,14 @@ def select_schedule(
     by the profile's imbalance (max/mean active-step share) — heavily
     skewed EP dispatches fall back to serial sooner, which is exactly
     what the ragged grid's analytic optima show.
+
+    ``gate`` (a :class:`repro.learn.gate.LearnedGate`) replaces the
+    scalar threshold with the sweep-learned threshold *family*: the raw
+    gate score is compared against a per-scenario threshold conditioned
+    on ``(imbalance, active_steps, OTB, r)`` — the profile's skew enters
+    as a tree feature rather than a fixed multiplicative scaling.  It
+    takes precedence over both the calibrated per-machine gate and an
+    explicit ``serial_gate`` float.
     """
     metric = gemm.otb * gemm.bytes_mt  # == gemm.flops
     t = machine_threshold(machine, tau)
@@ -220,18 +249,30 @@ def select_schedule(
             "operator too small to amortize decomposition (beyond-paper guard)",
         )
     if allow_serial_guard:
-        gate = (
-            serial_gate
-            if serial_gate is not None
-            else machine_serial_gate(machine)
-        )
-        imbalance = 1.0 if profile is None else float(profile.imbalance)
-        if serial_gate_score(gemm, machine) * imbalance > gate:
-            return HeuristicDecision(
-                Schedule.SERIAL, metric, t,
+        score = serial_gate_score(gemm, machine)
+        if gate is not None:
+            # ``>=`` matches the learned gate's training accounting
+            # (score bins are right-closed at the threshold edges).
+            thr = float(gate.threshold_for(gemm, machine, profile=profile))
+            stay_serial = score >= thr
+            reason = (
                 "comm-bound: chunking overhead exceeds hidden compute "
-                "(grid-learned serial gate)",
+                "(sweep-learned gate family)"
             )
+        else:
+            g_thr = (
+                serial_gate
+                if serial_gate is not None
+                else machine_serial_gate(machine)
+            )
+            imbalance = 1.0 if profile is None else float(profile.imbalance)
+            stay_serial = score * imbalance > g_thr
+            reason = (
+                "comm-bound: chunking overhead exceeds hidden compute "
+                "(grid-learned serial gate)"
+            )
+        if stay_serial:
+            return HeuristicDecision(Schedule.SERIAL, metric, t, reason)
     if gemm.m < gemm.k:
         return HeuristicDecision(
             Schedule.UNIFORM_FUSED_2D, metric, t,
@@ -264,6 +305,9 @@ def select_schedule_batch(
     allow_serial_guard: bool = True,
     serial_gate: float | None = None,
     imbalance=None,
+    active_steps=None,
+    gate=None,
+    terms=None,
 ):
     """Vectorized :func:`select_schedule` over ``(S,)`` shape arrays.
 
@@ -274,6 +318,14 @@ def select_schedule_batch(
     ``imbalance`` is the per-scenario ragged-profile imbalance factor
     (``RaggedBatch.imbalance``; 1.0 == uniform): it scales the serial
     gate score exactly like the scalar tree's ``profile`` argument.
+
+    ``gate`` (a :class:`repro.learn.gate.LearnedGate`) swaps the scalar
+    gate for the learned threshold family, exactly like the scalar
+    tree's ``gate`` argument; ``active_steps`` (per-scenario active step
+    counts, default ``machine.group``) is a gate feature alongside
+    ``imbalance``.  ``terms`` optionally carries precomputed
+    :func:`serial_gate_terms_batch` output so batch callers evaluate the
+    link model exactly once.
     """
     from repro.core.batch import SCHEDULE_INDEX  # local: avoids a cycle
 
@@ -287,15 +339,32 @@ def select_schedule_batch(
     t = machine_threshold(machine, tau)
 
     if allow_serial_guard:
-        gate = (
-            serial_gate
-            if serial_gate is not None
-            else machine_serial_gate(machine)
-        )
-        imb = 1.0 if imbalance is None else np.asarray(imbalance, np.float64)
-        stay_serial = (flops < MIN_DECOMPOSE_FLOPS) | (
-            serial_gate_score_batch(m, n, k, b, machine) * imb > gate
-        )
+        if terms is None:
+            terms = serial_gate_terms_batch(m, n, k, b, machine)
+        scores = serial_gate_score_from_terms(*terms)
+        if gate is not None:
+            # ``>=`` matches the learned gate's training accounting.
+            # The precomputed terms ride along so the gate's feature
+            # matrix does not recompute the link model.
+            thr = gate.thresholds_batch(
+                m, n, k, b, machine,
+                imbalance=imbalance, active_steps=active_steps,
+                terms=terms,
+            )
+            stay_serial = (flops < MIN_DECOMPOSE_FLOPS) | (scores >= thr)
+        else:
+            g_thr = (
+                serial_gate
+                if serial_gate is not None
+                else machine_serial_gate(machine)
+            )
+            imb = (
+                1.0 if imbalance is None
+                else np.asarray(imbalance, np.float64)
+            )
+            stay_serial = (flops < MIN_DECOMPOSE_FLOPS) | (
+                scores * imb > g_thr
+            )
     else:
         stay_serial = np.zeros(m.shape, dtype=bool)
     conds = [

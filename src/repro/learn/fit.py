@@ -1,0 +1,396 @@
+"""Sim-to-real machine calibration: fit machine parameters to measured
+schedule times by gradient descent.
+
+The jitted grid engine (:mod:`repro.autotune.jaxgrid`) is differentiable
+w.r.t. every :class:`~repro.autotune.jaxgrid.MachineArrays` leaf, so
+closing the gap between the analytic model and a real deployment is a
+few Adam steps: collect ``(gemm, schedule, measured seconds)`` records —
+``Autotuner.measure`` persists exactly these — and descend the mean
+squared *log*-time error over the fittable parameters (``link_bw``,
+``s_half``, the CIL coefficients, ...).  Log-space on both sides keeps
+the loss scale-free across microsecond and millisecond operators and
+guarantees positive parameters.
+
+This lands the ROADMAP item "calibrate machine models from
+measurements": per deployment, the persisted measured tier feeds
+:func:`records_from_cache`, :func:`fit_machine` recovers the machine's
+effective ``link_bw``/``s_half``/CIL, and the resulting
+:class:`FitResult` (a) re-evaluates grids through
+``evaluate_grid_raw(..., fit.machine_arrays())`` and (b) persists in the
+autotune cache's artifact segment next to the learned gate.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.machine import MachineSpec, machine_for_group
+from repro.core.schedule_types import Schedule
+from repro.core.workload import GemmShape
+
+FIT_SCHEMA_VERSION = 1
+FIT_ARTIFACT_KIND = "machine_fit"
+
+# MachineArrays leaves fit_machine may optimize.  All are positive and
+# enter the model smoothly; integer/topology leaves are not fittable.
+FITTABLE_PARAMS = (
+    "link_bw",
+    "s_half",
+    "hbm_bw",
+    "peak_flops",
+    "kernel_latency",
+    "link_latency",
+    "kernel_ramp",
+    "cil_gemm_c2",
+    "cil_gemm_c3",
+    "cil_comm_c2",
+    "cil_comm_c3",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class MeasuredRecord:
+    """One measured schedule execution (what ``Autotuner.measure`` logs)."""
+
+    gemm: GemmShape
+    schedule: Schedule
+    seconds: float
+    group: int
+
+
+def records_from_cache(cache, machine_name: str) -> list[MeasuredRecord]:
+    """Extract measured-tier records for one machine from the autotune
+    decision cache.
+
+    Keys are ``TuneKey`` strings (``machine/gG/mM/nN/kK/bB/profile``);
+    machine names may themselves contain ``/`` (the machine-grid
+    variants do), so fields parse from the right.  Only uniform-profile
+    entries (digest exactly ``u<steps>`` — a *named* skewed profile can
+    legitimately start with ``u``) with a recorded ``measured_total_s``
+    qualify.
+    """
+    import re
+
+    out: list[MeasuredRecord] = []
+    for key, entry in cache.decision_entries().items():
+        t = entry.get("measured_total_s")
+        if not t:
+            continue
+        parts = key.split("/")
+        if len(parts) < 7:
+            continue
+        mach = "/".join(parts[:-6])
+        g, m, n, k, b, profile = parts[-6:]
+        if mach != machine_name or not re.fullmatch(r"u\d+", profile):
+            continue
+        try:
+            sched = Schedule(entry["schedule"])
+            out.append(
+                MeasuredRecord(
+                    gemm=GemmShape(
+                        int(m[1:]), int(n[1:]), int(k[1:]), int(b[1:])
+                    ),
+                    schedule=sched,
+                    seconds=float(t),
+                    group=int(g[1:]),
+                )
+            )
+        except (KeyError, ValueError):
+            continue
+    return out
+
+
+def _spec_payload(machine: MachineSpec) -> dict:
+    raw = dataclasses.asdict(machine)
+    raw["topology"] = machine.topology.value
+    return raw
+
+
+def _spec_from_payload(raw: dict) -> MachineSpec:
+    from repro.core.machine import Topology
+
+    fields = dict(raw)
+    fields["topology"] = Topology(fields["topology"])
+    return MachineSpec(**fields)
+
+
+@dataclasses.dataclass(frozen=True)
+class FitResult:
+    """Fitted machine parameters + fit quality.
+
+    ``fitted`` maps parameter name -> fitted value; ``initial`` holds
+    the pre-fit values (the analytic model's calibration).  ``loss0`` /
+    ``loss`` are mean squared log-time errors before/after.
+    ``machine_spec`` is the full spec the fit ran against (a
+    machine-grid variant's topology/link counts survive persistence —
+    rebuilding from the base registry machine would silently change the
+    comm model under the fitted parameters).
+    """
+
+    machine: str
+    group: int
+    params: tuple[str, ...]
+    fitted: dict[str, float]
+    initial: dict[str, float]
+    loss0: float
+    loss: float
+    n_records: int
+    machine_spec: dict = dataclasses.field(default_factory=dict)
+    version: int = FIT_SCHEMA_VERSION
+
+    def scale(self, name: str) -> float:
+        """fitted/initial ratio — 1.0 means the model was already right."""
+        return self.fitted[name] / self.initial[name]
+
+    def spec(self) -> MachineSpec:
+        """The exact (pre-fit) MachineSpec the records were fitted on."""
+        return _spec_from_payload(self.machine_spec)
+
+    def machine_arrays(self):
+        """The fitted :class:`~repro.autotune.jaxgrid.MachineArrays`
+        (single machine), ready for ``evaluate_grid_raw``."""
+        return _patched_arrays(self.spec(), self.fitted)
+
+    def to_payload(self) -> dict:
+        return {
+            "version": self.version,
+            "machine": self.machine,
+            "group": self.group,
+            "params": list(self.params),
+            "fitted": dict(self.fitted),
+            "initial": dict(self.initial),
+            "loss0": self.loss0,
+            "loss": self.loss,
+            "n_records": self.n_records,
+            "machine_spec": dict(self.machine_spec),
+        }
+
+    @classmethod
+    def from_payload(cls, raw: dict) -> "FitResult":
+        if raw.get("version") != FIT_SCHEMA_VERSION:
+            raise ValueError(
+                f"FitResult schema {raw.get('version')!r} != "
+                f"{FIT_SCHEMA_VERSION}"
+            )
+        return cls(
+            machine=raw["machine"],
+            group=int(raw["group"]),
+            params=tuple(raw["params"]),
+            fitted={k: float(v) for k, v in raw["fitted"].items()},
+            initial={k: float(v) for k, v in raw["initial"].items()},
+            loss0=float(raw["loss0"]),
+            loss=float(raw["loss"]),
+            n_records=int(raw["n_records"]),
+            machine_spec=dict(raw["machine_spec"]),
+        )
+
+
+def _patched_arrays(machine: MachineSpec, overrides: dict[str, float]):
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    from repro.autotune.jaxgrid import machine_arrays
+
+    with enable_x64():
+        mp = machine_arrays((machine,))
+        return mp._replace(
+            **{
+                name: jnp.asarray([val], dtype=jnp.float64)
+                for name, val in overrides.items()
+            }
+        )
+
+
+def fit_machine(
+    machine: MachineSpec,
+    records: Sequence[MeasuredRecord],
+    *,
+    params: tuple[str, ...] = ("link_bw", "s_half"),
+    steps: int = 300,
+    lr: float = 0.05,
+) -> FitResult:
+    """Adam on the jitted grid engine: fit ``params`` to measured times.
+
+    Parameters descend in log-space (positivity for free, scale-free
+    steps); the loss is the mean squared difference of log model time vs
+    log measured time over all records.  ``records`` should span a few
+    sizes and schedules — a single operator cannot separate bandwidth
+    from latency terms.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    from repro.autotune.jaxgrid import evaluate_grid_raw, machine_arrays
+    from repro.core.batch import ScenarioBatch
+    from repro.core.engine import GRID_SCHEDULES
+
+    for p in params:
+        if p not in FITTABLE_PARAMS:
+            raise ValueError(
+                f"cannot fit {p!r}; fittable: {', '.join(FITTABLE_PARAMS)}"
+            )
+    records = list(records)
+    if not records:
+        raise ValueError("no measured records to fit against")
+    groups = {r.group for r in records}
+    if len(groups) != 1:
+        raise ValueError(
+            f"records span several group sizes {sorted(groups)}; "
+            "fit one (machine, group) at a time"
+        )
+    eff = machine_for_group(machine, groups.pop())
+
+    sb = ScenarioBatch.from_gemms([r.gemm for r in records])
+    sched_idx = np.asarray(
+        [GRID_SCHEDULES.index(r.schedule) for r in records], dtype=np.int64
+    )
+    lane = np.arange(len(records), dtype=np.int64)
+    targets = np.log(np.asarray([r.seconds for r in records]))
+
+    with enable_x64():
+        mp0 = machine_arrays((eff,))
+        init = {
+            name: float(np.asarray(getattr(mp0, name))[0]) for name in params
+        }
+        t_log = jnp.asarray(targets, dtype=jnp.float64)
+        s_idx = jnp.asarray(sched_idx)
+        l_idx = jnp.asarray(lane)
+
+        def loss_fn(log_p):
+            mp = mp0._replace(
+                **{
+                    name: jnp.exp(log_p[i])[None]
+                    for i, name in enumerate(params)
+                }
+            )
+            out = evaluate_grid_raw(sb, mp, g_max=eff.group)
+            total = out[0][0]  # (L, S)
+            model = total[s_idx, l_idx]
+            return jnp.mean((jnp.log(model) - t_log) ** 2)
+
+        grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+        log_p = jnp.asarray(
+            [math.log(init[name]) for name in params], dtype=jnp.float64
+        )
+        loss0 = float(grad_fn(log_p)[0])
+        mu = jnp.zeros_like(log_p)
+        nu = jnp.zeros_like(log_p)
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        best_lp, best_loss = log_p, loss0
+        for t in range(1, steps + 1):
+            loss, g = grad_fn(log_p)
+            if float(loss) < best_loss:
+                best_loss, best_lp = float(loss), log_p
+            mu = b1 * mu + (1 - b1) * g
+            nu = b2 * nu + (1 - b2) * g * g
+            mhat = mu / (1 - b1**t)
+            nhat = nu / (1 - b2**t)
+            log_p = log_p - lr * mhat / (jnp.sqrt(nhat) + eps)
+        loss, _ = grad_fn(log_p)
+        if float(loss) < best_loss:
+            best_loss, best_lp = float(loss), log_p
+        fitted = {
+            name: float(jnp.exp(best_lp[i]))
+            for i, name in enumerate(params)
+        }
+    return FitResult(
+        machine=machine.name,
+        group=eff.group,
+        params=tuple(params),
+        fitted=fitted,
+        initial=init,
+        loss0=loss0,
+        loss=best_loss,
+        n_records=len(records),
+        machine_spec=_spec_payload(eff),
+    )
+
+
+def synthesize_records(
+    machine: MachineSpec,
+    gemms: Sequence[GemmShape],
+    schedules: Sequence[Schedule],
+    *,
+    overrides: dict[str, float] | None = None,
+    noise: float = 0.0,
+    seed: int = 0,
+) -> list[MeasuredRecord]:
+    """Model-generated "measured" times, optionally from a perturbed
+    machine — the synthetic ground truth the fit tests recover."""
+    import jax.numpy as jnp  # noqa: F401 — jax presence check
+    from jax.experimental import enable_x64
+
+    from repro.autotune.jaxgrid import evaluate_grid_raw
+    from repro.core.batch import ScenarioBatch
+    from repro.core.engine import GRID_SCHEDULES
+
+    mp = _patched_arrays(machine, overrides or {})
+    sb = ScenarioBatch.from_gemms(gemms)
+    with enable_x64():
+        out = evaluate_grid_raw(sb, mp, g_max=machine.group)
+        total = np.asarray(out[0][0])  # (L, S)
+        valid = np.asarray(out[5][0])
+    rng = np.random.default_rng(seed)
+    records = []
+    for l, sched in enumerate(GRID_SCHEDULES):
+        if sched not in schedules:
+            continue
+        for i, gemm in enumerate(gemms):
+            if not valid[l, i]:
+                continue
+            t = float(total[l, i])
+            if noise:
+                t *= float(np.exp(rng.normal(0.0, noise)))
+            records.append(
+                MeasuredRecord(gemm, sched, t, machine.group)
+            )
+    return records
+
+
+# ---------------------------------------------------------------------------
+# Persistence (autotune-cache artifact segment).
+# ---------------------------------------------------------------------------
+
+
+def save_fit(fit: FitResult, *, cache=None, name: str | None = None) -> None:
+    from repro.autotune.cache import AutotuneCache
+
+    cache = cache if cache is not None else AutotuneCache()
+    cache.put_artifact(
+        FIT_ARTIFACT_KIND,
+        name or f"{fit.machine}/g{fit.group}",
+        fit.to_payload(),
+    )
+
+
+def load_fit(name: str, *, cache=None) -> FitResult | None:
+    """Load a persisted fit; stale/mismatched artifacts yield None."""
+    from repro.autotune.cache import AutotuneCache
+
+    cache = cache if cache is not None else AutotuneCache()
+    raw = cache.get_artifact(FIT_ARTIFACT_KIND, name)
+    if raw is None:
+        return None
+    try:
+        return FitResult.from_payload(raw)
+    except (ValueError, KeyError, TypeError):
+        return None
+
+
+__all__ = [
+    "FIT_SCHEMA_VERSION",
+    "FIT_ARTIFACT_KIND",
+    "FITTABLE_PARAMS",
+    "MeasuredRecord",
+    "FitResult",
+    "records_from_cache",
+    "fit_machine",
+    "synthesize_records",
+    "save_fit",
+    "load_fit",
+]

@@ -399,6 +399,7 @@ def sweep_grid(
     device_parallel: bool = False,
     devices=None,
     on_shard=None,
+    on_shard_grid=None,
 ) -> SweepResult:
     """Sharded design-space sweep over the scenario axis.
 
@@ -415,6 +416,14 @@ def sweep_grid(
     1e6-1e7-point sweeps.  ``on_shard`` (if given) is called with each
     summary as soon as its shard finishes — the streaming hook
     ``scripts/sweep.py`` uses to emit JSON lines.
+
+    ``on_shard_grid`` (if given) is called with ``(grid, summary)``
+    while the shard's GridResult is still alive — i.e. *before* reduce
+    mode drops it.  This is the sufficient-statistics hook: consumers
+    like ``repro.learn.stats.sweep_stats`` fold each shard into compact
+    mergeable accumulators, so 1e6–1e7-point training sweeps stay
+    memory-bounded without gathering a grid.  Empty shards skip both
+    hooks' grid work (the summary hook still fires).
 
     ``device_parallel=True`` evaluates each owned shard SPMD over the
     local jax ``devices`` (defaults to all of them) via the jitted
@@ -466,6 +475,8 @@ def sweep_grid(
             grid = eval_shard(piece)
             dt = time.perf_counter() - t0
             summ = summarize_shard(grid, shard, start, stop, dt)
+            if on_shard_grid is not None:
+                on_shard_grid(grid, summ)
             if mode == "gather":
                 parts.append(grid)
         summaries.append(summ)

@@ -69,9 +69,13 @@ class TestRegistry:
         register_engine("fake-for-test", Fake)
         try:
             assert get_engine("fake-for-test").name == "fake-for-test"
-            with pytest.raises(ValueError):
+            with pytest.raises(ValueError) as e:
                 register_engine("fake-for-test", Fake)  # no silent clobber
-            register_engine("fake-for-test", Fake, replace=True)
+            # The collision error lists every registered engine, like
+            # get_engine's unknown-name diagnostic.
+            for name in engine_names():
+                assert name in str(e.value)
+            register_engine("fake-for-test", Fake, overwrite=True)
         finally:
             from repro.core import engine as engine_mod
 

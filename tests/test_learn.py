@@ -1,0 +1,721 @@
+"""repro.learn: features, sufficient statistics, the learned gate,
+machine fitting, the measured engine and the sweep aggregator.
+
+Key contracts locked here:
+
+  * gate training from per-shard sufficient statistics (reduce-mode
+    sweep, never gathering a grid) is **bit-identical** to training on
+    the gathered grid;
+  * the learned gate lifts skewed-grid within-5% to >= 75% without
+    regressing the uniform grid's ~84%;
+  * the LearnedGate artifact JSON round-trips bit-stably and a schema
+    bump invalidates cleanly (mirroring the autotune cache v1->v2
+    regression tests);
+  * ``select_schedule(gate=...)`` == ``select_schedule_batch(gate=...)``
+    on a randomized grid;
+  * ``fit_machine`` recovers perturbed ``link_bw``/``s_half`` within 5%
+    from synthetic measured times;
+  * ``get_engine("measured")`` resolves through the registry with the
+    right capability flags and does shortlist-only measured evaluation.
+"""
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import TABLE_I, synthetic_scenarios
+from repro.core.batch import RaggedBatch, ScenarioBatch
+from repro.core.engine import get_engine
+from repro.core.heuristics import (
+    select_schedule,
+    select_schedule_batch,
+    serial_gate_terms_batch,
+)
+from repro.core.machine import MI300X, TPU_V5E
+from repro.core.schedule_types import Schedule
+from repro.core.workload import (
+    GemmShape,
+    StepProfile,
+    machine_grid,
+    ragged_scenario_grid,
+    scenario_grid,
+)
+from repro.learn import (
+    FEATURE_INDEX,
+    FEATURE_NAMES,
+    GATE_SCHEMA_VERSION,
+    GateStats,
+    LearnedGate,
+    MeasuredRecord,
+    fit_machine,
+    gate_accuracy,
+    grid_features,
+    load_gate,
+    records_from_cache,
+    save_gate,
+    scenario_features,
+    set_default_gate,
+    sweep_stats,
+    synthesize_records,
+    train_gate,
+    train_gate_from_stats,
+)
+from repro.sweep import synthetic_batch, synthetic_ragged_batch
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+MACHINES = machine_grid()
+
+
+@pytest.fixture(autouse=True)
+def _no_ambient_state():
+    """Deterministic heuristic state: no leaked process-wide default
+    gate, and the frozen default TAU / serial-gate thresholds (other
+    suites freeze per-machine TAU overrides via ``calibrate_tau``,
+    which would make the accuracy assertions order-dependent)."""
+    from repro.core import heuristics as _h
+
+    tau = dict(_h._TAU_OVERRIDES)
+    sg = dict(_h._SERIAL_GATE_OVERRIDES)
+    _h._TAU_OVERRIDES.clear()
+    _h._SERIAL_GATE_OVERRIDES.clear()
+    set_default_gate(None)
+    yield
+    set_default_gate(None)
+    _h._TAU_OVERRIDES.clear()
+    _h._TAU_OVERRIDES.update(tau)
+    _h._SERIAL_GATE_OVERRIDES.clear()
+    _h._SERIAL_GATE_OVERRIDES.update(sg)
+
+
+def _always_serial_gate() -> LearnedGate:
+    return LearnedGate(
+        tree={"leaf": True, "gate": float("-inf"), "n": 0, "win5": 0,
+              "regret_q": 0}
+    )
+
+
+def _trained_gate():
+    """The bench training recipe, shrunk: Dirichlet ragged + uniform
+    synthetic sweeps, stats-only (reduce mode), greedy tree."""
+    stats_r, _ = sweep_stats(
+        synthetic_ragged_batch(2000, seed=7), MACHINES, num_shards=8
+    )
+    stats_u, _ = sweep_stats(
+        synthetic_batch(2000, seed=8), MACHINES, num_shards=8
+    )
+    return train_gate_from_stats(stats_r + stats_u)
+
+
+# ---------------------------------------------------------------------------
+# Features.
+# ---------------------------------------------------------------------------
+
+
+class TestFeatures:
+    def test_shapes_and_defaults(self):
+        sb = synthetic_batch(32, seed=0)
+        X = scenario_features(sb, MI300X)
+        assert X.shape == (32, len(FEATURE_NAMES))
+        assert np.isfinite(X).all()
+        # Uniform batches: imbalance 1, active steps == group.
+        assert (X[:, FEATURE_INDEX["imbalance"]] == 1.0).all()
+        assert (X[:, FEATURE_INDEX["active_steps"]] == MI300X.group).all()
+        assert (X[:, FEATURE_INDEX["group"]] == MI300X.group).all()
+
+    def test_ragged_profile_features(self):
+        rb = synthetic_ragged_batch(64, seed=3)
+        X = scenario_features(rb, TPU_V5E)
+        active = (rb.frac > 0).sum(axis=1)
+        assert np.array_equal(X[:, FEATURE_INDEX["active_steps"]], active)
+        assert np.allclose(X[:, FEATURE_INDEX["imbalance"]], rb.imbalance)
+
+    def test_matches_heuristic_gate_terms(self):
+        """The learner's r/inflate are literally the gate's terms."""
+        sb = synthetic_batch(16, seed=1)
+        X = scenario_features(sb, MI300X)
+        r, inflate = serial_gate_terms_batch(
+            sb.m, sb.n, sb.k, sb.dtype_bytes, MI300X
+        )
+        assert np.array_equal(X[:, FEATURE_INDEX["r"]], r)
+        assert np.array_equal(X[:, FEATURE_INDEX["inflate"]], inflate)
+
+    def test_grid_features(self):
+        sb = synthetic_batch(12, seed=2)
+        grid = get_engine("numpy").evaluate(sb, MACHINES[:3])
+        F = grid_features(grid)
+        assert F.shape == (12, 3, len(FEATURE_NAMES))
+        for j, mach in enumerate(grid.machines):
+            assert np.array_equal(F[:, j], scenario_features(sb, mach))
+
+
+# ---------------------------------------------------------------------------
+# Sufficient statistics.
+# ---------------------------------------------------------------------------
+
+
+class TestGateStats:
+    def test_sharded_equals_gathered_exactly(self):
+        """The tentpole contract: reduce-mode per-shard statistics sum
+        to exactly the gathered-grid statistics (integer histograms)."""
+        rb = synthetic_ragged_batch(400, seed=11)
+        machines = MACHINES[:2]
+        sharded, res = sweep_stats(rb, machines, num_shards=7)
+        assert res.grid is None  # reduce mode never gathered
+        gathered = GateStats.from_grid(
+            get_engine("numpy").evaluate(rb, machines)
+        )
+        assert np.array_equal(sharded.hist, gathered.hist)
+        assert sharded.n_points == gathered.n_points
+        assert sharded.best_counts == gathered.best_counts
+
+    def test_merge_is_addition(self):
+        a = GateStats.from_grid(
+            get_engine("numpy").evaluate(
+                synthetic_batch(50, seed=1), (MI300X,)
+            )
+        )
+        b = GateStats.from_grid(
+            get_engine("numpy").evaluate(
+                synthetic_batch(60, seed=2), (MI300X,)
+            )
+        )
+        m = a + b
+        assert np.array_equal(m.hist, a.hist + b.hist)
+        assert m.n_points == a.n_points + b.n_points
+
+    def test_json_roundtrip(self):
+        stats, _ = sweep_stats(
+            synthetic_ragged_batch(80, seed=5), MACHINES[:2], num_shards=2
+        )
+        back = GateStats.from_json(stats.to_json())
+        assert np.array_equal(back.hist, stats.hist)
+        assert back.to_json() == stats.to_json()
+
+    def test_schema_mismatch_rejected(self):
+        stats = GateStats.empty()
+        raw = json.loads(stats.to_json())
+        raw["schema"] = 999
+        with pytest.raises(ValueError):
+            GateStats.from_json(json.dumps(raw))
+
+    def test_edge_mismatch_rejected(self):
+        """Streams binned on different edges (same shape!) never merge."""
+        stats = GateStats.empty()
+        raw = json.loads(stats.to_json())
+        raw["score_edges"][0] *= 2.0
+        with pytest.raises(ValueError):
+            GateStats.from_json(json.dumps(raw))
+        raw = json.loads(stats.to_json())
+        raw["feature_edges"]["otb"][0] *= 2.0
+        with pytest.raises(ValueError):
+            GateStats.from_json(json.dumps(raw))
+
+    def test_schedule_subset_grid_rejected(self):
+        """A grid evaluated on a schedule subset would be misread
+        (SCHEDULE_INDEX positions) — refuse it loudly."""
+        sub = get_engine("numpy").evaluate(
+            synthetic_batch(8, seed=0), (MI300X,),
+            schedules=(Schedule.SERIAL, Schedule.UNIFORM_FUSED_1D),
+        )
+        with pytest.raises(ValueError, match="GRID_SCHEDULES"):
+            GateStats.from_grid(sub)
+
+    def test_feature_summary_reports_all(self):
+        stats = GateStats.from_grid(
+            get_engine("numpy").evaluate(
+                synthetic_batch(30, seed=3), (MI300X,)
+            )
+        )
+        summ = stats.feature_summary()
+        assert set(summ) == set(FEATURE_NAMES)
+        assert summ["imbalance"]["mean"] == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# The learned gate.
+# ---------------------------------------------------------------------------
+
+
+class TestLearnedGate:
+    def test_headline_accuracy(self):
+        """Skewed within-5% >= 75% with the learned gate, beating the
+        scalar gate, while the uniform grid does not regress."""
+        gate = _trained_gate()
+
+        # Held-out capacity-skewed EP family (the bench_ragged grid).
+        fam = ragged_scenario_grid(
+            steps=8, skews=(1.0, 2.0, 4.0), zipf_alphas=(1.0,),
+            top_k=((2, 0.6),),
+            scenarios=[s for s in TABLE_I if s.parallelism == "EP"]
+            + synthetic_scenarios(12),
+        )
+        grid_skew = get_engine("numpy").evaluate(
+            RaggedBatch.from_ragged_scenarios(fam), MACHINES
+        )
+        acc_scalar = gate_accuracy(grid_skew)
+        acc_learned = gate_accuracy(grid_skew, gate)
+        assert acc_learned >= 0.75
+        assert acc_learned >= acc_scalar
+
+        # Held-out Dirichlet skew (disjoint seed from training).
+        grid_ho = get_engine("numpy").evaluate(
+            synthetic_ragged_batch(1500, seed=99), MACHINES
+        )
+        assert gate_accuracy(grid_ho, gate) >= 0.75
+        assert gate_accuracy(grid_ho, gate) > gate_accuracy(grid_ho)
+
+        # Uniform design-space grid: do no harm (~84% scalar baseline).
+        grid_unif = get_engine("numpy").evaluate(
+            ScenarioBatch.from_scenarios(scenario_grid()), MACHINES
+        )
+        unif_scalar = gate_accuracy(grid_unif)
+        unif_learned = gate_accuracy(grid_unif, gate)
+        assert unif_scalar >= 0.82  # the established ~84% baseline
+        assert unif_learned >= unif_scalar - 0.005
+
+    def test_stats_trained_equals_grid_trained(self):
+        """A gate trained purely from per-shard sufficient statistics
+        matches one trained on the gathered grid, bit for bit."""
+        rb = synthetic_ragged_batch(500, seed=21)
+        machines = MACHINES[:3]
+        stats, _ = sweep_stats(rb, machines, num_shards=9)
+        g_stats = train_gate_from_stats(stats)
+        g_grid = train_gate(get_engine("numpy").evaluate(rb, machines))
+        assert g_stats.to_json() == g_grid.to_json()
+        assert g_stats == g_grid
+
+    def test_single_leaf_generalizes_scalar_gate(self):
+        """max_leaves=1 degenerates to one global threshold — the
+        calibrate_serial_gate family."""
+        stats, _ = sweep_stats(
+            synthetic_batch(300, seed=4), MACHINES[:2], num_shards=3
+        )
+        gate = train_gate_from_stats(stats, max_leaves=1)
+        assert gate.n_leaves == 1
+        sb = synthetic_batch(40, seed=5)
+        thr = gate.thresholds_batch(
+            sb.m, sb.n, sb.k, sb.dtype_bytes, MI300X
+        )
+        assert np.unique(thr).size == 1
+
+    def test_json_roundtrip_bit_stable(self):
+        gate = _trained_gate()
+        text = gate.to_json()
+        back = LearnedGate.from_json(text)
+        assert back.to_json() == text  # bit-stable
+        assert back == gate
+        # Non-finite thresholds survive the trip too.
+        g2 = _always_serial_gate()
+        assert LearnedGate.from_json(g2.to_json()).tree["gate"] == float(
+            "-inf"
+        )
+
+    def test_schema_bump_invalidates_cleanly(self, tmp_path):
+        """Mirror of the autotune cache v1->v2 tests: a bumped-schema
+        artifact never feeds picks — from_json raises, load_gate yields
+        None."""
+        from repro.autotune.cache import AutotuneCache
+
+        gate = _always_serial_gate()
+        raw = json.loads(gate.to_json())
+        raw["version"] = GATE_SCHEMA_VERSION + 1
+        with pytest.raises(ValueError):
+            LearnedGate.from_json(json.dumps(raw))
+
+        cache = AutotuneCache(path=str(tmp_path / "store.json"))
+        cache.put_artifact("gate", "default", raw)
+        assert load_gate(cache=cache) is None
+        # A current-schema artifact loads fine from the same store.
+        save_gate(gate, cache=cache)
+        assert load_gate(cache=cache) == gate
+
+    def test_scalar_equals_batch_on_randomized_grid(self):
+        """select_schedule(gate=) == select_schedule_batch(gate=) over
+        random shapes x machines x profiles."""
+        from repro.core.batch import SCHEDULE_INDEX, GRID_SCHEDULES
+
+        gate = _trained_gate()
+        rng = np.random.default_rng(17)
+        S = 48
+        m = 1024 * rng.integers(1, 512, S)
+        n = 128 * rng.integers(1, 256, S)
+        k = 128 * rng.integers(1, 256, S)
+        b = rng.choice([1, 2], size=S)
+        profiles = []
+        for i in range(S):
+            if i % 3 == 0:
+                profiles.append(None)  # uniform path
+            else:
+                steps = int(rng.integers(2, 9))
+                w = rng.random(steps) + 0.05
+                if i % 3 == 2 and steps > 2:
+                    w[-(steps // 3):] = 0.0  # masked tail
+                profiles.append(StepProfile.from_weights(w))
+        for machine in (MI300X, TPU_V5E, MACHINES[3]):
+            imb = np.array(
+                [1.0 if p is None else p.imbalance for p in profiles]
+            )
+            act = np.array(
+                [
+                    float(machine.group) if p is None else p.active_steps
+                    for p in profiles
+                ]
+            )
+            batch = select_schedule_batch(
+                m, n, k, b, machine, gate=gate, imbalance=imb,
+                active_steps=act,
+            )
+            for i in range(S):
+                dec = select_schedule(
+                    GemmShape(int(m[i]), int(n[i]), int(k[i]), int(b[i])),
+                    machine, gate=gate, profile=profiles[i],
+                )
+                assert batch[i] == SCHEDULE_INDEX[dec.schedule], (
+                    f"lane {i} on {machine.name}: scalar "
+                    f"{dec.schedule} != batch {GRID_SCHEDULES[batch[i]]}"
+                )
+
+    def test_autotuner_consults_learned_gate(self, monkeypatch, tmp_path):
+        """The tuner's heuristic fallback applies the learned family
+        ahead of the hand-tuned scalar gate — explicitly, via the
+        process default, and via the cache artifact segment."""
+        from repro.autotune.cache import AutotuneCache
+        from repro.autotune.tuner import Autotuner
+
+        def fresh_cache(tag):
+            return AutotuneCache(path=str(tmp_path / f"{tag}.json"))
+
+        gemm = TABLE_I[1].gemm  # overlap-friendly: scalar gate says FiCCO
+        baseline = select_schedule(gemm, MI300X).schedule
+        assert baseline is not Schedule.SERIAL
+
+        def boom(self, *a, **kw):
+            raise RuntimeError("force the heuristic fallback")
+
+        monkeypatch.setattr(Autotuner, "_shortlist", boom)
+        serial_gate = _always_serial_gate()
+
+        # (a) explicit constructor gate
+        t = Autotuner(fresh_cache("a"), backend="numpy", gate=serial_gate)
+        assert t.pick(gemm, MI300X).schedule is Schedule.SERIAL
+
+        # (b) process-wide default — including one installed only AFTER
+        # the tuner already fell back once (the default is re-checked
+        # per call, not latched on first resolution).
+        t2 = Autotuner(fresh_cache("b"), backend="numpy")
+        assert t2.pick(gemm, MI300X).schedule is baseline
+        set_default_gate(serial_gate)
+        assert t2.pick(gemm, MI300X).schedule is Schedule.SERIAL
+        set_default_gate(None)
+        assert t2.pick(gemm, MI300X).schedule is baseline
+
+        # (c) persisted artifact in the tuner's cache
+        cache = fresh_cache("c")
+        save_gate(serial_gate, cache=cache)
+        t3 = Autotuner(cache, backend="numpy")
+        assert t3.pick(gemm, MI300X).schedule is Schedule.SERIAL
+
+        # without any learned gate the scalar-gate pick returns
+        t4 = Autotuner(fresh_cache("d"), backend="numpy")
+        assert t4.pick(gemm, MI300X).schedule is baseline
+
+        # a malformed persisted gate must not break pick()'s never-raise
+        # contract: it degrades to the scalar-gated tree.
+        broken = LearnedGate(
+            tree={"feature": "no-such-feature", "edge": 1.0,
+                  "lo": {"leaf": True, "gate": 0.0},
+                  "hi": {"leaf": True, "gate": 0.0}},
+        )
+        cache5 = fresh_cache("e")
+        save_gate(broken, cache=cache5)
+        t5 = Autotuner(cache5, backend="numpy")
+        assert t5.pick(gemm, MI300X).schedule is baseline
+
+
+# ---------------------------------------------------------------------------
+# Sim-to-real machine fitting (jitted engine -> marked autotune).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.autotune
+class TestFit:
+    def test_recovers_perturbed_machine_within_5pct(self):
+        gemms = [s.gemm for s in synthetic_scenarios(12)]
+        true = {"link_bw": MI300X.link_bw * 0.8, "s_half": 3.2e6}
+        records = synthesize_records(
+            MI300X, gemms,
+            (
+                Schedule.SERIAL,
+                Schedule.UNIFORM_FUSED_1D,
+                Schedule.HETERO_UNFUSED_1D,
+            ),
+            overrides=true,
+        )
+        fit = fit_machine(
+            MI300X, records, params=("link_bw", "s_half"), steps=300
+        )
+        assert fit.loss < fit.loss0
+        for name, target in true.items():
+            assert abs(fit.fitted[name] / target - 1.0) < 0.05, (
+                name, fit.fitted[name], target,
+            )
+
+    def test_fit_roundtrip_and_noise_tolerance(self, tmp_path):
+        from repro.autotune.cache import AutotuneCache
+        from repro.learn import FitResult, load_fit, save_fit
+
+        gemms = [s.gemm for s in synthetic_scenarios(10)]
+        true = {"link_bw": MI300X.link_bw * 1.3}
+        records = synthesize_records(
+            MI300X, gemms,
+            (Schedule.SERIAL, Schedule.UNIFORM_FUSED_1D),
+            overrides=true, noise=0.01, seed=3,
+        )
+        fit = fit_machine(MI300X, records, params=("link_bw",), steps=200)
+        assert abs(fit.fitted["link_bw"] / true["link_bw"] - 1.0) < 0.05
+
+        cache = AutotuneCache(path=str(tmp_path / "store.json"))
+        save_fit(fit, cache=cache)
+        back = load_fit(f"{fit.machine}/g{fit.group}", cache=cache)
+        assert back == fit
+        # Schema bump invalidates cleanly, like the gate artifact.
+        raw = fit.to_payload()
+        raw["version"] += 1
+        with pytest.raises(ValueError):
+            FitResult.from_payload(raw)
+
+    def test_fit_preserves_machine_grid_variant_spec(self):
+        """A fit against a machine-grid variant keeps the variant's
+        topology/link counts through persistence — rebuilding from the
+        base registry machine would swap the comm model."""
+        from repro.core.machine import Topology
+        from repro.learn import FitResult
+
+        variant = next(
+            m for m in MACHINES if m.topology is Topology.TORUS_RING
+        )
+        gemms = [s.gemm for s in synthetic_scenarios(4)]
+        records = synthesize_records(
+            variant, gemms, (Schedule.SERIAL,)
+        )
+        fit = fit_machine(variant, records, params=("link_bw",), steps=5)
+        back = FitResult.from_payload(fit.to_payload())
+        spec = back.spec()
+        assert spec == variant
+        assert spec.topology is Topology.TORUS_RING
+        assert spec.a2a_links == variant.a2a_links
+        mp = back.machine_arrays()
+        assert not bool(mp.is_mesh[0])
+        assert int(mp.a2a_links[0]) == variant.a2a_links
+
+    def test_records_from_cache_parses_tunekeys(self):
+        from repro.autotune.cache import AutotuneCache
+        from repro.autotune.tuner import TuneKey
+
+        cache = AutotuneCache()
+        mach = MACHINES[0]  # name contains '/' — the parsing edge case
+        gemm = GemmShape(8192, 4096, 2048, 2)
+        key = str(TuneKey.for_gemm(gemm, mach))
+        cache.put(
+            key,
+            {
+                "schedule": "serial",
+                "source": "measured",
+                "model_total_s": None,
+                "measured_total_s": 1.25e-3,
+            },
+            persist=False,
+        )
+        cache.put(  # analytic entries don't qualify
+            str(TuneKey.for_gemm(GemmShape(1024, 1024, 1024), mach)),
+            {"schedule": "serial", "source": "analytic",
+             "model_total_s": 1e-3, "measured_total_s": None},
+            persist=False,
+        )
+        # A *named* skewed profile starting with 'u' is not uniform.
+        skewed = StepProfile.from_weights(
+            [3.0, 1.0, 1.0, 1.0], name="uneven"
+        )
+        cache.put(
+            str(TuneKey.for_gemm(gemm, mach, profile=skewed)),
+            {"schedule": "serial", "source": "measured",
+             "model_total_s": None, "measured_total_s": 9e-4},
+            persist=False,
+        )
+        recs = records_from_cache(cache, mach.name)
+        assert recs == [
+            MeasuredRecord(gemm, Schedule.SERIAL, 1.25e-3, mach.group)
+        ]
+
+
+# ---------------------------------------------------------------------------
+# The measured engine (registry extension).
+# ---------------------------------------------------------------------------
+
+
+class TestMeasuredEngine:
+    def test_registry_resolution_and_flags(self):
+        from repro.core.engine import Engine, engine_names
+
+        assert "measured" in engine_names()
+        eng = get_engine("measured")
+        assert isinstance(eng, Engine)
+        assert eng.name == "measured"
+        assert not eng.supports_ragged
+        assert not eng.jit
+        assert not eng.differentiable
+        assert eng.trace_safe
+
+    def test_shortlist_only_with_measured_override(self):
+        from repro.autotune.cache import AutotuneCache
+        from repro.autotune.tuner import TuneKey
+        from repro.learn.measured import MeasuredEngine
+
+        sb = ScenarioBatch.from_scenarios(synthetic_scenarios(6))
+        base = get_engine("numpy").evaluate(sb, (MI300X,))
+
+        cache = AutotuneCache()
+        # Persist a "measured" time for scenario 0's analytic winner.
+        l0 = int(base.best_idx()[0, 0])
+        sched0 = base.schedules[l0]
+        t_meas = 0.5 * float(base.total[l0, 0, 0])
+        cache.put(
+            str(TuneKey.for_gemm(sb.gemm(0), MI300X)),
+            {"schedule": sched0.value, "source": "measured",
+             "model_total_s": None, "measured_total_s": t_meas},
+            persist=False,
+        )
+        eng = MeasuredEngine(cache, top=3)
+        grid = eng.evaluate(sb, (MI300X,))
+
+        # Shortlist-only: at most top+serial schedules stay valid.
+        assert (grid.valid.sum(axis=0) <= 4).all()
+        serial_l = grid.schedules.index(Schedule.SERIAL)
+        assert grid.valid[serial_l].all()
+        # The measured record overrides the model time.
+        assert grid.total[l0, 0, 0] == t_meas
+        # Unmeasured shortlisted entries keep analytic times.
+        l1 = int(base.best_idx()[1, 0])
+        assert grid.total[l1, 1, 0] == base.total[l1, 1, 0]
+        # Invalidated entries are NaN.
+        assert np.isnan(grid.total[~grid.valid]).all()
+
+    def test_ragged_rejected_per_capability_flag(self):
+        from repro.autotune.cache import AutotuneCache
+        from repro.learn.measured import MeasuredEngine
+
+        rb = synthetic_ragged_batch(4, seed=0)
+        with pytest.raises(TypeError):
+            MeasuredEngine(AutotuneCache()).evaluate(rb, (MI300X,))
+
+    def test_no_reregistration_on_reimport(self):
+        import importlib
+
+        import repro.learn
+
+        importlib.reload(repro.learn)  # must not trip the collision guard
+        assert get_engine("measured").name == "measured"
+
+
+# ---------------------------------------------------------------------------
+# merge_sweep.py (gather-side aggregator).
+# ---------------------------------------------------------------------------
+
+
+def _run_script(args, timeout=600):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(_ROOT / "src") + os.pathsep + env.get(
+        "PYTHONPATH", ""
+    )
+    return subprocess.run(
+        [sys.executable, *args],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+
+
+def test_merge_sweep_cli_smoke(tmp_path):
+    """Two-host sweep streams merge into one complete summary; a
+    missing host is detected (and fails under --strict)."""
+    outs = []
+    for host in (0, 1):
+        out = tmp_path / f"sweep_host{host}.jsonl"
+        outs.append(out)
+        proc = _run_script(
+            [
+                str(_ROOT / "scripts" / "sweep.py"),
+                "--scenarios", "300", "--shards", "6", "--mode", "reduce",
+                "--host-index", str(host), "--host-count", "2",
+                "--out", str(out),
+            ]
+        )
+        assert proc.returncode == 0, proc.stderr[-4000:]
+
+    merged_path = tmp_path / "merged.json"
+    proc = _run_script(
+        [
+            str(_ROOT / "scripts" / "merge_sweep.py"),
+            *map(str, outs), "--out", str(merged_path),
+        ]
+    )
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    merged = json.loads(merged_path.read_text())
+    assert merged["complete"] is True
+    assert merged["n_shards"] == 6
+    assert merged["n_scenarios"] == 300
+    assert merged["missing_shards"] == []
+    assert merged["hosts_reporting"] == 2
+
+    # Duplicate streams dedupe by shard id.
+    proc = _run_script(
+        [str(_ROOT / "scripts" / "merge_sweep.py"),
+         str(outs[0]), str(outs[0]), str(outs[1])]
+    )
+    assert proc.returncode == 0
+    dup = json.loads(proc.stdout)
+    assert dup["n_scenarios"] == 300
+    assert dup["duplicate_shard_reports"] > 0
+
+    # One host missing: incomplete, and --strict exits 3.  The plan
+    # shard count comes from the surviving host's summary line, so no
+    # --expect-shards is needed to see the gap.
+    proc = _run_script(
+        [str(_ROOT / "scripts" / "merge_sweep.py"), str(outs[0])]
+    )
+    assert proc.returncode == 0
+    partial = json.loads(proc.stdout)
+    assert partial["complete"] is False
+    assert partial["expected_shards"] == 6
+    assert partial["expected_shards_known"] is True
+    assert len(partial["missing_shards"]) == 3
+    proc = _run_script(
+        [str(_ROOT / "scripts" / "merge_sweep.py"), str(outs[0]),
+         "--expect-shards", "6", "--strict"]
+    )
+    assert proc.returncode == 3
+
+    # Host died before its summary line: trailing losses are
+    # undetectable, so the merge refuses to claim completeness.
+    torn = tmp_path / "torn.jsonl"
+    torn.write_text(
+        "\n".join(
+            ln for ln in outs[0].read_text().splitlines()
+            if "host_summary" not in ln
+        )
+    )
+    proc = _run_script(
+        [str(_ROOT / "scripts" / "merge_sweep.py"), str(torn)]
+    )
+    assert proc.returncode == 0
+    t = json.loads(proc.stdout)
+    assert t["expected_shards_known"] is False
+    assert t["complete"] is False
+    proc = _run_script(
+        [str(_ROOT / "scripts" / "merge_sweep.py"), str(torn), "--strict"]
+    )
+    assert proc.returncode == 3
