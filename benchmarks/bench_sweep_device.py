@@ -1,0 +1,88 @@
+"""Device-resident mixed-precision sweep: fused synth + eval + reduce.
+
+Runs ``repro.sweep.device.sweep_device_stats`` — scenarios synthesized
+on device from ``(seed, lane)`` counters, evaluated in float32 through
+the mixed engine's grid kernel (float64 confined to the pipeline-scan
+accumulator) and reduced to shard summaries / gate statistics inside
+the same jit — and reports:
+
+  * ``sweepdevice/fused``        — us per (scenario, machine) point for
+    the reduce-mode fused program without statistics collection: the
+    apples-to-apples twin of ``sweepshard/reduce`` (which also collects
+    no gate statistics) and the headline engine-throughput key the
+    regression gate watches;
+  * ``sweepdevice/stats``        — the same program additionally
+    reducing the full GateStats histogram on device;
+  * ``sweepdevice/ragged_stats`` — the ragged (Dirichlet step-profile)
+    variant with statistics.
+
+All three time a single ≥1e6-lane shard (scenarios x machines), the
+regime the device path is built for; jit compilation is excluded by a
+warmup run per configuration.
+"""
+
+import time
+
+from repro.core.workload import machine_grid
+
+from benchmarks.common import row
+
+_S = 262_144
+_S_RAGGED = 65_536
+
+
+def _row3(name: str, us: float, derived) -> str:
+    # Sub-us per-point values: common.row's one decimal would quantize
+    # the regression-gated keys by up to ~25%.
+    return f"{name},{us:.3f},{derived}"
+
+
+def _timed(fn, repeats: int = 3) -> float:
+    fn()  # warmup: compile + autotune caches
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run() -> list[str]:
+    from repro.sweep.device import sweep_device_stats
+
+    machines = machine_grid(groups=(8,))
+    m = len(machines)
+    points = _S * m
+    points_r = _S_RAGGED * m
+
+    def fused_nostats():
+        sweep_device_stats(
+            _S, machines, dtype="float32", num_shards=1,
+            collect_stats=False,
+        )
+
+    def fused_stats():
+        sweep_device_stats(_S, machines, dtype="float32", num_shards=1)
+
+    def ragged_stats():
+        sweep_device_stats(
+            _S_RAGGED, machines, dtype="float32", num_shards=1,
+            ragged=True,
+        )
+
+    t_fused = _timed(fused_nostats)
+    t_stats = _timed(fused_stats)
+    t_ragged = _timed(ragged_stats)
+
+    return [
+        row("sweepdevice/points", 0.0,
+            f"{_S}x{m}={points} points/shard (float32; ragged "
+            f"{_S_RAGGED}x{m}={points_r})"),
+        _row3("sweepdevice/fused", 1e6 * t_fused / points,
+              f"{points / t_fused:.0f} points/s fused synth+eval+reduce "
+              "(no stats; twin of sweepshard/reduce)"),
+        _row3("sweepdevice/stats", 1e6 * t_stats / points,
+              f"{points / t_stats:.0f} points/s with on-device GateStats"),
+        _row3("sweepdevice/ragged_stats", 1e6 * t_ragged / points_r,
+              f"{points_r / t_ragged:.0f} points/s ragged with GateStats"),
+    ]

@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV.  Figure mapping:
   autotune (jit engine + tuner)   -> bench_autotune
   ragged (non-uniform) engine     -> bench_ragged
   sharded sweep subsystem         -> bench_sweep_shard
+  device-resident mixed sweep     -> bench_sweep_device (--only sweepdevice)
   learned gate + calibration      -> bench_learn (--only learn)
 
 ``--json [PATH]`` additionally writes a machine-readable name ->
@@ -38,6 +39,9 @@ THROUGHPUT_KEYS = (
     "ragged/batched",
     "ragged/jax",
     "sweepshard/reduce",
+    "sweepdevice/fused",
+    "sweepdevice/stats",
+    "sweepdevice/ragged_stats",
     "learn/features",
     "learn/train",
 )
@@ -61,6 +65,7 @@ REGRESSION_RATIO = 1.0 / 0.8
 # documented name to one module.
 ONLY_ALIASES = {
     "learn": "bench_learn",
+    "sweepdevice": "bench_sweep_device",
 }
 
 
@@ -68,14 +73,38 @@ def check_regression(
     results: dict[str, float],
     baseline: dict[str, float],
     ratio: float = REGRESSION_RATIO,
+    warn=None,
 ) -> list[str]:
-    """Engine-throughput / accuracy keys that regressed vs the baseline."""
+    """Engine-throughput / accuracy keys that regressed vs the baseline.
+
+    A baseline value of exactly 0.0 is a placeholder (a recording made
+    while the module errored, or a key stubbed in ahead of its first
+    measurement) — dividing the fresh number by it would flag any
+    measurement as an infinite regression, so such keys are skipped
+    with a printed warning (``warn`` callback, stderr by default)
+    instead of gating the run.
+    """
+    if warn is None:
+        def warn(msg):
+            print(msg, file=sys.stderr)
+
+    def usable(key, old):
+        if old is None:
+            return False  # key absent (older baseline)
+        if old == 0.0:
+            warn(
+                f"# WARNING: baseline {key} is 0.0 (placeholder or "
+                "failed recording); skipping its regression check"
+            )
+            return False
+        return True
+
     bad = []
     for key in THROUGHPUT_KEYS:
         old = baseline.get(key)
         new = results.get(key)
-        if not old or new is None:
-            continue  # key absent (older baseline) or unmeasured
+        if new is None or not usable(key, old):
+            continue
         if new > old * ratio:
             bad.append(
                 f"{key}: {old:.1f} -> {new:.1f} us/point "
@@ -84,7 +113,7 @@ def check_regression(
     for key in ACCURACY_KEYS:
         old = baseline.get(key)
         new = results.get(key)
-        if not old or new is None:
+        if new is None or not usable(key, old):
             continue
         if new < old - ACCURACY_SLACK_PCT:
             bad.append(
@@ -110,6 +139,7 @@ def main() -> None:
         bench_schedules,
         bench_shard_overlap,
         bench_sweep,
+        bench_sweep_device,
         bench_sweep_shard,
     )
 
@@ -118,7 +148,7 @@ def main() -> None:
         bench_schedules, bench_shard_overlap, bench_comparison,
         bench_heuristic, bench_cpu_overlap, bench_arch_schedules,
         bench_sweep, bench_autotune, bench_ragged, bench_sweep_shard,
-        bench_learn,
+        bench_sweep_device, bench_learn,
     ]
 
     ap = argparse.ArgumentParser(description=__doc__)

@@ -65,6 +65,17 @@ def merge_streams(streams, expect_shards=None):
             by_shard[s.shard] = s
         hosts.extend(host_summaries)
 
+    # No silent precision mixing: a float32/bfloat16 stream's summaries
+    # are not comparable with a float64 one's (the same rule
+    # GateStats.from_json enforces for bin edges).  Streams written
+    # before dtype recording existed count as float64.
+    dtypes = {h.get("dtype", "float64") for h in hosts}
+    if len(dtypes) > 1:
+        raise ValueError(
+            f"refusing to merge streams with mismatched dtypes: "
+            f"{sorted(dtypes)}"
+        )
+
     owned = set()
     plan_counts = set()
     for h in hosts:
@@ -88,6 +99,8 @@ def merge_streams(streams, expect_shards=None):
     missing = sorted(set(range(n_expected)) - set(by_shard))
 
     merged = merge_summaries(by_shard.values())
+    if dtypes:
+        merged["dtype"] = dtypes.pop()
     merged["hosts_reporting"] = len(hosts)
     merged["duplicate_shard_reports"] = dupes
     merged["expected_shards"] = n_expected
@@ -126,7 +139,11 @@ def main() -> None:
     for path in args.streams:
         with open(path) as f:
             streams.append(parse_stream(f))
-    merged = merge_streams(streams, expect_shards=args.expect_shards)
+    try:
+        merged = merge_streams(streams, expect_shards=args.expect_shards)
+    except ValueError as e:
+        print(f"# REFUSED: {e}", file=sys.stderr)
+        sys.exit(4)
 
     text = json.dumps(merged, indent=1, sort_keys=True)
     if args.out:

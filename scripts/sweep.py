@@ -63,6 +63,23 @@ def main() -> None:
         "--backend", choices=engine_names(), default="numpy",
         help="engine for non-device-parallel shards",
     )
+    ap.add_argument(
+        "--dtype", choices=("float64", "float32", "bfloat16"),
+        default="float64",
+        help="evaluation dtype (non-float64 requires --backend mixed; "
+        "the pipeline accumulator stays float64 either way)",
+    )
+    ap.add_argument(
+        "--synth-device", action="store_true",
+        help="synthesize scenarios with the counter-based device "
+        "generator (repro.sweep.device) instead of the legacy host "
+        "np.random stream — a different, shard-composable stream",
+    )
+    ap.add_argument(
+        "--overlap-dispatch", action="store_true",
+        help="double-buffer shard dispatch on two-phase engines "
+        "(the mixed engine); no-op elsewhere",
+    )
     ap.add_argument("--shards", type=int, default=None,
                     help="shard count (default: one per host)")
     ap.add_argument("--mode", choices=("gather", "reduce"),
@@ -79,7 +96,20 @@ def main() -> None:
     )
     args = ap.parse_args()
 
-    make = synthetic_ragged_batch if args.ragged else synthetic_batch
+    engine = None
+    if args.backend == "mixed":
+        from repro.core.engine import MixedEngine
+
+        engine = MixedEngine(dtype=args.dtype)
+    elif args.dtype != "float64":
+        ap.error("--dtype other than float64 requires --backend mixed")
+
+    if args.synth_device:
+        from repro.sweep import device_batch, device_ragged_batch
+
+        make = device_ragged_batch if args.ragged else device_batch
+    else:
+        make = synthetic_ragged_batch if args.ragged else synthetic_batch
     sb = make(args.scenarios, seed=args.seed)
     machines = machine_grid(groups=tuple(args.groups))
     points = args.scenarios * len(machines)
@@ -106,12 +136,14 @@ def main() -> None:
         sb,
         machines,
         backend=args.backend,
+        engine=engine,
         num_shards=args.shards,
         mode=args.mode,
         host_index=args.host_index,
         host_count=args.host_count,
         device_parallel=args.device_parallel,
         on_shard=emit,
+        overlap_dispatch=args.overlap_dispatch,
     )
     wall = time.perf_counter() - t0
     merged = merge_summaries(res.summaries)
@@ -119,6 +151,11 @@ def main() -> None:
     merged["host_index"] = args.host_index
     merged["host_count"] = args.host_count
     merged["owned_shards"] = list(res.owned)
+    # Recorded so the aggregator can refuse to merge mixed-precision
+    # streams with float64 ones (same no-silent-mixing rule GateStats
+    # enforces for bin edges).
+    merged["dtype"] = args.dtype
+    merged["synth"] = "device" if args.synth_device else "host"
     # Total shard count of the deterministic plan: what the gather-side
     # aggregator (scripts/merge_sweep.py) checks completeness against.
     merged["plan_shards"] = len(res.plan.bounds)

@@ -17,7 +17,13 @@ Numerics: the engine runs in float64 (``jax.experimental.enable_x64``
 scoped to this module's entry points — the global x64 flag is never
 touched) and replays the NumPy engine's accumulation order, so grids
 agree with ``repro.core.batch.evaluate_grid`` to ~1e-12 relative, far
-inside the 1e-5 acceptance tolerance.
+inside the 1e-5 acceptance tolerance.  The kernels are additionally
+dtype-generic over the :class:`MachineArrays` float leaves: packing
+them at float32/bfloat16 (``machine_arrays(..., dtype=...)``) evaluates
+the whole grid at that precision with float64 confined to the pipeline
+scan's accumulator — the ``"mixed"`` engine (``repro.sweep.device``)
+builds on exactly this, and the float64 default is bit-identical to the
+pre-dtype-generic code.
 
 Machines with different group sizes vmap together by padding every
 pipeline to ``g_max`` steps; padded steps carry zero time and a masked
@@ -87,12 +93,20 @@ class MachineArrays(NamedTuple):
     mt_ref: jax.Array
 
 
-def machine_arrays(machines) -> MachineArrays:
-    """Pack MachineSpecs (plus their host-calibrated coefficients)."""
+def machine_arrays(machines, *, dtype=None) -> MachineArrays:
+    """Pack MachineSpecs (plus their host-calibrated coefficients).
+
+    ``dtype`` sets the float leaves' dtype (default float64) — the
+    kernels below derive their compute dtype from the machine leaves, so
+    packing at float32/bfloat16 is how the mixed-precision engine
+    (``repro.sweep.device``) selects its evaluation precision without a
+    second code path.  Integer/bool leaves are dtype-invariant.
+    """
     ms = tuple(machines)
+    fdt = _F if dtype is None else jnp.dtype(dtype)
 
     def fa(get):  # float leaf
-        return jnp.asarray([get(m) for m in ms], dtype=_F)
+        return jnp.asarray([get(m) for m in ms], dtype=fdt)
 
     def ia(get):  # int leaf
         return jnp.asarray([get(m) for m in ms], dtype=_I)
@@ -138,33 +152,63 @@ def scenario_arrays(scenarios) -> tuple[jax.Array, ...]:
 # ---------------------------------------------------------------------------
 
 
+def _floor_div(a, b):
+    """Exact int64 floor-div via float division.
+
+    Scalar 64-bit integer division costs ~30 cycles per lane on CPU and
+    never vectorizes; float division is SIMD.  The substitution is
+    *exact* — not approximate — whenever ``quotient * b < 2**53`` (f64):
+    a correctly-rounded quotient then sits strictly inside the 1/b gap
+    around the true rational, so its floor equals the integer result.
+    Every shape field here is far smaller (m <= 2**21, n, k <= 2**16,
+    tile counts <= 2**26), with the same argument holding even for an
+    f32 fallback (< 2**24) if a caller traces outside the x64 scope.
+    """
+    af = jnp.asarray(a).astype(jnp.float64)
+    bf = jnp.asarray(b).astype(jnp.float64)
+    return jnp.floor(af / bf).astype(jnp.int64)
+
+
 def gemm_exec_jax(m, n, k, b, mp: MachineArrays, *, accumulate=False):
-    """Elementwise roofline GEMM time; mirrors ``batch.gemm_exec_vec``."""
+    """Elementwise roofline GEMM time; mirrors ``batch.gemm_exec_vec``.
+
+    The compute dtype follows the machine leaves (float64 by default;
+    float32/bfloat16 when :func:`machine_arrays` packed them that way).
+    The explicit casts below pin the integer->float promotion points:
+    without them, jax promotes python-scalar x int64 products to the
+    default float, silently re-widening a mixed-precision program.  In
+    float64 every cast is exact for the representable shape ranges, so
+    the default path is unchanged bit-for-bit.
+    """
+    dt = mp.peak_flops.dtype
     t_mn, pu = mp.tile_mn, mp.parallel_units
     # >= 1 tile even for sub-row ragged chunks (see batch.gemm_exec_vec).
-    cm = jnp.maximum((m + t_mn - 1) // t_mn, 1)
-    cn = jnp.maximum((n + t_mn - 1) // t_mn, 1)
+    cm = jnp.maximum(_floor_div(m + t_mn - 1, t_mn), 1)
+    cn = jnp.maximum(_floor_div(n + t_mn - 1, t_mn), 1)
     tiles = cm * cn
     split_cap = jnp.where(m <= t_mn, 2, 8)
-    ceil_pu = (pu + tiles - 1) // jnp.maximum(tiles, 1)
+    ceil_pu = _floor_div(pu + tiles - 1, jnp.maximum(tiles, 1))
     splits = jnp.minimum(
-        jnp.minimum(ceil_pu, jnp.maximum(k // mp.tile_k, 1)), split_cap
+        jnp.minimum(ceil_pu, jnp.maximum(_floor_div(k, mp.tile_k), 1)),
+        split_cap,
     )
     splits = jnp.where(tiles < pu, splits, 1)
     work = tiles * splits
-    padded_flops = 2.0 * (cm * t_mn) * (cn * t_mn) * k
-    occ_quant = work / (-(-work // pu) * pu)
-    occ_smooth = jnp.minimum(1.0, work / pu)
+    padded_flops = 2.0 * ((cm * t_mn) * (cn * t_mn)).astype(dt) * k.astype(dt)
+    occ_quant = work.astype(dt) / ((-_floor_div(-work, pu)) * pu).astype(dt)
+    occ_smooth = jnp.minimum(1.0, work.astype(dt) / pu)
     occupancy = 0.5 * (occ_quant + occ_smooth)
-    k_eff = k / (k + mp.tile_k)
+    k_eff = k.astype(dt) / (k + mp.tile_k).astype(dt)
     compute = (
         padded_flops / mp.peak_flops / jnp.maximum(occupancy * k_eff, 1e-9)
     )
-    bytes_hbm = (m * k + k * n + m * n).astype(_F) * b
+    bytes_hbm = (m * k + k * n + m * n).astype(dt) * b
     if accumulate:
-        bytes_hbm = bytes_hbm + (m * n).astype(_F) * b
+        bytes_hbm = bytes_hbm + (m * n).astype(dt) * b
     bytes_hbm = bytes_hbm + jnp.where(
-        splits > 1, 2.0 * (splits - 1) * (m * n).astype(_F) * 4, 0.0
+        splits > 1,
+        2.0 * (splits - 1).astype(dt) * (m * n).astype(dt) * 4,
+        0.0,
     )
     memory = bytes_hbm / mp.hbm_bw
     base = jnp.maximum(compute, memory)
@@ -217,7 +261,7 @@ def hbm_move_time_jax(nbytes, mp: MachineArrays):
 
 
 def _mt_norm_jax(m, n, k, b, mp: MachineArrays):
-    bytes_mt = (m * k + k * n + m * n).astype(_F) * b
+    bytes_mt = (m * k + k * n + m * n).astype(mp.mt_ref.dtype) * b
     return bytes_mt / mp.mt_ref
 
 
@@ -261,20 +305,27 @@ def pipeline_jax(comm_steps, compute_steps, deps, comm_active, comp_active):
     0.0 time and never stall, so a group-g machine inside a
     group-``g_max`` padded scan reproduces the unpadded recurrence
     bit-for-bit.
+
+    The scan always **accumulates in float64**, whatever dtype the step
+    times arrive in: the recurrence sums ~``g_max`` terms and compares
+    running channel clocks, where low-precision cancellation would turn
+    stall detection into noise.  This is the mixed-precision engine's
+    accumulator contract — bf16/f32 kernels, f64 pipeline — and a no-op
+    for the default float64 path.
     """
     finish = []
     t = None
     for c, a in zip(comm_steps, comm_active):
-        c = jnp.where(a, c, 0.0)
+        c = jnp.where(a, c, 0.0).astype(_F)
         t = c if t is None else t + c
         finish.append(t)
-    zero = jnp.zeros_like(compute_steps[0])
+    zero = jnp.zeros_like(compute_steps[0], dtype=_F)
     t_comp = zero
     exposed = zero
     comp_sum = None
     for i, w in enumerate(compute_steps):
         a = comp_active[i]
-        w = jnp.where(a, w, 0.0)
+        w = jnp.where(a, w, 0.0).astype(_F)
         dep = deps[i]
         if dep is not None:
             ready = finish[dep]
@@ -288,27 +339,106 @@ def pipeline_jax(comm_steps, compute_steps, deps, comm_active, comp_active):
     return total, exposed, comm_sum, comp_sum
 
 
+def pipeline_closed_jax(comm_steps, compute_steps, deps, comm_active,
+                        comp_active):
+    """Closed-form pipeline for *uniform* step lists (device fast path).
+
+    Every uniform-schedule assembly in :func:`_eval_one_machine_jax`
+    passes one repeated array per channel (``[t_comm] * g_max``), for
+    which the scan recurrence ``t_j = max(t_{j-1}, finish_j) + w`` has
+    the exact solution ``max_j (j*c + remaining_work(j))`` — linear in
+    ``j``, so only the endpoint candidates matter.  That replaces
+    ~``g_max`` float64 scan iterations (the dominant elementwise cost of
+    a uniform grid evaluation) with a handful of ops.
+
+    The three dep patterns assembled by ``_eval_one_machine_jax`` are
+    recognised structurally:
+
+      * ``deps[0] is None`` and one extra compute step → local-GEMM
+        FiCCO (HF1D/HU1D): ``max(t_l + n*w, c + n*w, n_c*c + w)``;
+      * ``deps[0] is None``, equal lengths → SHARD_P2P (first compute
+        step free): ``max(n*w, n_c*c + w)``;
+      * else plain FiCCO (UF2D/UF1D): ``max(c + n*w, n_c*c + w)``.
+
+    Totals agree with :func:`pipeline_jax` to rounding only — the scan
+    accumulates ``j*c`` by repeated addition, the closed form by one
+    multiply — so the padded scan remains the bit-exact reference and
+    this variant is opt-in (``closed_form=True``).  Ragged schedules
+    (per-step distinct times) have no closed form and always scan.
+    """
+
+    def count(active):
+        tot = None
+        for a in active:
+            v = jnp.asarray(a).astype(_F)
+            tot = v if tot is None else tot + v
+        return tot
+
+    if comm_steps:
+        n_c = count(comm_active)
+        c = jnp.where(n_c > 0, comm_steps[0], 0.0).astype(_F)
+    else:  # g_max == 1 SHARD_P2P: no inter-device steps at all
+        n_c = jnp.asarray(0.0, dtype=_F)
+        c = jnp.zeros_like(compute_steps[0], dtype=_F)
+    comm_sum = n_c * c
+    if deps[0] is None and len(compute_steps) == len(comm_steps) + 1:
+        t_l = compute_steps[0].astype(_F)
+        w = compute_steps[1].astype(_F)
+        n_w = count(comp_active[1:])
+        comp_sum = t_l + n_w * w
+        t_comp = jnp.maximum(
+            jnp.maximum(t_l + n_w * w, c + n_w * w), comm_sum + w
+        )
+    elif deps[0] is None:
+        w = compute_steps[0].astype(_F)
+        n_w = count(comp_active)
+        comp_sum = n_w * w
+        t_comp = jnp.maximum(n_w * w, comm_sum + w)
+    else:
+        w = compute_steps[0].astype(_F)
+        n_w = count(comp_active)
+        comp_sum = n_w * w
+        t_comp = jnp.maximum(c + n_w * w, comm_sum + w)
+    exposed = t_comp - comp_sum
+    total = jnp.maximum(t_comp, comm_sum)
+    return total, exposed, comm_sum, comp_sum
+
+
 # ---------------------------------------------------------------------------
 # Grid evaluation (one machine; vmapped over the machine axis).
 # ---------------------------------------------------------------------------
 
 
 def _eval_one_machine_jax(m, n, k, b, mp, g_max, schedules, dma,
-                          dma_into_place):
-    """All schedules for one (vmapped) machine; returns (L, S) arrays."""
+                          dma_into_place, closed_form=False):
+    """All schedules for one (vmapped) machine; returns (L, S) arrays.
+
+    Kernel math runs in the machine leaves' dtype (``dt``); every output
+    row is widened to float64 on the way out (``put``) so stacked
+    results are homogeneous whatever precision evaluated them.
+
+    ``closed_form=True`` swaps the padded pipeline scan for
+    :func:`pipeline_closed_jax` (equal to rounding, ~2x fewer
+    elementwise ops) — the device sweep fast path; the default stays the
+    bit-exact scan.
+    """
+    pipe = pipeline_closed_jax if closed_form else pipeline_jax
+    dt = mp.peak_flops.dtype
     g = mp.group
     S = m.shape[0]
     true_f = jnp.ones((S,), dtype=bool)
 
-    dev_n = jnp.where(n % g == 0, n // g, n)
-    mk_bytes = (m * k).astype(_F) * b
+    n_q = _floor_div(n, g)
+    dev_n = jnp.where(n == g * n_q, n_q, n)
+    mk_bytes = (m * k).astype(dt) * b
     serial_comm = ag_serial_time_jax(mk_bytes, mp)
     serial_gemm = gemm_exec_jax(m, dev_n, k, b, mp)
 
-    m_div = (m % g == 0) & (m > 0)
-    k_div = k % g == 0
-    m_s = m // g
-    m_sg = m_s // g
+    m_s = _floor_div(m, g)
+    m_div = (m == g * m_s) & (m > 0)
+    k_q = _floor_div(k, g)
+    k_div = k == g * k_q
+    m_sg = _floor_div(m_s, g)
 
     def step_active(n_steps):
         # Padded scans run g_max iterations; step s is real iff s < n_steps.
@@ -318,10 +448,10 @@ def _eval_one_machine_jax(m, n, k, b, mp, g_max, schedules, dma,
     steps_rows, valid_rows = [], []
 
     def put(ok, total, comm_busy, compute_busy, exposed, n_steps):
-        total_rows.append(jnp.where(ok, total, jnp.nan))
-        comm_rows.append(jnp.where(ok, comm_busy, jnp.nan))
-        comp_rows.append(jnp.where(ok, compute_busy, jnp.nan))
-        exp_rows.append(jnp.where(ok, exposed, jnp.nan))
+        total_rows.append(jnp.where(ok, total, jnp.nan).astype(_F))
+        comm_rows.append(jnp.where(ok, comm_busy, jnp.nan).astype(_F))
+        comp_rows.append(jnp.where(ok, compute_busy, jnp.nan).astype(_F))
+        exp_rows.append(jnp.where(ok, exposed, jnp.nan).astype(_F))
         steps_rows.append(jnp.asarray(n_steps, dtype=_I))
         valid_rows.append(ok)
 
@@ -332,12 +462,12 @@ def _eval_one_machine_jax(m, n, k, b, mp, g_max, schedules, dma,
             continue
 
         if sched is Schedule.SHARD_P2P:
-            shard_bytes = (m_s * k).astype(_F) * b
+            shard_bytes = (m_s * k).astype(dt) * b
             c_cil = comm_cil_jax(m_s, dev_n, k, b, mp, degree=2, dma=dma)
             g_cil = gemm_cil_jax(m_s, dev_n, k, b, mp, degree=2, dma=dma)
             t_p2p = p2p_step_time_jax(shard_bytes, mp) * c_cil
             t_gemm = gemm_exec_jax(m_s, dev_n, k, b, mp) * g_cil
-            total, exposed, comm_sum, comp_sum = pipeline_jax(
+            total, exposed, comm_sum, comp_sum = pipe(
                 [t_p2p] * (g_max - 1),
                 [t_gemm] * g_max,
                 [None] + list(range(g_max - 1)),
@@ -349,39 +479,39 @@ def _eval_one_machine_jax(m, n, k, b, mp, g_max, schedules, dma,
 
         # ---- FiCCO schedules -----------------------------------------
         if sched is Schedule.UNIFORM_FUSED_2D:
-            k_g = k // g
-            chunk_bytes = (m_s * k_g).astype(_F) * b
+            k_g = k_q
+            chunk_bytes = (m_s * k_g).astype(dt) * b
             step = (m, dev_n, k_g)
-            gather_bytes = (m * k_g).astype(_F) * b
+            gather_bytes = (m * k_g).astype(dt) * b
             scatter_bytes = None
             degree, accumulate = 4, True
             local = None
             per_step_gemms = jnp.asarray(1, dtype=_I)
             ok = m_div & k_div
         elif sched is Schedule.UNIFORM_FUSED_1D:
-            chunk_bytes = (m_sg * k).astype(_F) * b
+            chunk_bytes = (m_sg * k).astype(dt) * b
             step = (m_s, dev_n, k)
-            gather_bytes = (m_s * k).astype(_F) * b
-            scatter_bytes = (m_s * dev_n).astype(_F) * b
+            gather_bytes = (m_s * k).astype(dt) * b
+            scatter_bytes = (m_s * dev_n).astype(dt) * b
             degree, accumulate = 4, False
             local = None
             per_step_gemms = jnp.asarray(1, dtype=_I)
             ok = m_div
         elif sched is Schedule.HETERO_FUSED_1D:
-            chunk_bytes = (m_sg * k).astype(_F) * b
+            chunk_bytes = (m_sg * k).astype(dt) * b
             rows = (g - 1) * m_sg
             step = (rows, dev_n, k)
-            gather_bytes = (rows * k).astype(_F) * b
-            scatter_bytes = (rows * dev_n).astype(_F) * b
+            gather_bytes = (rows * k).astype(dt) * b
+            scatter_bytes = (rows * dev_n).astype(dt) * b
             degree, accumulate = 3, False
             local = (m_s, dev_n, k)
             per_step_gemms = jnp.asarray(1, dtype=_I)
             ok = m_div & (m_sg >= 1)
         elif sched is Schedule.HETERO_UNFUSED_1D:
-            chunk_bytes = (m_sg * k).astype(_F) * b
+            chunk_bytes = (m_sg * k).astype(dt) * b
             step = (m_sg, dev_n, k)
-            gather_bytes = jnp.zeros((S,), dtype=_F)
-            scatter_bytes = ((g - 1) * m_sg * dev_n).astype(_F) * b
+            gather_bytes = jnp.zeros((S,), dtype=dt)
+            scatter_bytes = ((g - 1) * m_sg * dev_n).astype(dt) * b
             degree, accumulate = 2, False
             local = (m_s, dev_n, k)
             per_step_gemms = g - 1
@@ -390,7 +520,7 @@ def _eval_one_machine_jax(m, n, k, b, mp, g_max, schedules, dma,
             raise ValueError(sched)
 
         if dma_into_place:
-            gather_bytes = jnp.zeros((S,), dtype=_F)
+            gather_bytes = jnp.zeros((S,), dtype=dt)
             scatter_bytes = None
             degree = 2
         c_cil = comm_cil_jax(m_s, dev_n, k, b, mp, degree=degree, dma=dma)
@@ -409,7 +539,7 @@ def _eval_one_machine_jax(m, n, k, b, mp, g_max, schedules, dma,
             gather_bytes > 0, hbm_move_time_jax(gather_bytes, mp), 0.0
         )
         if scatter_bytes is None:
-            t_scatter = jnp.zeros((S,), dtype=_F)
+            t_scatter = jnp.zeros((S,), dtype=dt)
         else:
             t_scatter = jnp.where(
                 scatter_bytes > 0,
@@ -431,7 +561,7 @@ def _eval_one_machine_jax(m, n, k, b, mp, g_max, schedules, dma,
             compute = [t_step] * g_max
             deps = list(range(g_max))
             comp_active = step_active(g)
-        total, exposed, comm_sum, comp_sum = pipeline_jax(
+        total, exposed, comm_sum, comp_sum = pipe(
             [t_comm] * g_max, compute, deps, step_active(g), comp_active
         )
         put(ok, total, comm_sum, comp_sum, exposed, g)
@@ -443,8 +573,8 @@ def _eval_one_machine_jax(m, n, k, b, mp, g_max, schedules, dma,
         jnp.stack(exp_rows),
         jnp.stack(steps_rows),
         jnp.stack(valid_rows),
-        serial_comm,
-        serial_gemm,
+        serial_comm.astype(_F),
+        serial_gemm.astype(_F),
     )
 
 
@@ -471,15 +601,17 @@ def ragged_step_times_jax(
         raise ValueError(
             f"ragged profiles apply to the FiCCO schedules, got {sched}"
         )
+    dt = mp.peak_flops.dtype
     g = mp.group
     S = m.shape[0]
     P = frac.shape[1]
-    dev_n = jnp.where(n % g == 0, n // g, n)
-    m_div = (m % g == 0) & (m > 0)
-    m_s = m // g
-    mf = m.astype(_F)
-    msf = m_s.astype(_F)
-    kf = k.astype(_F)
+    n_q = _floor_div(n, g)
+    dev_n = jnp.where(n == g * n_q, n_q, n)
+    m_s = _floor_div(m, g)
+    m_div = (m == g * m_s) & (m > 0)
+    mf = m.astype(dt)
+    msf = m_s.astype(dt)
+    kf = k.astype(dt)
 
     if sched is Schedule.UNIFORM_FUSED_2D:
         degree, accumulate = 4, True
@@ -540,13 +672,13 @@ def ragged_step_times_jax(
             * g_cil
         )
         if gather_bytes is None:
-            t_gather = jnp.zeros((S,), dtype=_F)
+            t_gather = jnp.zeros((S,), dtype=dt)
         else:
             t_gather = jnp.where(
                 gather_bytes > 0, hbm_move_time_jax(gather_bytes, mp), 0.0
             )
         if scatter_bytes is None:
-            t_scatter = jnp.zeros((S,), dtype=_F)
+            t_scatter = jnp.zeros((S,), dtype=dt)
         else:
             t_scatter = jnp.where(
                 scatter_bytes > 0, hbm_move_time_jax(scatter_bytes, mp), 0.0
@@ -578,19 +710,23 @@ def _eval_one_machine_ragged_jax(
 
     SERIAL / SHARD_P2P replicate the uniform engine (profile-free); the
     FiCCO schedules run the masked ragged scan over P padded steps.
+    Like the uniform evaluator, kernel math runs in the machine leaves'
+    dtype and ``put`` widens every output row to float64.
     """
+    dt = mp.peak_flops.dtype
     g = mp.group
     S = m.shape[0]
     P = frac.shape[1]
     true_f = jnp.ones((S,), dtype=bool)
 
-    dev_n = jnp.where(n % g == 0, n // g, n)
-    mk_bytes = (m * k).astype(_F) * b
+    n_q = _floor_div(n, g)
+    dev_n = jnp.where(n == g * n_q, n_q, n)
+    mk_bytes = (m * k).astype(dt) * b
     serial_comm = ag_serial_time_jax(mk_bytes, mp)
     serial_gemm = gemm_exec_jax(m, dev_n, k, b, mp)
 
-    m_div = (m % g == 0) & (m > 0)
-    m_s = m // g
+    m_s = _floor_div(m, g)
+    m_div = (m == g * m_s) & (m > 0)
 
     def step_active(n_steps):
         return [s < n_steps for s in range(g_max)]
@@ -599,10 +735,10 @@ def _eval_one_machine_ragged_jax(
     steps_rows, valid_rows = [], []
 
     def put(ok, total, comm_busy, compute_busy, exposed, n_steps):
-        total_rows.append(jnp.where(ok, total, jnp.nan))
-        comm_rows.append(jnp.where(ok, comm_busy, jnp.nan))
-        comp_rows.append(jnp.where(ok, compute_busy, jnp.nan))
-        exp_rows.append(jnp.where(ok, exposed, jnp.nan))
+        total_rows.append(jnp.where(ok, total, jnp.nan).astype(_F))
+        comm_rows.append(jnp.where(ok, comm_busy, jnp.nan).astype(_F))
+        comp_rows.append(jnp.where(ok, compute_busy, jnp.nan).astype(_F))
+        exp_rows.append(jnp.where(ok, exposed, jnp.nan).astype(_F))
         steps_rows.append(jnp.asarray(n_steps, dtype=_I))
         valid_rows.append(ok)
 
@@ -612,7 +748,7 @@ def _eval_one_machine_ragged_jax(
                 serial_comm, 1)
             continue
         if sched is Schedule.SHARD_P2P:
-            shard_bytes = (m_s * k).astype(_F) * b
+            shard_bytes = (m_s * k).astype(dt) * b
             c_cil = comm_cil_jax(m_s, dev_n, k, b, mp, degree=2, dma=dma)
             g_cil = gemm_cil_jax(m_s, dev_n, k, b, mp, degree=2, dma=dma)
             t_p2p = p2p_step_time_jax(shard_bytes, mp) * c_cil
@@ -642,8 +778,8 @@ def _eval_one_machine_ragged_jax(
         jnp.stack(exp_rows),
         jnp.stack(steps_rows),
         jnp.stack(valid_rows),
-        serial_comm,
-        serial_gemm,
+        serial_comm.astype(_F),
+        serial_gemm.astype(_F),
     )
 
 
@@ -689,7 +825,7 @@ def evaluate_ragged_grid_raw(
             mp = machine_arrays(ms)
             g_max = max(m.group for m in ms)
         m, n, k, b = scenario_arrays(rb)
-        frac = jnp.asarray(rb.frac, dtype=_F)
+        frac = jnp.asarray(rb.frac, dtype=mp.peak_flops.dtype)
         return _ragged_grid_jit(
             m, n, k, b, frac, mp,
             g_max=g_max, schedules=tuple(schedules),
@@ -719,13 +855,19 @@ def evaluate_ragged_grid(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("g_max", "schedules", "dma", "dma_into_place"),
+    static_argnames=(
+        "g_max", "schedules", "dma", "dma_into_place", "closed_form"
+    ),
 )
-def _grid_jit(m, n, k, b, mp, *, g_max, schedules, dma, dma_into_place):
+def _grid_jit(
+    m, n, k, b, mp, *, g_max, schedules, dma, dma_into_place,
+    closed_form=False,
+):
     """(M-vmapped) full grid; outputs are (M, L, S) / (M, S) stacks."""
     return jax.vmap(
         lambda one: _eval_one_machine_jax(
-            m, n, k, b, one, g_max, schedules, dma, dma_into_place
+            m, n, k, b, one, g_max, schedules, dma, dma_into_place,
+            closed_form,
         )
     )(mp)
 
@@ -738,6 +880,7 @@ def evaluate_grid_raw(
     dma_into_place: bool = False,
     schedules: tuple[Schedule, ...] = GRID_SCHEDULES,
     g_max: int | None = None,
+    closed_form: bool = False,
 ):
     """Jit-evaluated grid as device arrays (differentiable entry point).
 
@@ -746,6 +889,9 @@ def evaluate_grid_raw(
     ``total`` is ``(M, L, S)``.  Accepts either MachineSpecs or an
     already-packed (possibly perturbed) :class:`MachineArrays`, so
     gradients w.r.t. machine parameters flow through unchanged.
+
+    ``closed_form=True`` selects :func:`pipeline_closed_jax` (totals
+    equal to the scan up to rounding; the device sweep fast path).
     """
     with enable_x64():
         if isinstance(machines_or_arrays, MachineArrays):
@@ -761,6 +907,7 @@ def evaluate_grid_raw(
             m, n, k, b, mp,
             g_max=g_max, schedules=tuple(schedules),
             dma=dma, dma_into_place=dma_into_place,
+            closed_form=closed_form,
         )
 
 

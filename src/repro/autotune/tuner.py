@@ -132,37 +132,55 @@ class Autotuner:
         self.hits = 0
         self.misses = 0
         self._gate = gate
-        self._artifact_gate = None
-        self._artifact_loaded = False
+        # Artifact gates load lazily, once per artifact name ("default"
+        # plus one "machine:<family>" slot per family queried).
+        self._artifact_gates: dict = {}
 
-    def learned_gate(self):
+    def learned_gate(self, machine=None):
         """The learned serial-gate family this tuner's fallback consults.
 
         Resolution order: explicit ``gate=`` constructor argument, the
-        process-wide default (``repro.learn.gate.set_default_gate`` —
-        re-checked on every call, so installing or clearing a default
-        after this tuner was built takes effect immediately), then a
-        gate persisted in this cache's artifact segment (loaded once).
-        The learned family takes precedence over the hand-tuned scalar
-        gate inside ``select_schedule``; None means "no learned gate"
-        and the scalar gate applies as before.
+        process-wide gates (``repro.learn.gate`` — the ``machine``'s
+        family gate first, then the global default; both re-checked on
+        every call, so installing or clearing one after this tuner was
+        built takes effect immediately), then gates persisted in this
+        cache's artifact segment (family slot ahead of the default
+        slot, each loaded once).  The learned family takes precedence
+        over the hand-tuned scalar gate inside ``select_schedule``;
+        None means "no learned gate" and the scalar gate applies as
+        before.
         """
         if self._gate is not None:
             return self._gate
         try:
-            from repro.learn.gate import get_default_gate, load_gate
+            from repro.learn import gate as _gate_mod
         except Exception:  # pragma: no cover - learn is a sibling package
             return None
-        ambient = get_default_gate()
+        if machine is not None:
+            fam = _gate_mod.get_machine_gate(machine)
+            if fam is not None:
+                return fam
+        ambient = _gate_mod.get_default_gate()
         if ambient is not None:
             return ambient
-        if not self._artifact_loaded:
-            self._artifact_loaded = True
-            try:
-                self._artifact_gate = load_gate(cache=self.cache)
-            except Exception:
-                self._artifact_gate = None
-        return self._artifact_gate
+        names = ["default"]
+        if machine is not None:
+            names.insert(
+                0,
+                _gate_mod.MACHINE_GATE_PREFIX
+                + _gate_mod.machine_family(machine),
+            )
+        for name in names:
+            if name not in self._artifact_gates:
+                try:
+                    self._artifact_gates[name] = _gate_mod.load_gate(
+                        cache=self.cache, name=name
+                    )
+                except Exception:
+                    self._artifact_gates[name] = None
+            if self._artifact_gates[name] is not None:
+                return self._artifact_gates[name]
+        return None
 
     # -- tier 1+2: cache / analytic ------------------------------------
 
@@ -233,7 +251,8 @@ class Autotuner:
             # artifact degrades to the scalar-gated tree.
             try:
                 dec = select_schedule(
-                    gemm, eff, profile=profile, gate=self.learned_gate()
+                    gemm, eff, profile=profile,
+                    gate=self.learned_gate(eff),
                 )
             except Exception:
                 dec = select_schedule(gemm, eff, profile=profile)

@@ -408,6 +408,80 @@ class JaxEngine:
         )
 
 
+class MixedEngine:
+    """Mixed-precision jitted engine (``repro.sweep.device``).
+
+    The same jitted kernels as :class:`JaxEngine`, with the
+    :class:`~repro.autotune.jaxgrid.MachineArrays` float leaves packed at
+    ``dtype`` (float32 by default, bfloat16 on request) so the whole
+    grid evaluates at reduced precision — float64 is confined to the
+    pipeline scan's accumulator and the output container.  Built for
+    sweep *throughput* (1e8-lane gate-training sweeps), not reference
+    numerics: grids agree with the float64 engines only to the
+    evaluation dtype's precision (see ``tests/test_device_sweep.py`` for
+    the pinned tolerances).
+
+    Honest capability flags: ``differentiable`` is False — gradients
+    through bf16/f32 kernels are calibration-grade noise, so TAU /
+    machine-parameter calibration must keep using the ``"jax"`` engine.
+    """
+
+    name = "mixed"
+    supports_ragged = True
+    jit = True
+    differentiable = False
+    trace_safe = False
+
+    def __init__(self, dtype: str = "float32"):
+        if dtype not in ("float64", "float32", "bfloat16"):
+            raise ValueError(
+                f"MixedEngine dtype must be float64|float32|bfloat16, "
+                f"got {dtype!r}"
+            )
+        self.dtype = dtype
+
+    def evaluate(
+        self,
+        scenarios,
+        machines,
+        *,
+        dma: bool = True,
+        dma_into_place: bool = False,
+        schedules: tuple[Schedule, ...] | None = None,
+    ) -> GridResult:
+        from repro.sweep import device as _device
+
+        return _device.evaluate_mixed_grid(
+            scenarios, machines, dtype=self.dtype,
+            dma=dma, dma_into_place=dma_into_place,
+            schedules=GRID_SCHEDULES if schedules is None else schedules,
+        )
+
+    def dispatch(
+        self,
+        scenarios,
+        machines,
+        *,
+        dma: bool = True,
+        dma_into_place: bool = False,
+        schedules: tuple[Schedule, ...] | None = None,
+    ):
+        """Asynchronously dispatch an evaluation; returns ``finalize()``.
+
+        The returned zero-argument callable materializes the
+        :class:`GridResult` (blocking on the device work).  This is the
+        two-phase form ``repro.sweep.runner``'s double-buffered shard
+        loop uses to keep shard k+1 in flight while shard k reduces.
+        """
+        from repro.sweep import device as _device
+
+        return _device.dispatch_mixed_grid(
+            scenarios, machines, dtype=self.dtype,
+            dma=dma, dma_into_place=dma_into_place,
+            schedules=GRID_SCHEDULES if schedules is None else schedules,
+        )
+
+
 # ---------------------------------------------------------------------------
 # Registry.
 # ---------------------------------------------------------------------------
@@ -472,6 +546,7 @@ def get_engine(backend) -> Engine:
 register_engine("scalar", ScalarEngine)
 register_engine("numpy", NumpyEngine)
 register_engine("jax", JaxEngine)
+register_engine("mixed", MixedEngine)
 
 
 # ---------------------------------------------------------------------------

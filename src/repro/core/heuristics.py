@@ -69,7 +69,34 @@ _GATE_COMM_CIL = 1.12
 
 
 def machine_serial_gate(machine: MachineSpec) -> float:
+    """The hand-tuned scalar gate threshold for a machine.
+
+    This is the *scalar* end of the gate resolution:
+    ``select_schedule`` consults a learned per-machine-family gate
+    (:func:`repro.learn.gate.set_machine_gate`) ahead of this value —
+    see :func:`_family_gate` — so this threshold applies only when no
+    learned family covers the machine.
+    """
     return _SERIAL_GATE_OVERRIDES.get(machine.name, DEFAULT_SERIAL_GATE)
+
+
+def _family_gate(machine: MachineSpec):
+    """Learned family gate for a machine, or None.
+
+    Soft lookup through ``sys.modules``: the core package never imports
+    :mod:`repro.learn` (which would drag numpy-only deployments through
+    the training stack), so family gates only steer decisions in
+    processes that already loaded the learn package and registered one.
+    """
+    import sys
+
+    mod = sys.modules.get("repro.learn.gate")
+    if mod is None:
+        return None
+    try:
+        return mod.get_machine_gate(machine)
+    except Exception:
+        return None
 
 
 def serial_gate_terms_batch(m, n, k, dtype_bytes, machine: MachineSpec):
@@ -250,6 +277,11 @@ def select_schedule(
         )
     if allow_serial_guard:
         score = serial_gate_score(gemm, machine)
+        if gate is None and serial_gate is None:
+            # Neither an explicit learned gate nor an explicit scalar:
+            # a registered per-machine-family gate outranks the
+            # hand-tuned scalar below.
+            gate = _family_gate(machine)
         if gate is not None:
             # ``>=`` matches the learned gate's training accounting
             # (score bins are right-closed at the threshold edges).
@@ -342,6 +374,9 @@ def select_schedule_batch(
         if terms is None:
             terms = serial_gate_terms_batch(m, n, k, b, machine)
         scores = serial_gate_score_from_terms(*terms)
+        if gate is None and serial_gate is None:
+            # Same family-gate precedence as the scalar tree.
+            gate = _family_gate(machine)
         if gate is not None:
             # ``>=`` matches the learned gate's training accounting.
             # The precomputed terms ride along so the gate's feature

@@ -52,13 +52,20 @@ from repro.learn.stats import (
 from repro.learn.gate import (
     GATE_SCHEMA_VERSION,
     LearnedGate,
+    clear_machine_gates,
     gate_accuracy,
     get_default_gate,
+    get_machine_gate,
     load_gate,
+    load_machine_gate,
+    machine_family,
     save_gate,
+    save_machine_gates,
     set_default_gate,
+    set_machine_gate,
     train_gate,
     train_gate_from_stats,
+    train_machine_gates,
 )
 from repro.learn.fit import (
     FITTABLE_PARAMS,
@@ -98,6 +105,13 @@ __all__ = [
     "load_gate",
     "set_default_gate",
     "get_default_gate",
+    "machine_family",
+    "set_machine_gate",
+    "get_machine_gate",
+    "clear_machine_gates",
+    "train_machine_gates",
+    "save_machine_gates",
+    "load_machine_gate",
     "FITTABLE_PARAMS",
     "MeasuredRecord",
     "FitResult",

@@ -483,9 +483,116 @@ def get_default_gate() -> LearnedGate | None:
     return _DEFAULT_GATE
 
 
+# ---------------------------------------------------------------------------
+# Per-machine-family gates.
+# ---------------------------------------------------------------------------
+#
+# One global gate blurs across link models: the score -> regret mapping
+# an MI300X-class machine induces is not the one a TPU-pod slice does,
+# so the greedy splitter spends leaves re-separating machines instead
+# of profiles.  A *family* (the machine-name prefix up to the first
+# "/": ``machine_grid`` names variants ``mi300x-8/bw0.7``,
+# ``tpu-v5e-axis16/lat2x``, ...) shares a link model, so per-family
+# gates are trained from per-family statistics (``GateStats`` folded
+# with ``machine_indices``, or the device sweep's ``per_family``
+# buckets) and installed in a process-wide registry that the heuristic
+# tree's gate resolution consults between the ambient default gate and
+# the hand-tuned scalar gate.
+
+# Artifact-name prefix for persisted family gates.  Namespaced so a
+# family literally named "default" can never collide with the global
+# gate's artifact slot.
+MACHINE_GATE_PREFIX = "machine:"
+
+_MACHINE_GATES: dict[str, LearnedGate] = {}
+
+
+def machine_family(machine) -> str:
+    """Gate-family key of a machine (or machine name).
+
+    The machine-grid naming convention puts the base machine before the
+    first ``/`` and the perturbation after it (``mi300x-8/bw0.7``); the
+    base machine determines the link model, hence the gate family.
+    """
+    name = machine if isinstance(machine, str) else machine.name
+    return name.split("/", 1)[0]
+
+
+def set_machine_gate(family, gate: LearnedGate | None) -> None:
+    """Register (or, with ``None``, drop) the learned gate of a family.
+
+    ``family`` may be a family key, a machine name, or a MachineSpec —
+    anything :func:`machine_family` normalizes.
+    """
+    key = machine_family(family)
+    if gate is None:
+        _MACHINE_GATES.pop(key, None)
+    else:
+        _MACHINE_GATES[key] = gate
+
+
+def get_machine_gate(machine) -> LearnedGate | None:
+    """The registered family gate for a machine, or None."""
+    return _MACHINE_GATES.get(machine_family(machine))
+
+
+def clear_machine_gates() -> None:
+    """Drop every registered family gate (test isolation hook)."""
+    _MACHINE_GATES.clear()
+
+
+def train_machine_gates(
+    stats_by_family: dict,
+    *,
+    install: bool = False,
+    **kw,
+) -> dict[str, LearnedGate]:
+    """Train one gate per family from per-family statistics.
+
+    ``stats_by_family`` maps family keys (or machine names/specs) to
+    :class:`~repro.learn.stats.GateStats`; each gate's meta records its
+    family.  ``install=True`` additionally registers every trained gate
+    via :func:`set_machine_gate`.  Remaining keyword arguments forward
+    to :func:`train_gate_from_stats` (``max_leaves``, ``min_points``,
+    ``meta``).
+    """
+    meta_extra = dict(kw.pop("meta", None) or {})
+    gates = {}
+    for fam_key, stats in stats_by_family.items():
+        fam = machine_family(fam_key)
+        gates[fam] = train_gate_from_stats(
+            stats, meta={**meta_extra, "family": fam}, **kw
+        )
+    if install:
+        for fam, gate in gates.items():
+            set_machine_gate(fam, gate)
+    return gates
+
+
+def save_machine_gates(gates: dict, *, cache=None) -> None:
+    """Persist family gates in the artifact segment, one per family.
+
+    Names are ``machine:<family>`` — the segment already keys artifacts
+    by name, so families ride alongside the ``"default"`` global gate.
+    """
+    for fam_key, gate in gates.items():
+        save_gate(
+            gate, cache=cache,
+            name=MACHINE_GATE_PREFIX + machine_family(fam_key),
+        )
+
+
+def load_machine_gate(machine, *, cache=None) -> LearnedGate | None:
+    """Load one family's persisted gate (None when absent or stale)."""
+    return load_gate(
+        cache=cache, name=MACHINE_GATE_PREFIX + machine_family(machine)
+    )
+
+
 __all__ = [
     "GATE_SCHEMA_VERSION",
     "GATE_ARTIFACT_KIND",
+    "MACHINE_GATE_PREFIX",
     "LearnedGate",
     "train_gate",
     "train_gate_from_stats",
@@ -494,4 +601,11 @@ __all__ = [
     "load_gate",
     "set_default_gate",
     "get_default_gate",
+    "machine_family",
+    "set_machine_gate",
+    "get_machine_gate",
+    "clear_machine_gates",
+    "train_machine_gates",
+    "save_machine_gates",
+    "load_machine_gate",
 ]

@@ -114,11 +114,15 @@ class GateStats:
 
     # -- accumulation ---------------------------------------------------
 
-    def update_from_grid(self, grid: GridResult) -> None:
+    def update_from_grid(self, grid: GridResult, machine_indices=None) -> None:
         """Fold one (shard's) GridResult into the statistics.
 
         Integer columns accumulate exactly, so any sharding of the same
-        grid produces the same histogram.
+        grid produces the same histogram.  ``machine_indices`` restricts
+        accumulation to a subset of the grid's machine axis (the
+        per-machine-family training path: one grid evaluation feeds one
+        :class:`GateStats` per family, and the per-family histograms sum
+        exactly to the unrestricted one).
         """
         from repro.core.engine import GRID_SCHEDULES
 
@@ -139,7 +143,10 @@ class GateStats:
         t_best = grid.best_total()
         serial_l = SCHEDULE_INDEX[Schedule.SERIAL]
         s_idx = np.arange(S)
-        best = grid.best_idx()
+        if machine_indices is None:
+            machine_indices = range(len(grid.machines))
+        machine_indices = [int(j) for j in machine_indices]
+        best = grid.best_idx()[:, machine_indices]
         for l, sched in enumerate(grid.schedules):
             n = int((best == l).sum())
             if n:
@@ -147,7 +154,8 @@ class GateStats:
                     self.best_counts.get(sched.value, 0) + n
                 )
         flat = self.hist.reshape(-1, _N_STAT)
-        for j, machine in enumerate(grid.machines):
+        for j in machine_indices:
+            machine = grid.machines[j]
             # One link-model evaluation feeds the score, the base picks
             # and the feature matrix alike.
             terms = serial_gate_terms_batch(

@@ -38,6 +38,34 @@ from repro.sweep.runner import (
 )
 from repro.sweep.synth import synthetic_batch, synthetic_ragged_batch
 
+# Device-resident pieces (repro.sweep.device) are exported lazily via
+# PEP 562 so importing the package never imports jax: the fast CI lane
+# and numpy-only deployments keep their import graph jax-free.
+_DEVICE_EXPORTS = (
+    "host_batch",
+    "host_ragged_batch",
+    "device_batch",
+    "device_ragged_batch",
+    "evaluate_mixed_grid",
+    "dispatch_mixed_grid",
+    "sweep_device_stats",
+)
+
+
+def __getattr__(name):
+    if name in _DEVICE_EXPORTS:
+        from repro.sweep import device
+
+        return getattr(device, name)
+    raise AttributeError(
+        f"module {__name__!r} has no attribute {name!r}"
+    )
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_DEVICE_EXPORTS))
+
+
 __all__ = [
     "ShardPlan",
     "plan_shards",
@@ -53,4 +81,5 @@ __all__ = [
     "sweep_grid",
     "synthetic_batch",
     "synthetic_ragged_batch",
+    *_DEVICE_EXPORTS,
 ]

@@ -400,6 +400,7 @@ def sweep_grid(
     devices=None,
     on_shard=None,
     on_shard_grid=None,
+    overlap_dispatch: bool = False,
 ) -> SweepResult:
     """Sharded design-space sweep over the scenario axis.
 
@@ -429,6 +430,16 @@ def sweep_grid(
     local jax ``devices`` (defaults to all of them) via the jitted
     engine's kernels; otherwise shards run through the engine named by
     ``backend`` / passed as ``engine``.
+
+    ``overlap_dispatch=True`` double-buffers shards on engines exposing
+    a two-phase ``dispatch()`` (the ``"mixed"`` engine): shard ``k+1``
+    is dispatched asynchronously before shard ``k`` finalizes, the same
+    overlap discipline ``ficco_ag_matmul`` applies to DMA egress.
+    Per-shard ``seconds`` then overlap wall-clock.  Engines without
+    ``dispatch`` fall back to eager evaluation — results are identical
+    either way (summary order and all hook orderings are preserved),
+    and the flag defaults off so every pre-existing path keeps its
+    bit-identity contract trivially.  Ignored under ``device_parallel``.
     """
     if mode not in ("gather", "reduce"):
         raise ValueError(f"mode must be 'gather'|'reduce', got {mode!r}")
@@ -457,31 +468,65 @@ def sweep_grid(
             schedules=schedules,
         )
 
+    dispatch_shard = (
+        None if device_parallel else getattr(eng, "dispatch", None)
+    )
+    two_phase = overlap_dispatch and dispatch_shard is not None
+
     plan = plan_shards(
         len(sb), num_shards if num_shards is not None else host_count
     )
     owned = shards_for_host(plan, host_index, host_count)
     summaries: list[ShardSummary] = []
     parts: list[GridResult] = []
-    for shard in owned:
-        start, stop = plan.bounds[shard]
-        if start == stop:  # degenerate empty shard (more shards than S)
-            summ = ShardSummary(
-                shard, start, stop, 0, 0, 0.0, 0.0, {}, 0.0, 0.0
-            )
-        else:
-            piece = _slice_batch(sb, start, stop)
-            t0 = time.perf_counter()
-            grid = eval_shard(piece)
-            dt = time.perf_counter() - t0
-            summ = summarize_shard(grid, shard, start, stop, dt)
-            if on_shard_grid is not None:
-                on_shard_grid(grid, summ)
-            if mode == "gather":
-                parts.append(grid)
+
+    def _complete(entry):
+        shard, start, stop, t0, finalize = entry
+        grid = finalize()
+        dt = time.perf_counter() - t0
+        summ = summarize_shard(grid, shard, start, stop, dt)
+        if on_shard_grid is not None:
+            on_shard_grid(grid, summ)
+        if mode == "gather":
+            parts.append(grid)
         summaries.append(summ)
         if on_shard is not None:
             on_shard(summ)
+
+    pending = None
+    for shard in owned:
+        start, stop = plan.bounds[shard]
+        if start == stop:  # degenerate empty shard (more shards than S)
+            if pending is not None:  # keep summaries in shard order
+                _complete(pending)
+                pending = None
+            summ = ShardSummary(
+                shard, start, stop, 0, 0, 0.0, 0.0, {}, 0.0, 0.0
+            )
+            summaries.append(summ)
+            if on_shard is not None:
+                on_shard(summ)
+            continue
+        piece = _slice_batch(sb, start, stop)
+        t0 = time.perf_counter()
+        if two_phase:
+            finalize = dispatch_shard(
+                piece, machines, dma=dma, dma_into_place=dma_into_place,
+                schedules=schedules,
+            )
+        else:
+            grid_now = eval_shard(piece)
+            finalize = lambda g=grid_now: g  # noqa: E731
+        entry = (shard, start, stop, t0, finalize)
+        if pending is not None:
+            _complete(pending)
+            pending = None
+        if two_phase:
+            pending = entry  # shard k+1 dispatches before k finalizes
+        else:
+            _complete(entry)
+    if pending is not None:
+        _complete(pending)
     grid = None
     if mode == "gather":
         if parts:

@@ -31,10 +31,19 @@ def _isolated_autotune_cache(tmp_path, monkeypatch):
     monkeypatch.setenv(
         "REPRO_AUTOTUNE_CACHE_DIR", str(tmp_path / "autotune_cache")
     )
-    tuner_mod = sys.modules.get("repro.autotune.tuner")
-    if tuner_mod is not None:
-        tuner_mod.reset_tuner()
+
+    def _reset():
+        tuner_mod = sys.modules.get("repro.autotune.tuner")
+        if tuner_mod is not None:
+            tuner_mod.reset_tuner()
+        # Ambient learned gates (global + per-machine-family) steer the
+        # heuristic tree's gate resolution process-wide; drop any a test
+        # installed so suites stay order-independent.
+        gate_mod = sys.modules.get("repro.learn.gate")
+        if gate_mod is not None:
+            gate_mod.set_default_gate(None)
+            gate_mod.clear_machine_gates()
+
+    _reset()
     yield
-    tuner_mod = sys.modules.get("repro.autotune.tuner")
-    if tuner_mod is not None:
-        tuner_mod.reset_tuner()
+    _reset()

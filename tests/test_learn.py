@@ -52,18 +52,25 @@ from repro.learn import (
     GateStats,
     LearnedGate,
     MeasuredRecord,
+    clear_machine_gates,
     fit_machine,
     gate_accuracy,
+    get_machine_gate,
     grid_features,
     load_gate,
+    load_machine_gate,
+    machine_family,
     records_from_cache,
     save_gate,
+    save_machine_gates,
     scenario_features,
     set_default_gate,
+    set_machine_gate,
     sweep_stats,
     synthesize_records,
     train_gate,
     train_gate_from_stats,
+    train_machine_gates,
 )
 from repro.sweep import synthetic_batch, synthetic_ragged_batch
 
@@ -85,8 +92,10 @@ def _no_ambient_state():
     _h._TAU_OVERRIDES.clear()
     _h._SERIAL_GATE_OVERRIDES.clear()
     set_default_gate(None)
+    clear_machine_gates()
     yield
     set_default_gate(None)
+    clear_machine_gates()
     _h._TAU_OVERRIDES.clear()
     _h._TAU_OVERRIDES.update(tau)
     _h._SERIAL_GATE_OVERRIDES.clear()
@@ -719,3 +728,271 @@ def test_merge_sweep_cli_smoke(tmp_path):
         [str(_ROOT / "scripts" / "merge_sweep.py"), str(torn), "--strict"]
     )
     assert proc.returncode == 3
+
+
+# ---------------------------------------------------------------------------
+# Per-machine-family gates.
+# ---------------------------------------------------------------------------
+
+
+class TestMachineFamilyGates:
+    def test_family_key_convention(self):
+        assert machine_family("mi300x-8/bw0.7") == "mi300x-8"
+        assert machine_family("tpu-v5e-axis16") == "tpu-v5e-axis16"
+        assert machine_family(MI300X) == MI300X.name.split("/", 1)[0]
+        fams = {machine_family(m) for m in machine_grid(groups=(8,))}
+        assert fams == {"mi300x-8", "tpu-v5e-axis16"}
+
+    def test_registry_routes_heuristic_tree(self):
+        """A registered family gate outranks the scalar machine gate in
+        both the scalar and the batched decision tree; explicit
+        ``gate=`` / ``serial_gate=`` arguments still win."""
+        from repro.core.batch import GRID_SCHEDULES, SCHEDULE_INDEX
+
+        gemm = TABLE_I[1].gemm
+        base = select_schedule(gemm, MI300X).schedule
+        assert base is not Schedule.SERIAL
+
+        set_machine_gate(MI300X, _always_serial_gate())
+        assert get_machine_gate(MI300X) is not None
+        assert select_schedule(gemm, MI300X).schedule is Schedule.SERIAL
+        arr = lambda v: np.asarray([v])  # noqa: E731
+        b = select_schedule_batch(
+            arr(gemm.m), arr(gemm.n), arr(gemm.k), arr(gemm.dtype_bytes),
+            MI300X,
+        )
+        assert GRID_SCHEDULES[b[0]] is Schedule.SERIAL
+        # scalar-vs-batch agreement holds under ambient family gates
+        assert b[0] == SCHEDULE_INDEX[Schedule.SERIAL]
+
+        # Explicit arguments outrank the ambient family gate.
+        never = LearnedGate(tree={"leaf": True, "gate": float("inf")})
+        assert select_schedule(gemm, MI300X, gate=never).schedule is base
+        assert (
+            select_schedule(gemm, MI300X, serial_gate=float("inf")).schedule
+            is base
+        )
+        b2 = select_schedule_batch(
+            arr(gemm.m), arr(gemm.n), arr(gemm.k), arr(gemm.dtype_bytes),
+            MI300X, serial_gate=float("inf"),
+        )
+        assert GRID_SCHEDULES[b2[0]] is base
+
+        # A family gate for one machine never leaks onto another family.
+        assert get_machine_gate(TPU_V5E) is None
+        clear_machine_gates()
+        assert select_schedule(gemm, MI300X).schedule is base
+
+    def test_per_family_stats_sum_to_global(self):
+        """Folding a grid per machine family partitions the global
+        statistics exactly (integer histogram, counts, best tallies)."""
+        machines = machine_grid(groups=(8,))
+        grid = get_engine("numpy").evaluate(
+            synthetic_batch(500, seed=11), machines
+        )
+        full = GateStats.from_grid(grid)
+        parts = {}
+        for fam in dict.fromkeys(machine_family(m) for m in machines):
+            idx = [
+                j for j, m in enumerate(machines)
+                if machine_family(m) == fam
+            ]
+            st = GateStats.empty()
+            st.update_from_grid(grid, machine_indices=idx)
+            parts[fam] = st
+        assert len(parts) == 2
+        summed = None
+        for st in parts.values():
+            summed = st if summed is None else summed + st
+        assert np.array_equal(summed.hist, full.hist)
+        assert summed.n_points == full.n_points
+        assert summed.best_counts == full.best_counts
+
+    def test_train_install_persist_roundtrip(self, tmp_path):
+        """train_machine_gates records the family in meta, installs on
+        request, and persists under namespaced artifact names."""
+        from repro.autotune.cache import AutotuneCache
+
+        machines = machine_grid(groups=(8,))
+        grid = get_engine("numpy").evaluate(
+            synthetic_batch(500, seed=12), machines
+        )
+        parts = {}
+        for fam in dict.fromkeys(machine_family(m) for m in machines):
+            idx = [
+                j for j, m in enumerate(machines)
+                if machine_family(m) == fam
+            ]
+            st = GateStats.empty()
+            st.update_from_grid(grid, machine_indices=idx)
+            parts[fam] = st
+        gates = train_machine_gates(parts, install=True)
+        for fam, g in gates.items():
+            assert g.meta["family"] == fam
+            assert get_machine_gate(fam) is g
+
+        cache = AutotuneCache(path=str(tmp_path / "c.json"))
+        save_machine_gates(gates, cache=cache)
+        for fam, g in gates.items():
+            loaded = load_machine_gate(fam, cache=cache)
+            assert loaded is not None
+            assert loaded.to_json() == g.to_json()
+        # Perturbed machine names resolve to their family's artifact.
+        loaded = load_machine_gate("mi300x-8/bw0.7", cache=cache)
+        assert loaded is not None
+        assert loaded.to_json() == gates["mi300x-8"].to_json()
+        # The namespaced slots never shadow the global "default" gate.
+        assert load_gate(cache=cache) is None
+        clear_machine_gates()
+
+    def test_tuner_resolves_family_before_default(self, tmp_path,
+                                                  monkeypatch):
+        """Autotuner.learned_gate(machine): ambient family > ambient
+        default > family artifact > default artifact."""
+        from repro.autotune.cache import AutotuneCache
+        from repro.autotune.tuner import Autotuner
+
+        fam_gate = _always_serial_gate()
+        default_gate = LearnedGate(tree={"leaf": True, "gate": 99.0})
+
+        cache = AutotuneCache(path=str(tmp_path / "c.json"))
+        save_machine_gates({machine_family(MI300X): fam_gate}, cache=cache)
+        save_gate(default_gate, cache=cache)
+        t = Autotuner(cache, backend="numpy")
+        assert t.learned_gate(MI300X).to_json() == fam_gate.to_json()
+        # No machine context -> the default artifact.
+        assert t.learned_gate().to_json() == default_gate.to_json()
+        # Other families skip the mi300x slot and fall to the default.
+        assert t.learned_gate(TPU_V5E).to_json() == default_gate.to_json()
+
+        # Ambient registrations outrank artifacts and are re-checked
+        # per call.
+        ambient = LearnedGate(tree={"leaf": True, "gate": 7.0})
+        set_machine_gate(MI300X, ambient)
+        assert t.learned_gate(MI300X).to_json() == ambient.to_json()
+        clear_machine_gates()
+        assert t.learned_gate(MI300X).to_json() == fam_gate.to_json()
+
+    def test_tuner_fallback_applies_family_gate(self, tmp_path,
+                                                monkeypatch):
+        """The heuristic fallback picks serial for a machine whose
+        family gate says always-serial, and stays unchanged for other
+        machines."""
+        from repro.autotune.cache import AutotuneCache
+        from repro.autotune.tuner import Autotuner
+
+        gemm = TABLE_I[1].gemm
+        baseline = select_schedule(gemm, MI300X).schedule
+        assert baseline is not Schedule.SERIAL
+
+        def boom(self, *a, **kw):
+            raise RuntimeError("force the heuristic fallback")
+
+        monkeypatch.setattr(Autotuner, "_shortlist", boom)
+        set_machine_gate(MI300X, _always_serial_gate())
+        t = Autotuner(
+            AutotuneCache(path=str(tmp_path / "c.json")), backend="numpy"
+        )
+        assert t.pick(gemm, MI300X).schedule is Schedule.SERIAL
+        assert t.pick(gemm, TPU_V5E).schedule is not Schedule.SERIAL
+        clear_machine_gates()
+        assert t.pick(gemm, MI300X).schedule is baseline
+
+
+def test_merge_sweep_refuses_mixed_dtypes(tmp_path):
+    """Streams recorded at different evaluation dtypes never merge:
+    merge_streams raises and the CLI exits 4."""
+    sys.path.insert(0, str(_ROOT / "scripts"))
+    try:
+        import merge_sweep
+    finally:
+        sys.path.pop(0)
+    from repro.sweep import ShardSummary
+
+    def stream(host, dtype, shard):
+        summ = ShardSummary(
+            shard=shard, start=shard * 10, stop=shard * 10 + 10,
+            n_scenarios=10, n_points=20, seconds=0.1,
+            scenarios_per_sec=100.0, best_counts={"serial": 20},
+            frac_overlap_profitable=0.0, mean_best_speedup=0.0,
+        )
+        host_summary = {
+            "dtype": dtype, "owned_shards": [shard], "plan_shards": 2,
+            "n_shards": 1, "n_scenarios": 10, "n_points": 20,
+        }
+        path = tmp_path / f"host{host}.jsonl"
+        path.write_text(
+            json.dumps({"shard_summary": summ.to_json()}) + "\n"
+            + json.dumps({"host_summary": host_summary}) + "\n"
+        )
+        return path
+
+    p64 = stream(0, "float64", 0)
+    p32 = stream(1, "float32", 1)
+
+    streams = []
+    for p in (p64, p32):
+        with open(p) as f:
+            streams.append(merge_sweep.parse_stream(f))
+    with pytest.raises(ValueError, match="mismatched dtypes"):
+        merge_sweep.merge_streams(streams)
+
+    proc = _run_script(
+        [str(_ROOT / "scripts" / "merge_sweep.py"), str(p64), str(p32)]
+    )
+    assert proc.returncode == 4
+    assert "REFUSED" in proc.stderr
+    assert "mismatched dtypes" in proc.stderr
+
+    # Same-dtype streams still merge, recording the dtype; a stream
+    # written before dtype recording existed counts as float64.
+    proc = _run_script(
+        [str(_ROOT / "scripts" / "merge_sweep.py"), str(p64), str(p64)]
+    )
+    assert proc.returncode == 0
+    merged = json.loads(proc.stdout)
+    assert merged["dtype"] == "float64"
+
+    legacy = tmp_path / "legacy.jsonl"
+    text = p64.read_text().replace('"dtype": "float64", ', "")
+    legacy.write_text(text)
+    streams = []
+    for p in (legacy, p64):
+        with open(p) as f:
+            streams.append(merge_sweep.parse_stream(f))
+    merged = merge_sweep.merge_streams(streams)
+    assert merged["dtype"] == "float64"
+
+
+def test_check_regression_skips_zero_baselines(capsys):
+    """A 0.0 baseline value is a placeholder, not a target: the key is
+    skipped with a warning instead of gating the run."""
+    sys.path.insert(0, str(_ROOT))
+    try:
+        from benchmarks.run import check_regression
+    finally:
+        sys.path.pop(0)
+
+    warns = []
+    bad = check_regression(
+        {"sweepshard/reduce": 123.0, "learn/within5_skewed": 1.0},
+        {"sweepshard/reduce": 0.0, "learn/within5_skewed": 0.0},
+        warn=warns.append,
+    )
+    assert bad == []
+    assert len(warns) == 2
+    assert all("0.0" in w and "skipping" in w for w in warns)
+
+    # Non-zero baselines still gate as before.
+    bad = check_regression(
+        {"sweepshard/reduce": 123.0},
+        {"sweepshard/reduce": 5.0},
+        warn=warns.append,
+    )
+    assert len(bad) == 1 and "sweepshard/reduce" in bad[0]
+    # Default warn goes to stderr and must not raise.
+    bad = check_regression(
+        {"sweepshard/reduce": 1.0}, {"sweepshard/reduce": 0.0}
+    )
+    assert bad == []
+    assert "skipping" in capsys.readouterr().err
