@@ -1,0 +1,76 @@
+"""Observability overhead: the tracer's cost on the instrumented paths.
+
+The instrumentation contract (repro.obs.trace) is that DISABLED tracing
+is free enough to live on every hot path permanently — so the disabled
+number is the one the CI regression gate watches (``obs/sweep_disabled``
+joins THROUGHPUT_KEYS; it measures the same sharded-reduce sweep as
+``sweepshard/reduce`` and must stay within the same ratio).  The
+enabled numbers are recorded for trend tracking, not gated: tracing on
+is a debugging/profiling mode, and its cost is dominated by span-arg
+dict construction.
+
+  obs/span_disabled       — one ``trace.span(...)`` call, tracer off
+                            (the per-site tax every instrumented call
+                            pays forever)
+  obs/span_enabled        — one span open+close, tracer on
+  obs/sweep_disabled      — sharded sweep us/point, tracer off (GATED)
+  obs/sweep_enabled       — same sweep, tracer + metrics recording on
+  obs/overhead_pct        — enabled/disabled - 1, as a percentage
+"""
+
+from repro.core.workload import machine_grid
+from repro.obs import trace as obs_trace
+from repro.sweep import sweep_grid, synthetic_batch
+
+from benchmarks.common import row, timed
+
+_S = 8192
+_SPAN_CALLS = 100_000
+_SHARDS = 4
+
+
+def _span_loop(n: int) -> None:
+    span = obs_trace.span
+    for _ in range(n):
+        with span("bench", "obs", i=0):
+            pass
+
+
+def _sweep(sb, machines) -> None:
+    sweep_grid(sb, machines, num_shards=_SHARDS, mode="reduce")
+
+
+def run() -> list[str]:
+    machines = machine_grid(groups=(8,))
+    sb = synthetic_batch(_S, seed=0)
+    points = _S * len(machines)
+
+    assert not obs_trace.enabled()
+    _, us_off = timed(_span_loop, _SPAN_CALLS)
+    obs_trace.enable()
+    _, us_on = timed(_span_loop, _SPAN_CALLS)
+    obs_trace.disable()
+
+    # Warm calibration caches so both sweeps time pure evaluation.
+    _sweep(sb, machines)
+    _, sweep_off = timed(_sweep, sb, machines)
+    obs_trace.enable()
+    _, sweep_on = timed(_sweep, sb, machines)
+    tracer = obs_trace.get_tracer()
+    n_events = len(tracer.events) if tracer else 0
+    obs_trace.disable()
+
+    overhead = 100.0 * (sweep_on / sweep_off - 1.0)
+    return [
+        row("obs/span_disabled", us_off / _SPAN_CALLS,
+            f"{1e3 * us_off / _SPAN_CALLS:.1f} ns per disabled span"),
+        row("obs/span_enabled", us_on / _SPAN_CALLS,
+            f"{1e3 * us_on / _SPAN_CALLS:.0f} ns per recorded span"),
+        row("obs/sweep_disabled", sweep_off / points,
+            f"{1e6 * points / sweep_off:.0f} points/s, tracer off"),
+        row("obs/sweep_enabled", sweep_on / points,
+            f"{1e6 * points / sweep_on:.0f} points/s, tracer+metrics on "
+            f"({n_events} events)"),
+        row("obs/overhead_pct", 0.0,
+            f"{overhead:.1f}% sweep slowdown with tracing enabled"),
+    ]

@@ -29,6 +29,7 @@ silently ratchet the baseline down to the regressed numbers.
 import argparse
 import json
 import sys
+import time
 
 # Keys whose us_per_call tracks engine throughput (lower is better);
 # the regression guard watches these, not the model-fidelity rows.
@@ -39,6 +40,7 @@ THROUGHPUT_KEYS = (
     "ragged/batched",
     "ragged/jax",
     "sweepshard/reduce",
+    "obs/sweep_disabled",
     "sweepdevice/fused",
     "sweepdevice/stats",
     "sweepdevice/ragged_stats",
@@ -66,6 +68,7 @@ REGRESSION_RATIO = 1.0 / 0.8
 ONLY_ALIASES = {
     "learn": "bench_learn",
     "sweepdevice": "bench_sweep_device",
+    "obs": "bench_obs",
 }
 
 
@@ -134,6 +137,7 @@ def main() -> None:
         bench_dil_gemm,
         bench_heuristic,
         bench_learn,
+        bench_obs,
         bench_proportions,
         bench_ragged,
         bench_schedules,
@@ -148,7 +152,7 @@ def main() -> None:
         bench_schedules, bench_shard_overlap, bench_comparison,
         bench_heuristic, bench_cpu_overlap, bench_arch_schedules,
         bench_sweep, bench_autotune, bench_ragged, bench_sweep_shard,
-        bench_sweep_device, bench_learn,
+        bench_sweep_device, bench_learn, bench_obs,
     ]
 
     ap = argparse.ArgumentParser(description=__doc__)
@@ -206,8 +210,10 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     results: dict[str, float] = {}
+    bench_seconds: dict[str, float] = {}
     failed = 0
     for mod in modules:
+        t0 = time.perf_counter()
         try:
             for r in mod.run():
                 print(r)
@@ -216,6 +222,9 @@ def main() -> None:
         except Exception as e:  # pragma: no cover
             failed += 1
             print(f"{mod.__name__},0.0,ERROR:{e}")
+        bench_seconds[mod.__name__.rsplit(".", 1)[-1]] = round(
+            time.perf_counter() - t0, 3
+        )
     # Regression gate BEFORE --json: a failing run must leave the
     # baseline file untouched (overwriting first would make a rerun
     # compare regressed-vs-regressed and "pass").
@@ -241,8 +250,13 @@ def main() -> None:
                 sys.exit(2)
             print("# regression check passed", file=sys.stderr)
     if args.json:
+        # Per-module wall clock rides along as metadata, outside the
+        # gated name -> us_per_call namespace ("__" sorts before every
+        # module prefix and THROUGHPUT/ACCURACY keys never match it).
+        payload = dict(results)
+        payload["__meta__"] = {"bench_seconds": bench_seconds}
         with open(args.json, "w") as f:
-            json.dump(results, f, indent=1, sort_keys=True)
+            json.dump(payload, f, indent=1, sort_keys=True)
         print(f"# wrote {args.json} ({len(results)} entries)", file=sys.stderr)
     if failed:
         sys.exit(1)

@@ -101,6 +101,23 @@ def merge_streams(streams, expect_shards=None):
     merged = merge_summaries(by_shard.values())
     if dtypes:
         merged["dtype"] = dtypes.pop()
+
+    # Per-host throughput and its spread: the load-imbalance signal a
+    # re-dispatcher reads.  skew = slowest/fastest as a ratio >= 1; a
+    # skew of 2 means the slowest host did half the scenarios/s of the
+    # fastest and the round-robin owner map should be re-weighted.
+    throughput = {}
+    for h in hosts:
+        wall = h.get("wall_seconds")
+        idx = h.get("host_index")
+        if idx is None or not wall or wall <= 0:
+            continue
+        throughput[str(idx)] = h.get("n_scenarios", 0) / wall
+    merged["host_throughput"] = throughput
+    rates = [r for r in throughput.values() if r > 0]
+    merged["host_throughput_skew"] = (
+        max(rates) / min(rates) if len(rates) >= 2 else None
+    )
     merged["hosts_reporting"] = len(hosts)
     merged["duplicate_shard_reports"] = dupes
     merged["expected_shards"] = n_expected

@@ -94,7 +94,20 @@ def main() -> None:
         "--out", default=None, metavar="PATH",
         help="append one JSON line per finished shard (stdout if unset)",
     )
+    ap.add_argument(
+        "--trace", default=None, metavar="PATH",
+        help="export a Chrome/Perfetto trace of the shard pipeline here",
+    )
+    ap.add_argument(
+        "--metrics", default=None, metavar="PATH",
+        help="append one metrics-snapshot JSON line here when done",
+    )
     args = ap.parse_args()
+
+    if args.trace:
+        from repro.obs import trace as obs_trace
+
+        obs_trace.enable(args.trace)
 
     engine = None
     if args.backend == "mixed":
@@ -151,6 +164,20 @@ def main() -> None:
     merged["host_index"] = args.host_index
     merged["host_count"] = args.host_count
     merged["owned_shards"] = list(res.owned)
+    # Per-shard duration distribution: the straggler signal a dispatcher
+    # reads before deciding to re-shard (p95 >> p50 = skewed shards).
+    durations = sorted(
+        s.seconds for s in res.summaries if s.n_scenarios > 0
+    )
+    if durations:
+        from repro.obs.metrics import Histogram
+
+        h = Histogram()
+        for d in durations:
+            h.observe(d)
+        merged["shard_seconds_total"] = sum(durations)
+        merged["shard_seconds_p50"] = h.percentile(0.5)
+        merged["shard_seconds_p95"] = h.percentile(0.95)
     # Recorded so the aggregator can refuse to merge mixed-precision
     # streams with float64 ones (same no-silent-mixing rule GateStats
     # enforces for bin edges).
@@ -163,6 +190,14 @@ def main() -> None:
     stream.flush()
     if args.out:
         stream.close()
+    if args.metrics:
+        from repro.obs import metrics as obs_metrics
+
+        obs_metrics.get_metrics().export_jsonl(args.metrics)
+    if args.trace:
+        from repro.obs import trace as obs_trace
+
+        obs_trace.disable()  # exports to args.trace
     print(
         f"# done: {merged['n_scenarios']} scenarios "
         f"({merged['n_points']} points) in {wall:.2f}s wall "

@@ -35,6 +35,9 @@ from repro.core.heuristics import select_schedule
 from repro.core.machine import TPU_V5E, MachineSpec, machine_for_group
 from repro.core.schedule_types import Schedule
 from repro.core.workload import GemmShape
+from repro.obs import audit as _audit
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
 
 from repro.autotune.cache import AutotuneCache
 
@@ -85,10 +88,23 @@ class TuneKey:
 
 @dataclasses.dataclass(frozen=True)
 class TuneDecision:
+    """One schedule decision plus its provenance.
+
+    ``key`` is the :class:`TuneKey` string the decision was made under
+    (None only for pre-provenance constructions), ``shortlist`` the
+    analytic ranking consulted — ``(schedule value, modelled seconds)``
+    pairs, empty when no ranking ran (cache hit, heuristic fallback) —
+    and ``gate`` the learned-gate verdict behind a heuristic decision
+    (``{"metric": ..., "threshold": ..., "reason": ...}``).
+    """
+
     schedule: Schedule
     source: str  # "cache" | "analytic" | "measured" | "heuristic"
     model_total_s: float | None = None
     measured_total_s: float | None = None
+    key: str | None = None
+    shortlist: tuple = ()
+    gate: dict | None = None
 
 
 def _runtime_executable(gemm: GemmShape, group: int, sched: Schedule) -> bool:
@@ -122,6 +138,7 @@ class Autotuner:
         backend: str = "jax",
         persist: bool = True,
         gate=None,
+        audit=None,
     ):
         from repro.core.engine import get_engine
 
@@ -132,9 +149,56 @@ class Autotuner:
         self.hits = 0
         self.misses = 0
         self._gate = gate
+        # Decision-audit destination: an AuditLog pins it, None defers
+        # to the process-wide log (repro.obs.audit — re-checked every
+        # decision, so REPRO_AUTOTUNE_AUDIT/enable_audit() apply to
+        # already-built tuners), False disables auditing for this tuner
+        # (the offline replayer uses this so replays never append to
+        # the log being replayed).
+        self._audit = audit
         # Artifact gates load lazily, once per artifact name ("default"
         # plus one "machine:<family>" slot per family queried).
         self._artifact_gates: dict = {}
+
+    # -- observability ---------------------------------------------------
+
+    def _audit_log(self):
+        if self._audit is False:
+            return None
+        if self._audit is not None:
+            return self._audit
+        return _audit.get_audit()
+
+    def _observe(self, kind: str, key: TuneKey, dec: TuneDecision,
+                 seconds: float) -> None:
+        """Metrics + audit for one decision.  Never raises — the tuner's
+        never-raise contract outranks observability."""
+        try:
+            reg = _metrics.get_metrics()
+            reg.counter("tuner/decisions").inc()
+            reg.counter(f"tuner/pick.{dec.source}").inc()
+            reg.histogram("tuner/pick_seconds").observe(seconds)
+            log = self._audit_log()
+            if log is not None:
+                log.record({
+                    "kind": kind,
+                    "key": str(key),
+                    "machine": key.machine,
+                    "group": key.group,
+                    "m": key.m,
+                    "n": key.n,
+                    "k": key.k,
+                    "dtype_bytes": key.dtype_bytes,
+                    "profile": key.profile,
+                    "schedule": dec.schedule.value,
+                    "source": dec.source,
+                    "model_total_s": dec.model_total_s,
+                    "measured_total_s": dec.measured_total_s,
+                    "shortlist": list(dec.shortlist),
+                    "gate": dec.gate,
+                })
+        except Exception:  # pragma: no cover - observability best-effort
+            pass
 
     def learned_gate(self, machine=None):
         """The learned serial-gate family this tuner's fallback consults.
@@ -212,7 +276,24 @@ class Autotuner:
         re-tunes.
         """
         machine = machine or TPU_V5E
-        key = str(TuneKey.for_gemm(gemm, machine, group, profile=profile))
+        tkey = TuneKey.for_gemm(gemm, machine, group, profile=profile)
+        key = str(tkey)
+        t0 = time.perf_counter()
+        with _trace.span("tuner/pick", "autotune", key=key) as sp:
+            dec = self._pick_impl(gemm, machine, key, group, profile)
+            sp.set(
+                tier=dec.source,
+                schedule=dec.schedule.value,
+                cache="hit" if dec.source == "cache" else "miss",
+                shortlist=[[s, t] for s, t in dec.shortlist],
+                **({"gate": dec.gate} if dec.gate is not None else {}),
+            )
+        self._observe("pick", tkey, dec, time.perf_counter() - t0)
+        return dec
+
+    def _pick_impl(
+        self, gemm, machine, key: str, group, profile
+    ) -> TuneDecision:
         hit = self.cache.get(key)
         if hit is not None:
             try:
@@ -226,6 +307,7 @@ class Autotuner:
                     "cache",
                     hit.get("model_total_s"),
                     hit.get("measured_total_s"),
+                    key=key,
                 )
         self.misses += 1
         eff = machine_for_group(machine, group) if group else machine
@@ -249,16 +331,32 @@ class Autotuner:
             # consulted ahead of the hand-tuned scalar gate.  The
             # never-raise contract outranks the gate: a malformed gate
             # artifact degrades to the scalar-gated tree.
+            gate_info = None
             try:
-                dec = select_schedule(
-                    gemm, eff, profile=profile,
-                    gate=self.learned_gate(eff),
-                )
+                gate = self.learned_gate(eff)
+                dec = select_schedule(gemm, eff, profile=profile, gate=gate)
+                gate_info = {
+                    "kind": type(gate).__name__ if gate is not None else None,
+                    "metric": dec.metric,
+                    "threshold": dec.threshold,
+                    "reason": dec.reason,
+                }
             except Exception:
                 dec = select_schedule(gemm, eff, profile=profile)
-            return TuneDecision(dec.schedule, "heuristic")
+                gate_info = {
+                    "kind": None,
+                    "metric": dec.metric,
+                    "threshold": dec.threshold,
+                    "reason": dec.reason,
+                }
+            return TuneDecision(
+                dec.schedule, "heuristic", key=key, gate=gate_info
+            )
         self._record(key, sched, "analytic", model_total_s=model_t)
-        return TuneDecision(sched, "analytic", model_t)
+        return TuneDecision(
+            sched, "analytic", model_t, key=key,
+            shortlist=tuple((s.value, float(t)) for s, t in ranked[:3]),
+        )
 
     def shortlist(
         self,
@@ -289,9 +387,13 @@ class Autotuner:
 
             if not _jax.core.trace_state_clean():
                 eng = _engine.get_engine("numpy")
-        out = _engine.shortlist(
-            gemm, machine, top=top, engine=eng, profile=profile
-        )
+        with _trace.span(
+            "tuner/shortlist", "autotune", engine=eng.name, top=top
+        ) as sp:
+            out = _engine.shortlist(
+                gemm, machine, top=top, engine=eng, profile=profile
+            )
+            sp.set(ranking=[[s.value, float(t)] for s, t in out])
         if not out:
             raise ValueError(f"no valid schedule for {gemm}")
         return out
@@ -329,7 +431,9 @@ class Autotuner:
         m, k = x.shape
         n = w.shape[1]
         gemm = GemmShape(m, n, k, x.dtype.itemsize)
-        key = str(TuneKey.for_gemm(gemm, machine, g))
+        tkey = TuneKey.for_gemm(gemm, machine, g)
+        key = str(tkey)
+        t0 = time.perf_counter()
 
         if schedules is None:
             try:
@@ -354,16 +458,22 @@ class Autotuner:
                     check_vma=False,
                 )
             )
-            try:
-                fn(x, w).block_until_ready()  # compile + warm
-                best = float("inf")
-                for _ in range(iters):
-                    t0 = time.perf_counter()
-                    fn(x, w).block_until_ready()
-                    best = min(best, time.perf_counter() - t0)
-                timings[sched] = best
-            except Exception:
-                continue  # schedule not executable here; skip it
+            with _trace.span(
+                "tuner/measure_candidate", "autotune",
+                key=key, schedule=sched.value,
+            ) as sp:
+                try:
+                    fn(x, w).block_until_ready()  # compile + warm
+                    best = float("inf")
+                    for _ in range(iters):
+                        t1 = time.perf_counter()
+                        fn(x, w).block_until_ready()
+                        best = min(best, time.perf_counter() - t1)
+                    timings[sched] = best
+                    sp.set(seconds=best)
+                except Exception:
+                    sp.set(failed=True)
+                    continue  # schedule not executable here; skip it
 
         if not timings:
             dec = self.pick(gemm, machine, group=g)
@@ -372,9 +482,19 @@ class Autotuner:
         self._record(
             key, winner, "measured", measured_total_s=timings[winner]
         )
-        return TuneDecision(
-            winner, "measured", measured_total_s=timings[winner]
+        dec = TuneDecision(
+            winner, "measured", measured_total_s=timings[winner], key=key,
+            shortlist=tuple(
+                (s.value, float(t))
+                for s, t in sorted(timings.items(), key=lambda kv: kv[1])
+            ),
         )
+        try:
+            _metrics.get_metrics().counter("tuner/measure").inc()
+        except Exception:  # pragma: no cover
+            pass
+        self._observe("measure", tkey, dec, time.perf_counter() - t0)
+        return dec
 
     # -- bookkeeping ----------------------------------------------------
 

@@ -42,6 +42,8 @@ import numpy as np
 from repro.core.machine import MachineSpec
 from repro.core.schedule_types import STUDIED, Schedule
 from repro.core.simulator import SimResult
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
 
 # Canonical schedule order — matches the dict order of
 # ``simulator.best_schedule`` so argmin tie-breaking is identical.
@@ -202,6 +204,18 @@ def is_ragged(scenarios) -> bool:
     return False
 
 
+def _observe_evaluate(name: str, scenarios):
+    """Span + counter for one engine evaluation (no-op when disabled)."""
+    try:
+        n = len(scenarios)
+    except TypeError:  # raw generators: counted after coercion, skip here
+        n = None
+    _metrics.get_metrics().counter(f"engine/evaluate.{name}").inc()
+    return _trace.span(
+        "engine/evaluate", "engine", engine=name, n_scenarios=n
+    )
+
+
 @runtime_checkable
 class Engine(Protocol):
     """One design-space evaluation backend.
@@ -276,6 +290,8 @@ class ScalarEngine:
             else _batch._as_batch(scenarios)
         )
         machines = tuple(machines)
+        _span = _observe_evaluate(self.name, sb)
+        _span.__enter__()
         L, S, M = len(schedules), len(sb), len(machines)
         total = np.full((L, S, M), np.nan)
         comm_busy = np.full((L, S, M), np.nan)
@@ -324,6 +340,7 @@ class ScalarEngine:
                     compute_busy[l, i, j] = r.compute_busy
                     exposed[l, i, j] = r.exposed_comm
                     valid[l, i, j] = True
+        _span.__exit__(None, None, None)
         return GridResult(
             schedules=schedules,
             scenarios=sb,
@@ -366,10 +383,11 @@ class NumpyEngine:
             if is_ragged(scenarios)
             else _batch.evaluate_grid
         )
-        return fn(
-            scenarios, machines, dma=dma, dma_into_place=dma_into_place,
-            schedules=GRID_SCHEDULES if schedules is None else schedules,
-        )
+        with _observe_evaluate(self.name, scenarios):
+            return fn(
+                scenarios, machines, dma=dma, dma_into_place=dma_into_place,
+                schedules=GRID_SCHEDULES if schedules is None else schedules,
+            )
 
 
 class JaxEngine:
@@ -402,10 +420,11 @@ class JaxEngine:
             if is_ragged(scenarios)
             else jaxgrid.evaluate_grid
         )
-        return fn(
-            scenarios, machines, dma=dma, dma_into_place=dma_into_place,
-            schedules=GRID_SCHEDULES if schedules is None else schedules,
-        )
+        with _observe_evaluate(self.name, scenarios):
+            return fn(
+                scenarios, machines, dma=dma, dma_into_place=dma_into_place,
+                schedules=GRID_SCHEDULES if schedules is None else schedules,
+            )
 
 
 class MixedEngine:
@@ -451,11 +470,12 @@ class MixedEngine:
     ) -> GridResult:
         from repro.sweep import device as _device
 
-        return _device.evaluate_mixed_grid(
-            scenarios, machines, dtype=self.dtype,
-            dma=dma, dma_into_place=dma_into_place,
-            schedules=GRID_SCHEDULES if schedules is None else schedules,
-        )
+        with _observe_evaluate(self.name, scenarios):
+            return _device.evaluate_mixed_grid(
+                scenarios, machines, dtype=self.dtype,
+                dma=dma, dma_into_place=dma_into_place,
+                schedules=GRID_SCHEDULES if schedules is None else schedules,
+            )
 
     def dispatch(
         self,

@@ -20,6 +20,7 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core import inefficiency as ineff
+from repro.core import schedule_types as _su
 from repro.core.machine import MachineSpec
 from repro.core.schedule_types import Schedule
 from repro.core.workload import GemmShape, StepProfile
@@ -53,6 +54,59 @@ class SimResult:
     @property
     def ideal_speedup(self) -> float:
         return self.serial_total / self.ideal_total
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleSteps:
+    """A schedule lowered to its two work queues, before the pipeline runs.
+
+    This is the intermediate representation ``simulate`` always built
+    internally and then discarded; it is public so observability tooling
+    (:mod:`repro.obs.timeline`) can render the per-step comm/compute
+    lanes of any schedule without re-deriving the lowering.  ``run()``
+    feeds the queues through the same pipeline recurrence ``simulate``
+    uses — results are bit-identical to ``simulate``'s.
+
+    ``comm_active``/``comp_active`` are the ragged path's step masks
+    (None on uniform schedules).  ``comm_cil``/``gemm_cil`` record the
+    contention factors applied to the *step* streams (None when the
+    lowering applies them per-step internally, i.e. ragged), and
+    ``local_first`` marks ``compute[0]`` as the un-communicated local
+    shard GEMM (hetero FiCCO variants and shard-P2P).
+    """
+
+    schedule: Schedule
+    comm: tuple[float, ...]
+    compute: tuple[float, ...]
+    deps: tuple[int | None, ...]
+    steps: int
+    serial_comm: float
+    serial_gemm: float
+    comm_active: tuple[bool, ...] | None = None
+    comp_active: tuple[bool, ...] | None = None
+    comm_cil: float | None = None
+    gemm_cil: float | None = None
+    local_first: bool = False
+
+    def run(self) -> SimResult:
+        if self.comm_active is not None:
+            total, exposed, comm_busy, compute_busy = _pipeline_masked(
+                list(self.comm),
+                list(self.compute),
+                list(self.deps),
+                list(self.comm_active),
+                list(self.comp_active),
+            )
+        else:
+            total, exposed = _pipeline(
+                list(self.comm), list(self.compute), list(self.deps)
+            )
+            comm_busy = sum(self.comm)
+            compute_busy = sum(self.compute)
+        return SimResult(
+            self.schedule, total, comm_busy, compute_busy, exposed,
+            self.steps, self.serial_comm, self.serial_gemm,
+        )
 
 
 def _pipeline(
@@ -141,6 +195,28 @@ def simulate(
     they move the same aggregate bytes whatever the skew — so a profile
     passed with those schedules is accepted and ignored.
     """
+    return schedule_steps(
+        gemm, machine, schedule,
+        dma=dma, dma_into_place=dma_into_place, profile=profile,
+    ).run()
+
+
+def schedule_steps(
+    gemm: GemmShape,
+    machine: MachineSpec,
+    schedule: Schedule,
+    *,
+    dma: bool = True,
+    dma_into_place: bool = False,
+    profile: StepProfile | None = None,
+) -> ScheduleSteps:
+    """Lower one scenario to its per-step comm/compute work queues.
+
+    This is :func:`simulate` stopped one stage early:
+    ``schedule_steps(...).run()`` *is* ``simulate(...)``, bit for bit.
+    The exposed queues are what the schedule-timeline exporter renders
+    as Perfetto lanes.
+    """
     g = machine.group
     b = gemm.dtype_bytes
     # Per-device GEMM: TP column-shards the weight over the group, so the
@@ -152,34 +228,38 @@ def simulate(
     serial_gemm = ineff.gemm_exec(dev, machine).time
 
     if schedule is Schedule.SERIAL:
-        total = serial_comm + serial_gemm
-        return SimResult(
-            schedule, total, serial_comm, serial_gemm, serial_comm, 1,
-            serial_comm, serial_gemm,
+        # One AG, one GEMM, GEMM depends on the AG: the pipeline
+        # recurrence reproduces total = serial_comm + serial_gemm with
+        # the whole AG exposed.
+        return ScheduleSteps(
+            schedule, (serial_comm,), (serial_gemm,), (0,), 1,
+            serial_comm, serial_gemm, comm_cil=1.0, gemm_cil=1.0,
         )
 
     if schedule is Schedule.SHARD_P2P:
-        return _sim_shard_p2p(gemm, dev, machine, serial_comm, serial_gemm, dma)
+        return _steps_shard_p2p(
+            gemm, dev, machine, serial_comm, serial_gemm, dma
+        )
 
     if profile is not None:
-        return _sim_ficco_ragged(
+        return _steps_ficco_ragged(
             gemm, machine, schedule, profile, serial_comm, serial_gemm,
             dma, dma_into_place,
         )
-    return _sim_ficco(
+    return _steps_ficco(
         gemm, dev, machine, schedule, serial_comm, serial_gemm, dma,
         dma_into_place,
     )
 
 
-def _sim_shard_p2p(
+def _steps_shard_p2p(
     gemm: GemmShape,
     dev: GemmShape,
     machine: MachineSpec,
     serial_comm: float,
     serial_gemm: float,
     dma: bool,
-) -> SimResult:
+) -> ScheduleSteps:
     g = machine.group
     shard = dev.shard(g, "m")
     shard_bytes = float(shard.m * shard.k) * gemm.dtype_bytes
@@ -189,17 +269,17 @@ def _sim_shard_p2p(
     t_p2p = ineff.p2p_step_time(shard_bytes, machine) * c_cil
     t_gemm = ineff.gemm_exec(shard, machine).time * g_cil
     # compute_0 = local shard (no dep); compute_i needs P2P step i-1.
-    comm = [t_p2p] * (g - 1)
-    compute = [t_gemm] * g
-    deps: list[int | None] = [None] + list(range(g - 1))
-    total, exposed = _pipeline(comm, compute, deps)
-    return SimResult(
-        Schedule.SHARD_P2P, total, sum(comm), sum(compute), exposed, g,
+    comm = (t_p2p,) * (g - 1)
+    compute = (t_gemm,) * g
+    deps: tuple[int | None, ...] = (None, *range(g - 1))
+    return ScheduleSteps(
+        Schedule.SHARD_P2P, comm, compute, deps, g,
         serial_comm, serial_gemm,
+        comm_cil=c_cil, gemm_cil=g_cil, local_first=True,
     )
 
 
-def _sim_ficco(
+def _steps_ficco(
     gemm: GemmShape,
     dev: GemmShape,
     machine: MachineSpec,
@@ -208,7 +288,7 @@ def _sim_ficco(
     serial_gemm: float,
     dma: bool,
     dma_into_place: bool = False,
-) -> SimResult:
+) -> ScheduleSteps:
     g = machine.group
     b = gemm.dtype_bytes
     var = schedule.variant
@@ -284,25 +364,25 @@ def _sim_ficco(
     )
     t_step = max(t_gemm_step, t_gather + t_scatter)
 
-    comm = [t_comm] * n_comm
+    comm = (t_comm,) * n_comm
     if local_first is not None:
         t_local = (
             ineff.gemm_exec(local_first, machine).time
             * ineff.gemm_cil(local_first, machine, degree=degree, dma=dma)
         )
-        compute: list[float] = [t_local] + [t_step] * n_comp
-        deps: list[int | None] = [None] + list(range(n_comm))
+        compute: tuple[float, ...] = (t_local, *((t_step,) * n_comp))
+        deps: tuple[int | None, ...] = (None, *range(n_comm))
     else:
-        compute = [t_step] * n_comp
-        deps = list(range(n_comm))
-    total, exposed = _pipeline(comm, compute, deps)
-    return SimResult(
-        schedule, total, sum(comm), sum(compute), exposed, n_comm,
-        serial_comm, serial_gemm,
+        compute = (t_step,) * n_comp
+        deps = tuple(range(n_comm))
+    return ScheduleSteps(
+        schedule, comm, compute, deps, n_comm, serial_comm, serial_gemm,
+        comm_cil=c_cil, gemm_cil=g_cil,
+        local_first=local_first is not None,
     )
 
 
-def _sim_ficco_ragged(
+def _steps_ficco_ragged(
     gemm: GemmShape,
     machine: MachineSpec,
     schedule: Schedule,
@@ -311,7 +391,7 @@ def _sim_ficco_ragged(
     serial_gemm: float,
     dma: bool,
     dma_into_place: bool,
-) -> SimResult:
+) -> ScheduleSteps:
     """Ragged FiCCO: per-step times from the shared step-time model
     (``batch.ragged_step_times`` with S == 1), scanned by the scalar
     masked pipeline.  Raises ValueError exactly where the batched
@@ -334,16 +414,17 @@ def _sim_ficco_ragged(
             f"M={gemm.m} not divisible by group {machine.group} for "
             f"ragged {schedule}"
         )
-    comm = [float(c[0]) for c in comm_v]
-    compute = [float(w[0]) for w in compute_v]
-    comm_active = [bool(a[0]) for a in c_act]
-    comp_active = [bool(a[0]) for a in w_act]
-    total, exposed, comm_busy, compute_busy = _pipeline_masked(
-        comm, compute, deps, comm_active, comp_active
-    )
-    return SimResult(
-        schedule, total, comm_busy, compute_busy, exposed, profile.steps,
+    comm = tuple(float(c[0]) for c in comm_v)
+    compute = tuple(float(w[0]) for w in compute_v)
+    comm_active = tuple(bool(a[0]) for a in c_act)
+    comp_active = tuple(bool(a[0]) for a in w_act)
+    return ScheduleSteps(
+        schedule, comm, compute, tuple(deps), profile.steps,
         serial_comm, serial_gemm,
+        comm_active=comm_active, comp_active=comp_active,
+        local_first=(
+            schedule.variant.uniformity is _su.Uniformity.HETERO
+        ),
     )
 
 

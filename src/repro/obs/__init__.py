@@ -1,0 +1,40 @@
+"""repro.obs — tracing, metrics, and schedule-decision provenance.
+
+Three layers over the engine/sweep/autotune/serve stack:
+
+* :mod:`repro.obs.trace` — near-zero-overhead span tracer exporting
+  Chrome trace-event / Perfetto JSON (``REPRO_TRACE=path`` or
+  ``trace.enable()``).
+* :mod:`repro.obs.metrics` — counter/histogram registry with JSONL
+  snapshot export (tuner tier rates, sweep shard percentiles, gate
+  agreement).
+* :mod:`repro.obs.audit` — per-decision provenance records persisted
+  beside the autotune cache, replayable offline
+  (``REPRO_AUTOTUNE_AUDIT=path`` or ``Autotuner(audit=...)``).
+* :mod:`repro.obs.timeline` — any simulated schedule rendered as a
+  per-step comm/GEMM/DMA lane trace with its inefficiency signature.
+
+This package ``__init__`` stays stdlib-only: the instrumented modules
+(``repro.core.engine``, the sweep runner, the tuner) import
+``repro.obs.trace`` at their own import time, which executes this file —
+pulling ``repro.core`` back in here would be a cycle.  ``timeline``
+(which needs the simulator) is therefore exported lazily, the same
+PEP 562 pattern ``repro.sweep.__init__`` uses to stay jax-free.
+"""
+
+from __future__ import annotations
+
+from repro.obs import audit, metrics, trace
+
+_LAZY = {"timeline"}
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        import importlib
+
+        return importlib.import_module(f"repro.obs.{name}")
+    raise AttributeError(f"module 'repro.obs' has no attribute {name!r}")
+
+
+__all__ = ["trace", "metrics", "audit", "timeline"]

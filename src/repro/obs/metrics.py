@@ -1,0 +1,242 @@
+"""Counter/histogram metrics registry with JSONL snapshot export.
+
+Replaces the lone ``Autotuner.hit_rate`` scalar with a process-wide
+registry the whole stack reports into: tuner decisions per tier, sweep
+shard durations and throughput percentiles, serve/train step counts,
+and the gate-agreement rate against the analytic argmin.  Counters are
+one attribute increment, histograms one list append — always-on cost is
+negligible next to the operations they measure (``benchmarks/bench_obs``
+gates the sweep path either way).
+
+Snapshots are JSON dictionaries; :meth:`MetricsRegistry.export_jsonl`
+appends one line per snapshot so a long-running server produces a
+tail-able metrics stream the same way ``scripts/sweep.py`` streams
+shard summaries.  ``scripts/trace.py metrics`` merges/validates the
+stream and can convert it to Chrome counter events for Perfetto.
+
+Metric key glossary (the canonical names the instrumentation uses):
+
+  ``tuner/pick.<tier>``      picks decided by cache|analytic|measured|heuristic
+  ``tuner/decisions``        total ``Autotuner.pick`` calls
+  ``tuner/pick_seconds``     per-pick wall time histogram
+  ``tuner/measure``          measured-tier sessions
+  ``sweep/shards``           shards evaluated
+  ``sweep/scenarios``        scenarios evaluated
+  ``sweep/shard_seconds``    per-shard duration histogram (p50/p95 exported)
+  ``engine/evaluate.<name>`` evaluate() calls per engine backend
+  ``gate/agree``,``gate/points``  heuristic-vs-analytic-argmin agreement
+  ``serve/tokens``,``serve/steps``,``train/steps``  launcher hot paths
+  ``overlap/resolve.<how>``  trace-time schedule resolutions
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import threading
+import time
+
+
+class Counter:
+    """Monotonic counter."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        self.value += n
+
+
+class Histogram:
+    """Exact-sample histogram with percentile export.
+
+    Samples are kept raw (the instrumented populations — shards, picks,
+    steps — are thousands, not billions); ``percentile`` uses the
+    nearest-rank method so p50/p95 are actual observed values.
+    """
+
+    __slots__ = ("values", "total")
+
+    def __init__(self):
+        self.values: list[float] = []
+        self.total = 0.0
+
+    def observe(self, v: float) -> None:
+        self.values.append(v)
+        self.total += v
+
+    @property
+    def count(self) -> int:
+        return len(self.values)
+
+    def percentile(self, q: float) -> float:
+        """Nearest-rank percentile; ``q`` in [0, 1].  0.0 when empty."""
+        if not self.values:
+            return 0.0
+        ordered = sorted(self.values)
+        rank = max(math.ceil(q * len(ordered)), 1) - 1
+        return ordered[min(rank, len(ordered) - 1)]
+
+    def to_json(self) -> dict:
+        if not self.values:
+            return {"count": 0, "sum": 0.0, "min": 0.0, "max": 0.0,
+                    "p50": 0.0, "p95": 0.0}
+        return {
+            "count": self.count,
+            "sum": self.total,
+            "min": min(self.values),
+            "max": max(self.values),
+            "p50": self.percentile(0.50),
+            "p95": self.percentile(0.95),
+        }
+
+
+class MetricsRegistry:
+    """Name -> Counter/Histogram store with JSON snapshot export."""
+
+    def __init__(self):
+        self._counters: dict[str, Counter] = {}
+        self._histograms: dict[str, Histogram] = {}
+        self._lock = threading.Lock()
+
+    def counter(self, name: str) -> Counter:
+        c = self._counters.get(name)
+        if c is None:
+            with self._lock:
+                c = self._counters.setdefault(name, Counter())
+        return c
+
+    def histogram(self, name: str) -> Histogram:
+        h = self._histograms.get(name)
+        if h is None:
+            with self._lock:
+                h = self._histograms.setdefault(name, Histogram())
+        return h
+
+    def snapshot(self) -> dict:
+        """One self-describing snapshot of every metric."""
+        return {
+            "ts": time.time(),
+            "counters": {
+                k: c.value for k, c in sorted(self._counters.items())
+            },
+            "histograms": {
+                k: h.to_json() for k, h in sorted(self._histograms.items())
+            },
+        }
+
+    def export_jsonl(self, path: str) -> dict:
+        """Append one snapshot line to ``path``; returns the snapshot."""
+        snap = self.snapshot()
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(path, "a") as f:
+            f.write(json.dumps(snap) + "\n")
+        return snap
+
+    def reset(self) -> None:
+        with self._lock:
+            self._counters.clear()
+            self._histograms.clear()
+
+
+# ---------------------------------------------------------------------------
+# The process-wide registry.
+# ---------------------------------------------------------------------------
+
+_REGISTRY = MetricsRegistry()
+
+
+def get_metrics() -> MetricsRegistry:
+    return _REGISTRY
+
+
+def reset_metrics() -> None:
+    """Clear every process-wide metric (test isolation)."""
+    _REGISTRY.reset()
+
+
+def tuner_tier_rates(registry: MetricsRegistry | None = None) -> dict:
+    """Per-tier decision fractions — the ``hit_rate`` scalar, itemized."""
+    reg = registry or _REGISTRY
+    total = reg.counter("tuner/decisions").value
+    tiers = ("cache", "analytic", "measured", "heuristic")
+    if not total:
+        return {t: 0.0 for t in tiers}
+    return {
+        t: reg.counter(f"tuner/pick.{t}").value / total for t in tiers
+    }
+
+
+def observe_gate_agreement(
+    grid, *, gate=None, tau=None, registry: MetricsRegistry | None = None
+) -> float:
+    """Heuristic-pick agreement rate against the grid's analytic argmin.
+
+    Folds ``gate/agree`` / ``gate/points`` counters into the registry
+    and returns this grid's rate — the live signal for "is the deployed
+    gate still tracking the analytic optimum" that ROADMAP item 1's
+    background re-fit keys off.  Opt-in (it costs one vectorized
+    heuristic evaluation per grid): ``scripts/sweep.py --observe-gate``
+    wires it onto the shard stream.
+    """
+    from repro.core.explorer import GridExploration  # lazy: numpy stack
+
+    ex = GridExploration.from_grid(grid, tau=tau, gate=gate)
+    agree = int(ex.exact.sum())
+    points = int(ex.exact.size)
+    reg = registry or _REGISTRY
+    reg.counter("gate/agree").inc(agree)
+    reg.counter("gate/points").inc(points)
+    return agree / points if points else 0.0
+
+
+# ---------------------------------------------------------------------------
+# Snapshot schema validation (CI fast-lane gate, scripts/trace.py).
+# ---------------------------------------------------------------------------
+
+_HIST_FIELDS = ("count", "sum", "min", "max", "p50", "p95")
+
+
+def validate_snapshot(obj) -> list[str]:
+    """Structural errors in one metrics snapshot ([] == valid)."""
+    errors: list[str] = []
+    if not isinstance(obj, dict):
+        return [f"snapshot must be an object, got {type(obj).__name__}"]
+    if not isinstance(obj.get("ts"), (int, float)):
+        errors.append("missing numeric 'ts'")
+    counters = obj.get("counters")
+    if not isinstance(counters, dict):
+        errors.append("missing 'counters' object")
+    else:
+        for k, v in counters.items():
+            if not isinstance(v, (int, float)):
+                errors.append(f"counter {k!r}: value not numeric")
+    hists = obj.get("histograms")
+    if not isinstance(hists, dict):
+        errors.append("missing 'histograms' object")
+    else:
+        for k, h in hists.items():
+            if not isinstance(h, dict):
+                errors.append(f"histogram {k!r}: not an object")
+                continue
+            for field in _HIST_FIELDS:
+                if not isinstance(h.get(field), (int, float)):
+                    errors.append(f"histogram {k!r}: no numeric {field!r}")
+    return errors
+
+
+__all__ = [
+    "Counter",
+    "Histogram",
+    "MetricsRegistry",
+    "get_metrics",
+    "reset_metrics",
+    "tuner_tier_rates",
+    "observe_gate_agreement",
+    "validate_snapshot",
+]

@@ -25,6 +25,8 @@ from repro.core.heuristics import select_schedule
 from repro.core.machine import TPU_V5E, MachineSpec, machine_for_group
 from repro.core.schedule_types import Schedule
 from repro.core.workload import GemmShape
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
 from repro.overlap.schedules import SCHEDULE_FNS, run_schedule
 
 ScheduleLike = Union[Schedule, str]
@@ -46,25 +48,35 @@ def resolve_schedule(
     particular its group-sensitive serial gate) is evaluated against the
     machine model retargeted at that group, not the model's default.
     """
-    if isinstance(schedule, Schedule):
-        return schedule
-    eff = machine or TPU_V5E
-    if group:
-        eff = machine_for_group(eff, group)
-    if schedule == "autotune":
-        gemm = GemmShape(m, n, k, dtype_bytes)
-        try:
-            from repro.autotune import get_tuner  # local: keep import lazy
+    def _resolved(how: str, sched: Schedule, sp) -> Schedule:
+        _metrics.get_metrics().counter(f"overlap/resolve.{how}").inc()
+        sp.set(how=how, schedule=sched.value)
+        return sched
 
-            return get_tuner().pick(gemm, machine, group=group).schedule
-        except Exception:
-            # Zero-cost fallback: the static decision tree.
-            return select_schedule(gemm, eff).schedule
-    if schedule != "auto":
-        return Schedule(schedule)
-    dec = select_schedule(GemmShape(m, n, k, dtype_bytes), eff)
-    # The serial guard may also fire for shapes the schedules cannot chunk.
-    return dec.schedule
+    with _trace.span(
+        "overlap/resolve", "overlap", m=m, n=n, k=k, group=group,
+    ) as sp:
+        if isinstance(schedule, Schedule):
+            return _resolved("explicit", schedule, sp)
+        eff = machine or TPU_V5E
+        if group:
+            eff = machine_for_group(eff, group)
+        if schedule == "autotune":
+            gemm = GemmShape(m, n, k, dtype_bytes)
+            try:
+                from repro.autotune import get_tuner  # keep import lazy
+
+                sched = get_tuner().pick(gemm, machine, group=group).schedule
+                return _resolved("autotune", sched, sp)
+            except Exception:
+                # Zero-cost fallback: the static decision tree.
+                sched = select_schedule(gemm, eff).schedule
+                return _resolved("autotune_fallback", sched, sp)
+        if schedule != "auto":
+            return _resolved("named", Schedule(schedule), sp)
+        dec = select_schedule(GemmShape(m, n, k, dtype_bytes), eff)
+        # The serial guard may also fire for shapes the schedules can't chunk.
+        return _resolved("auto", dec.schedule, sp)
 
 
 def _divisible(m_s: int, k: int, g: int, sched: Schedule) -> bool:

@@ -16,6 +16,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.model import Model, build_model
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
 from repro.parallel.context import overlap_context
 
 
@@ -82,28 +84,44 @@ class DecodeEngine:
         ]
         max_prompt = max(len(r.prompt) for r in reqs)
         max_new = max((r.max_new_tokens for r in reqs), default=0)
+        reg = _metrics.get_metrics()
         tok = jnp.zeros((self.batch, 1), jnp.int32)
-        for pos in range(max_prompt + max_new):
-            feed = []
-            for r in reqs:
-                if pos < len(r.prompt):
-                    feed.append(r.prompt[pos])
-                elif r.out:
-                    feed.append(r.out[-1])
-                else:
-                    feed.append(0)
-            tok = jnp.asarray(np.asarray(feed, np.int32)[:, None])
-            logits, self.cache = self.step_fn(
-                self.params, self.cache, tok, jnp.int32(pos)
-            )
-            nxt = np.asarray(jnp.argmax(logits[:, 0], -1))
-            for i, r in enumerate(reqs[: len(requests)]):
-                if pos >= len(r.prompt) - 1 and len(r.out) < r.max_new_tokens:
-                    r.out.append(int(nxt[i]))
-            if all(
-                len(r.out) >= r.max_new_tokens for r in reqs[: len(requests)]
-            ):
-                break
+        with _trace.span(
+            "serve/run", "serve",
+            n_requests=len(requests), batch=self.batch,
+            max_prompt=max_prompt, max_new=max_new,
+        ):
+            for pos in range(max_prompt + max_new):
+                feed = []
+                for r in reqs:
+                    if pos < len(r.prompt):
+                        feed.append(r.prompt[pos])
+                    elif r.out:
+                        feed.append(r.out[-1])
+                    else:
+                        feed.append(0)
+                tok = jnp.asarray(np.asarray(feed, np.int32)[:, None])
+                with _trace.span("serve/step", "serve", pos=pos) as sp:
+                    logits, self.cache = self.step_fn(
+                        self.params, self.cache, tok, jnp.int32(pos)
+                    )
+                    nxt = np.asarray(jnp.argmax(logits[:, 0], -1))
+                    emitted = 0
+                    for i, r in enumerate(reqs[: len(requests)]):
+                        if (
+                            pos >= len(r.prompt) - 1
+                            and len(r.out) < r.max_new_tokens
+                        ):
+                            r.out.append(int(nxt[i]))
+                            emitted += 1
+                    sp.set(tokens=emitted)
+                reg.counter("serve/steps").inc()
+                reg.counter("serve/tokens").inc(emitted)
+                if all(
+                    len(r.out) >= r.max_new_tokens
+                    for r in reqs[: len(requests)]
+                ):
+                    break
         for r in requests:
             r.done = True
         return requests

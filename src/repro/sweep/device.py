@@ -65,6 +65,8 @@ from repro.core.heuristics import (
     machine_threshold,
 )
 from repro.core.schedule_types import Schedule
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
 from repro.sweep.plan import plan_shards, shards_for_host
 from repro.sweep.runner import ShardSummary, SweepResult
 from repro.sweep.synth import _M_QUANTUM
@@ -338,29 +340,40 @@ def dispatch_mixed_grid(
     machines = tuple(machines)
     schedules = tuple(schedules)
     sb = _coerce(scenarios)
-    with enable_x64():
-        # Machine arrays MUST pack inside the x64 scope: outside it the
-        # int64 leaves silently truncate to int32.
-        mp = jaxgrid.machine_arrays(
-            machines, dtype=None if dtype == "float64" else dtype
-        )
-        g_max = max(m.group for m in machines)
-        if isinstance(sb, RaggedBatch):
-            out = jaxgrid.evaluate_ragged_grid_raw(
-                sb, mp, dma=dma, dma_into_place=dma_into_place,
-                schedules=schedules, g_max=g_max,
+    with _trace.span(
+        "sweepdevice/dispatch", "sweepdevice",
+        dtype=dtype, n_scenarios=len(sb), n_machines=len(machines),
+    ):
+        with enable_x64():
+            # Machine arrays MUST pack inside the x64 scope: outside it
+            # the int64 leaves silently truncate to int32.
+            mp = jaxgrid.machine_arrays(
+                machines, dtype=None if dtype == "float64" else dtype
             )
-        else:
-            out = jaxgrid.evaluate_grid_raw(
-                sb, mp, dma=dma, dma_into_place=dma_into_place,
-                schedules=schedules, g_max=g_max,
-            )
+            g_max = max(m.group for m in machines)
+            if isinstance(sb, RaggedBatch):
+                out = jaxgrid.evaluate_ragged_grid_raw(
+                    sb, mp, dma=dma, dma_into_place=dma_into_place,
+                    schedules=schedules, g_max=g_max,
+                )
+            else:
+                out = jaxgrid.evaluate_grid_raw(
+                    sb, mp, dma=dma, dma_into_place=dma_into_place,
+                    schedules=schedules, g_max=g_max,
+                )
 
     def finalize() -> GridResult:
-        return GridResult.from_machine_major(
-            out, schedules=schedules, scenarios=sb, machines=machines,
-            dma=dma,
-        )
+        # The np.asarray conversions inside from_machine_major block on
+        # the async device computation — this span is the "compute"
+        # half of the two-phase overlap.
+        with _trace.span(
+            "sweepdevice/finalize", "sweepdevice",
+            dtype=dtype, n_scenarios=len(sb),
+        ):
+            return GridResult.from_machine_major(
+                out, schedules=schedules, scenarios=sb, machines=machines,
+                dma=dma,
+            )
 
     return finalize
 
@@ -729,59 +742,76 @@ def sweep_device_stats(
         )
         g_max = max(m.group for m in machines)
 
+        reg = _metrics.get_metrics()
+
         def _dispatch(shard):
             start, stop = plan.bounds[shard]
             t0 = time.perf_counter()
-            outs = shard_fn(
-                np.uint64(start), mp_dt, mp64, thresholds,
-                n=stop - start, seed=seed,
-                steps=steps if ragged else None,
-                concentration=concentration,
-                dtype_bytes=tuple(dtype_bytes),
-                g_max=g_max, dma=dma, dma_into_place=dma_into_place,
-                collect=collect_stats, per_machine=per_machine,
-            )
+            with _trace.span(
+                "sweepdevice/dispatch", "sweepdevice",
+                shard=shard, start=start, stop=stop,
+                overlap=overlap_dispatch,
+            ):
+                outs = shard_fn(
+                    np.uint64(start), mp_dt, mp64, thresholds,
+                    n=stop - start, seed=seed,
+                    steps=steps if ragged else None,
+                    concentration=concentration,
+                    dtype_bytes=tuple(dtype_bytes),
+                    g_max=g_max, dma=dma, dma_into_place=dma_into_place,
+                    collect=collect_stats, per_machine=per_machine,
+                )
             return (shard, start, stop, t0, outs)
 
         def _complete(entry):
             shard, start, stop, t0, outs = entry
-            host = [np.asarray(o) for o in outs]  # blocks on the device
+            with _trace.span(
+                "sweepdevice/compute", "sweepdevice", shard=shard,
+            ):
+                host = [np.asarray(o) for o in outs]  # blocks on device
             secs = time.perf_counter() - t0
             S = stop - start
-            bc_ml, n_prof, sp_sum, sp_cnt = host[:4]
-            bc = bc_ml.sum(axis=0)
-            counts = {
-                sched.value: int(c)
-                for sched, c in zip(GRID_SCHEDULES, bc) if c
-            }
-            summ = ShardSummary(
-                shard=shard, start=start, stop=stop, n_scenarios=S,
-                n_points=S * M, seconds=secs,
-                scenarios_per_sec=S / secs if secs > 0 else 0.0,
-                best_counts=counts,
-                frac_overlap_profitable=float(n_prof) / (S * M),
-                mean_best_speedup=(
-                    float(sp_sum) / float(sp_cnt) if sp_cnt else 0.0
-                ),
-            )
-            if collect_stats:
-                hist, mom = host[4], host[5]
-                if per_machine:
-                    for j, fam in enumerate(families):
-                        key = _bucket(fam)
-                        hist_acc[key] += hist[j]
-                        mom_acc[key] += mom[j]
-                        pts_acc[key] += S
-                        bc_acc[key] += bc_ml[j]
-                else:
-                    key = _bucket("__all__")
-                    hist_acc[key] += hist
-                    mom_acc[key] += mom
-                    pts_acc[key] += S * M
-                    bc_acc[key] += bc
-            summaries.append(summ)
-            if on_shard is not None:
-                on_shard(summ)
+            reg.counter("sweep/shards").inc()
+            reg.counter("sweep/scenarios").inc(S)
+            reg.histogram("sweep/shard_seconds").observe(secs)
+            with _trace.span(
+                "sweepdevice/reduce", "sweepdevice",
+                shard=shard, n_scenarios=S, seconds=secs,
+            ):
+                bc_ml, n_prof, sp_sum, sp_cnt = host[:4]
+                bc = bc_ml.sum(axis=0)
+                counts = {
+                    sched.value: int(c)
+                    for sched, c in zip(GRID_SCHEDULES, bc) if c
+                }
+                summ = ShardSummary(
+                    shard=shard, start=start, stop=stop, n_scenarios=S,
+                    n_points=S * M, seconds=secs,
+                    scenarios_per_sec=S / secs if secs > 0 else 0.0,
+                    best_counts=counts,
+                    frac_overlap_profitable=float(n_prof) / (S * M),
+                    mean_best_speedup=(
+                        float(sp_sum) / float(sp_cnt) if sp_cnt else 0.0
+                    ),
+                )
+                if collect_stats:
+                    hist, mom = host[4], host[5]
+                    if per_machine:
+                        for j, fam in enumerate(families):
+                            key = _bucket(fam)
+                            hist_acc[key] += hist[j]
+                            mom_acc[key] += mom[j]
+                            pts_acc[key] += S
+                            bc_acc[key] += bc_ml[j]
+                    else:
+                        key = _bucket("__all__")
+                        hist_acc[key] += hist
+                        mom_acc[key] += mom
+                        pts_acc[key] += S * M
+                        bc_acc[key] += bc
+                summaries.append(summ)
+                if on_shard is not None:
+                    on_shard(summ)
 
         pending = None
         for shard in owned:

@@ -41,6 +41,8 @@ from repro.core.engine import (
     is_ragged,
 )
 from repro.core.schedule_types import Schedule
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
 from repro.sweep.plan import ShardPlan, plan_shards, shards_for_host
 
 
@@ -480,53 +482,76 @@ def sweep_grid(
     summaries: list[ShardSummary] = []
     parts: list[GridResult] = []
 
+    reg = _metrics.get_metrics()
+
     def _complete(entry):
         shard, start, stop, t0, finalize = entry
-        grid = finalize()
+        # Under two-phase dispatch this span is where the dispatched
+        # work blocks — in a trace, shard k+1's sweep/dispatch span
+        # appears *before* shard k's sweep/compute closes, making the
+        # double-buffered overlap directly visible in Perfetto.
+        with _trace.span("sweep/compute", "sweep", shard=shard):
+            grid = finalize()
         dt = time.perf_counter() - t0
         summ = summarize_shard(grid, shard, start, stop, dt)
-        if on_shard_grid is not None:
-            on_shard_grid(grid, summ)
-        if mode == "gather":
-            parts.append(grid)
-        summaries.append(summ)
-        if on_shard is not None:
-            on_shard(summ)
-
-    pending = None
-    for shard in owned:
-        start, stop = plan.bounds[shard]
-        if start == stop:  # degenerate empty shard (more shards than S)
-            if pending is not None:  # keep summaries in shard order
-                _complete(pending)
-                pending = None
-            summ = ShardSummary(
-                shard, start, stop, 0, 0, 0.0, 0.0, {}, 0.0, 0.0
-            )
+        reg.counter("sweep/shards").inc()
+        reg.counter("sweep/scenarios").inc(summ.n_scenarios)
+        reg.histogram("sweep/shard_seconds").observe(dt)
+        with _trace.span(
+            "sweep/reduce", "sweep", shard=shard,
+            n_scenarios=summ.n_scenarios, seconds=dt,
+        ):
+            if on_shard_grid is not None:
+                on_shard_grid(grid, summ)
+            if mode == "gather":
+                parts.append(grid)
             summaries.append(summ)
             if on_shard is not None:
                 on_shard(summ)
-            continue
-        piece = _slice_batch(sb, start, stop)
-        t0 = time.perf_counter()
-        if two_phase:
-            finalize = dispatch_shard(
-                piece, machines, dma=dma, dma_into_place=dma_into_place,
-                schedules=schedules,
-            )
-        else:
-            grid_now = eval_shard(piece)
-            finalize = lambda g=grid_now: g  # noqa: E731
-        entry = (shard, start, stop, t0, finalize)
+
+    pending = None
+    with _trace.span(
+        "sweep/run", "sweep", mode=mode, n_owned=len(owned),
+        n_scenarios=len(sb), two_phase=two_phase,
+    ):
+        for shard in owned:
+            start, stop = plan.bounds[shard]
+            if start == stop:  # degenerate empty shard (more shards than S)
+                if pending is not None:  # keep summaries in shard order
+                    _complete(pending)
+                    pending = None
+                summ = ShardSummary(
+                    shard, start, stop, 0, 0, 0.0, 0.0, {}, 0.0, 0.0
+                )
+                summaries.append(summ)
+                if on_shard is not None:
+                    on_shard(summ)
+                continue
+            piece = _slice_batch(sb, start, stop)
+            t0 = time.perf_counter()
+            with _trace.span(
+                "sweep/dispatch", "sweep", shard=shard,
+                start=start, stop=stop, two_phase=two_phase,
+            ):
+                if two_phase:
+                    finalize = dispatch_shard(
+                        piece, machines, dma=dma,
+                        dma_into_place=dma_into_place,
+                        schedules=schedules,
+                    )
+                else:
+                    grid_now = eval_shard(piece)
+                    finalize = lambda g=grid_now: g  # noqa: E731
+            entry = (shard, start, stop, t0, finalize)
+            if pending is not None:
+                _complete(pending)
+                pending = None
+            if two_phase:
+                pending = entry  # shard k+1 dispatches before k finalizes
+            else:
+                _complete(entry)
         if pending is not None:
             _complete(pending)
-            pending = None
-        if two_phase:
-            pending = entry  # shard k+1 dispatches before k finalizes
-        else:
-            _complete(entry)
-    if pending is not None:
-        _complete(pending)
     grid = None
     if mode == "gather":
         if parts:

@@ -12,6 +12,8 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.data.pipeline import make_pipeline
 from repro.models.model import Model, build_model
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
 from repro.parallel.context import overlap_context
 from repro.train import optimizer as opt
 
@@ -117,9 +119,12 @@ def train(
     data = make_pipeline(cfg, shape, seed=seed)
 
     history = []
+    reg = _metrics.get_metrics()
     t0 = time.time()
     for step, batch in zip(range(steps), data):
-        state, metrics = step_fn(state, batch)
+        with _trace.span("train/step", "train", step=step):
+            state, metrics = step_fn(state, batch)
+        reg.counter("train/steps").inc()
         if step % log_every == 0 or step == steps - 1:
             m = {k: float(v) for k, v in metrics.items()}
             m["step"] = step

@@ -31,6 +31,9 @@ def _isolated_autotune_cache(tmp_path, monkeypatch):
     monkeypatch.setenv(
         "REPRO_AUTOTUNE_CACHE_DIR", str(tmp_path / "autotune_cache")
     )
+    # Observability stays off unless a test turns it on explicitly.
+    monkeypatch.delenv("REPRO_TRACE", raising=False)
+    monkeypatch.delenv("REPRO_AUTOTUNE_AUDIT", raising=False)
 
     def _reset():
         tuner_mod = sys.modules.get("repro.autotune.tuner")
@@ -43,6 +46,17 @@ def _isolated_autotune_cache(tmp_path, monkeypatch):
         if gate_mod is not None:
             gate_mod.set_default_gate(None)
             gate_mod.clear_machine_gates()
+        # Process-wide observability state (tracer / metric registry /
+        # audit log) would otherwise leak spans and counts across tests.
+        trace_mod = sys.modules.get("repro.obs.trace")
+        if trace_mod is not None:
+            trace_mod._TRACER = None
+        metrics_mod = sys.modules.get("repro.obs.metrics")
+        if metrics_mod is not None:
+            metrics_mod.reset_metrics()
+        audit_mod = sys.modules.get("repro.obs.audit")
+        if audit_mod is not None:
+            audit_mod.disable_audit()
 
     _reset()
     yield

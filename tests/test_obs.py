@@ -1,0 +1,444 @@
+"""Observability stack: tracer, metrics, timelines, decision provenance.
+
+Three contracts under test:
+
+* The tracer/metrics layer is schema-stable (exports load in Perfetto,
+  snapshots validate) and strictly no-op when disabled.
+* The schedule timeline is *exactly* what ``simulate()`` integrates —
+  lane sums equal the SimResult busy times, and the inefficiency
+  signature's splits close algebraically.
+* Every :meth:`Autotuner.pick` tier (cache / analytic / measured /
+  heuristic fallback) records provenance matching the tier that actually
+  fired, and a recorded decision log replays offline to the same
+  choices.
+"""
+
+import json
+import math
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.batch import evaluate_grid
+from repro.core.machine import MI300X, TPU_V5E, machine_for_group
+from repro.core.schedule_types import STUDIED, Schedule
+from repro.core.simulator import schedule_steps, simulate
+from repro.core.workload import GemmShape, StepProfile
+from repro.obs import audit as obs_audit
+from repro.obs import metrics as obs_metrics
+from repro.obs import timeline as obs_timeline
+from repro.obs import trace as obs_trace
+
+GEMM = GemmShape(16384, 16384, 32768, 2)
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _cli(*argv):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    return subprocess.run(
+        [sys.executable, os.path.join(REPO, "scripts", "trace.py"), *argv],
+        capture_output=True, text=True, env=env, cwd=REPO,
+    )
+
+
+class TestTracer:
+    def test_disabled_is_shared_noop(self):
+        assert not obs_trace.enabled()
+        sp = obs_trace.span("x", "t")
+        assert sp is obs_trace.NULL_SPAN
+        with sp as s:
+            s.set(anything="goes")  # must not raise, must not record
+        assert obs_trace.get_tracer() is None
+
+    def test_span_records_complete_event(self):
+        tr = obs_trace.enable()
+        with obs_trace.span("work", "cat", foo=1) as sp:
+            sp.set(bar=2)
+        obs_trace.disable()
+        (ev,) = tr.events
+        assert ev["name"] == "work" and ev["ph"] == "X"
+        assert ev["dur"] >= 0
+        assert ev["args"] == {"foo": 1, "bar": 2}
+        assert obs_trace.validate_trace(tr.to_json()) == []
+
+    def test_export_roundtrip(self, tmp_path):
+        path = str(tmp_path / "t.json")
+        tr = obs_trace.enable(path)
+        with obs_trace.span("a"):
+            pass
+        obs_trace.instant("mark", note="here")
+        obs_trace.counter("rate", 3.5)
+        assert obs_trace.disable() == path
+        with open(path) as f:
+            obj = json.load(f)
+        assert obs_trace.validate_trace(obj) == []
+        assert {e["ph"] for e in obj["traceEvents"]} == {"X", "i", "C"}
+
+    def test_validate_catches_violations(self):
+        bad = {"traceEvents": [
+            {"ph": "X", "ts": 0, "pid": 1, "tid": 0},        # no name
+            {"name": "x", "ph": "X", "ts": 0, "pid": 1, "tid": 0},  # no dur
+            {"name": "y", "ph": "i", "ts": "zero", "pid": 1, "tid": 0},
+        ]}
+        errors = obs_trace.validate_trace(bad)
+        assert len(errors) >= 3
+        joined = "\n".join(errors)
+        assert "name" in joined and "dur" in joined and "ts" in joined
+        assert obs_trace.validate_trace([]) != []
+        assert obs_trace.validate_trace({}) != []
+
+
+class TestMetrics:
+    def test_counter_histogram_snapshot(self):
+        reg = obs_metrics.MetricsRegistry()
+        reg.counter("a").inc()
+        reg.counter("a").inc(4)
+        for v in (1.0, 2.0, 3.0, 10.0):
+            reg.histogram("h").observe(v)
+        snap = reg.snapshot()
+        assert snap["counters"]["a"] == 5
+        h = snap["histograms"]["h"]
+        assert h["count"] == 4 and h["max"] == 10.0
+        assert h["p50"] == 2.0
+        assert obs_metrics.validate_snapshot(snap) == []
+
+    def test_export_jsonl_appends(self, tmp_path):
+        path = str(tmp_path / "m.jsonl")
+        reg = obs_metrics.MetricsRegistry()
+        reg.counter("c").inc()
+        reg.export_jsonl(path)
+        reg.counter("c").inc()
+        reg.export_jsonl(path)
+        with open(path) as f:
+            lines = [json.loads(ln) for ln in f]
+        assert [ln["counters"]["c"] for ln in lines] == [1, 2]
+        for ln in lines:
+            assert obs_metrics.validate_snapshot(ln) == []
+
+    def test_validate_snapshot_catches_violations(self):
+        assert obs_metrics.validate_snapshot([]) != []
+        assert obs_metrics.validate_snapshot({"counters": {}}) != []
+        bad = {"ts": 0.0, "counters": {"x": "NaN-ish"}, "histograms": {}}
+        assert obs_metrics.validate_snapshot(bad) != []
+
+    def test_gate_agreement_rate(self):
+        grid = evaluate_grid(
+            [GemmShape(65536, 8192, 8192), GemmShape(512, 512, 512)],
+            (MI300X,),
+        )
+        reg = obs_metrics.MetricsRegistry()
+        rate = obs_metrics.observe_gate_agreement(grid, registry=reg)
+        assert 0.0 <= rate <= 1.0
+        snap = reg.snapshot()
+        assert snap["counters"]["gate/points"] == 2
+        assert snap["counters"]["gate/agree"] == round(rate * 2)
+
+
+class TestTimeline:
+    @pytest.mark.parametrize("schedule", list(STUDIED))
+    def test_lanes_integrate_to_simulate(self, schedule):
+        steps = schedule_steps(GEMM, TPU_V5E, schedule, dma=True)
+        res = simulate(GEMM, TPU_V5E, schedule, dma=True)
+        lanes = obs_timeline.lane_intervals(steps)
+        assert math.isclose(
+            sum(d for _, d in lanes["comm"]), res.comm_busy, rel_tol=1e-12
+        )
+        assert math.isclose(
+            sum(d for _, d in lanes["compute"]), res.compute_busy,
+            rel_tol=1e-12,
+        )
+        assert math.isclose(
+            sum(d for _, d in lanes["exposed"]) + 0.0, res.exposed_comm,
+            rel_tol=1e-9, abs_tol=1e-15,
+        )
+
+    def test_signature_splits_close(self):
+        steps = schedule_steps(
+            GEMM, TPU_V5E, Schedule.UNIFORM_FUSED_1D, dma=True
+        )
+        sig = obs_timeline.inefficiency_signature(steps)
+        res = steps.run()
+        # contention + decomposition = total comm overhead over serial
+        assert math.isclose(
+            sig["comm_contention_s"] + sig["comm_decomposition_s"],
+            res.comm_busy - res.serial_comm, rel_tol=1e-12, abs_tol=1e-15,
+        )
+        assert math.isclose(
+            sig["gemm_contention_s"] + sig["gemm_decomposition_s"],
+            res.compute_busy - res.serial_gemm, rel_tol=1e-12,
+            abs_tol=1e-15,
+        )
+        assert sig["speedup"] == res.speedup
+        assert sig["exposure_s"] == res.exposed_comm
+
+    def test_ragged_signature_omits_cil_split(self):
+        profile = StepProfile.from_weights((0.5, 0.3, 0.1, 0.1))
+        steps = schedule_steps(
+            GEMM, TPU_V5E, Schedule.HETERO_FUSED_1D, dma=True,
+            profile=profile,
+        )
+        sig = obs_timeline.inefficiency_signature(steps)
+        assert "comm_contention_s" not in sig
+        assert sig["total_s"] == steps.run().total
+
+    def test_schedule_timeline_exports_valid_trace(self):
+        tr, sig = obs_timeline.schedule_timeline(
+            GEMM, TPU_V5E, Schedule.UNIFORM_FUSED_1D
+        )
+        obj = tr.to_json()
+        assert obs_trace.validate_trace(obj) == []
+        names = {e["name"] for e in obj["traceEvents"]}
+        assert {"a2a_chunk", "gemm_step", "inefficiency_signature"} <= names
+        assert sig["schedule"] == "uniform-fused-1d"
+
+    def test_grid_timeline_defaults_to_best(self):
+        grid = evaluate_grid([GEMM], (TPU_V5E,))
+        tr, sig = obs_timeline.grid_timeline(grid, 0)
+        best = grid.schedules[int(grid.best_idx()[0, 0])]
+        assert sig["schedule"] == best.value
+        assert obs_trace.validate_trace(tr.to_json()) == []
+
+
+@pytest.mark.autotune
+class TestTunerProvenance:
+    """One test per tier: the recorded provenance must match the tier
+    that actually fired."""
+
+    def _tuner(self, tmp_path, **kw):
+        from repro.autotune import Autotuner
+
+        log = obs_audit.AuditLog(str(tmp_path / "decisions.jsonl"))
+        return Autotuner(backend="numpy", audit=log, **kw), log
+
+    def _records(self, log):
+        return obs_audit.read_audit(log.path)
+
+    def test_analytic_tier(self, tmp_path):
+        t, log = self._tuner(tmp_path)
+        tr = obs_trace.enable()
+        dec = t.pick(GEMM, TPU_V5E, group=8)
+        obs_trace.disable()
+        assert dec.source == "analytic"
+        assert dec.key and dec.shortlist
+        (rec,) = self._records(log)
+        assert rec["source"] == "analytic"
+        assert rec["schedule"] == dec.schedule.value
+        assert rec["key"] == dec.key
+        spans = [e for e in tr.events if e["name"] == "tuner/pick"]
+        assert spans and spans[0]["args"]["tier"] == "analytic"
+        assert spans[0]["args"]["cache"] == "miss"
+        rates = obs_metrics.tuner_tier_rates()
+        assert rates["analytic"] == 1.0
+        assert rates.get("cache", 0.0) == 0.0
+
+    def test_cache_tier(self, tmp_path):
+        t, log = self._tuner(tmp_path)
+        first = t.pick(GEMM, TPU_V5E, group=8)
+        tr = obs_trace.enable()
+        dec = t.pick(GEMM, TPU_V5E, group=8)
+        obs_trace.disable()
+        assert dec.source == "cache"
+        assert dec.schedule is first.schedule
+        recs = self._records(log)
+        assert [r["source"] for r in recs] == ["analytic", "cache"]
+        spans = [e for e in tr.events if e["name"] == "tuner/pick"]
+        assert spans[0]["args"]["cache"] == "hit"
+        rates = obs_metrics.tuner_tier_rates()
+        assert rates["analytic"] == 0.5 and rates["cache"] == 0.5
+
+    def test_measured_tier(self, tmp_path):
+        import jax
+        import jax.numpy as jnp
+
+        mesh = jax.make_mesh((1,), ("tp",))
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((64, 32)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((32, 16)), jnp.float32)
+        t, log = self._tuner(tmp_path)
+        dec = t.measure(
+            x, w, mesh=mesh, axis_name="tp", machine=TPU_V5E,
+            schedules=[Schedule.SERIAL], iters=1,
+        )
+        assert dec.source == "measured"
+        (rec,) = self._records(log)
+        assert rec["kind"] == "measure" and rec["source"] == "measured"
+        assert rec["measured_total_s"] > 0
+        assert rec["schedule"] == dec.schedule.value
+
+    def test_heuristic_tier_malformed_gate(self, tmp_path, monkeypatch):
+        """A broken analytic backend plus a malformed learned gate must
+        degrade to the scalar-gated tree — recorded as such."""
+
+        class BrokenGate:
+            def __call__(self, *a, **k):
+                raise RuntimeError("malformed artifact")
+
+        t, log = self._tuner(tmp_path, gate=BrokenGate())
+        monkeypatch.setattr(
+            type(t), "_shortlist",
+            lambda *a, **k: (_ for _ in ()).throw(RuntimeError("backend")),
+        )
+        dec = t.pick(GEMM, TPU_V5E, group=8)
+        assert dec.source == "heuristic"
+        assert dec.gate is not None and dec.gate["kind"] is None
+        (rec,) = self._records(log)
+        assert rec["source"] == "heuristic"
+        assert rec["gate"]["kind"] is None
+        # heuristic decisions are never persisted
+        assert t.cache.get(dec.key) is None
+
+
+@pytest.mark.autotune
+class TestAuditReplay:
+    def test_replay_reproduces_every_pick(self, tmp_path):
+        from repro.autotune import Autotuner
+
+        log = obs_audit.AuditLog(str(tmp_path / "decisions.jsonl"))
+        t = Autotuner(backend="numpy", audit=log)
+        t.pick(GEMM, TPU_V5E, group=8)
+        t.pick(GemmShape(512, 512, 512, 2), MI300X)
+        t.pick(GEMM, TPU_V5E, group=8)  # cache hit
+        records = obs_audit.read_audit(log.path)
+        assert obs_audit.validate_audit(records) == []
+        res = obs_audit.replay(records)
+        assert res.ok
+        assert res.replayed == 3 and res.matched == 3
+        assert res.mismatches == []
+
+    def test_replay_flags_tampered_log(self, tmp_path):
+        from repro.autotune import Autotuner
+
+        log = obs_audit.AuditLog(str(tmp_path / "decisions.jsonl"))
+        Autotuner(backend="numpy", audit=log).pick(GEMM, TPU_V5E, group=8)
+        records = obs_audit.read_audit(log.path)
+        wrong = (
+            Schedule.SERIAL.value
+            if records[0]["schedule"] != Schedule.SERIAL.value
+            else Schedule.UNIFORM_FUSED_1D.value
+        )
+        records[0]["schedule"] = wrong
+        res = obs_audit.replay(records)
+        assert not res.ok and res.mismatches
+
+    def test_read_audit_raises_on_malformed(self, tmp_path):
+        path = str(tmp_path / "bad.jsonl")
+        with open(path, "w") as f:
+            f.write('{"kind": "pick"}\n{oops\n')
+        with pytest.raises(ValueError):
+            obs_audit.read_audit(path)
+
+
+class TestSweepInstrumentation:
+    def test_sweep_grid_emits_spans_and_counters(self):
+        from repro.sweep import sweep_grid, synthetic_batch
+
+        sb = synthetic_batch(16, seed=0)
+        machines = (TPU_V5E,)
+        tr = obs_trace.enable()
+        res = sweep_grid(sb, machines, backend="numpy", num_shards=3)
+        obs_trace.disable()
+        names = [e["name"] for e in tr.events]
+        assert names.count("sweep/dispatch") == 3
+        assert names.count("sweep/compute") == 3
+        assert names.count("sweep/reduce") == 3
+        assert names.count("sweep/run") == 1
+        snap = obs_metrics.get_metrics().snapshot()
+        assert snap["counters"]["sweep/shards"] == 3
+        assert snap["counters"]["sweep/scenarios"] == 16
+        assert snap["histograms"]["sweep/shard_seconds"]["count"] == 3
+        assert len(res.summaries) == 3
+
+    def test_merge_sweep_host_throughput_skew(self):
+        sys.path.insert(0, os.path.join(REPO, "scripts"))
+        try:
+            from merge_sweep import merge_streams
+        finally:
+            sys.path.pop(0)
+        from repro.sweep import ShardSummary
+
+        def host(idx, shards, wall, n):
+            return (
+                [
+                    ShardSummary(s, s * 8, s * 8 + 8, 8, 8, 0.1, 80.0,
+                                 {}, 0.5, 1.2)
+                    for s in shards
+                ],
+                [{
+                    "host_index": idx, "wall_seconds": wall,
+                    "n_scenarios": n, "owned_shards": list(shards),
+                    "plan_shards": 4,
+                }],
+            )
+
+        merged = merge_streams([host(0, (0, 1), 2.0, 16),
+                                host(1, (2, 3), 8.0, 16)])
+        assert merged["complete"]
+        assert merged["host_throughput"] == {"0": 8.0, "1": 2.0}
+        assert merged["host_throughput_skew"] == 4.0
+        solo = merge_streams([host(0, (0, 1, 2, 3), 2.0, 32)])
+        assert solo["host_throughput_skew"] is None
+
+
+class TestCLI:
+    def test_timeline_subcommand(self, tmp_path):
+        out = str(tmp_path / "tl.json")
+        r = _cli(
+            "timeline", "--scenario", "g1", "--schedule",
+            "uniform-fused-1d", "--out", out,
+        )
+        assert r.returncode == 0, r.stderr
+        with open(out) as f:
+            obj = json.load(f)
+        assert obs_trace.validate_trace(obj) == []
+        assert any(
+            e["name"] == "inefficiency_signature"
+            for e in obj["traceEvents"]
+        )
+        r2 = _cli("validate", out)
+        assert r2.returncode == 0, r2.stderr
+
+    def test_validate_rejects_garbage(self, tmp_path):
+        bad = str(tmp_path / "bad.json")
+        with open(bad, "w") as f:
+            json.dump({"traceEvents": [{"ph": "X"}]}, f)
+        assert _cli("validate", bad).returncode == 1
+
+    def test_metrics_subcommand(self, tmp_path):
+        path = str(tmp_path / "m.jsonl")
+        reg = obs_metrics.MetricsRegistry()
+        reg.counter("tuner/decisions").inc(4)
+        reg.counter("tuner/pick.cache").inc(3)
+        reg.counter("tuner/pick.analytic").inc()
+        reg.export_jsonl(path)
+        r = _cli("metrics", path)
+        assert r.returncode == 0, r.stderr
+        assert "tier rates" in r.stdout
+        assert "cache=75.00%" in r.stdout
+
+
+class TestEnvHooks:
+    @pytest.mark.slow
+    def test_repro_trace_env_exports_at_exit(self, tmp_path):
+        path = str(tmp_path / "env.trace.json")
+        env = dict(
+            os.environ,
+            PYTHONPATH=os.path.join(REPO, "src"),
+            REPRO_TRACE=path,
+        )
+        code = (
+            "from repro.core.simulator import simulate\n"
+            "from repro.obs import trace\n"
+            "assert trace.enabled()\n"
+            "with trace.span('x'):\n"
+            "    pass\n"
+        )
+        r = subprocess.run(
+            [sys.executable, "-c", code],
+            capture_output=True, text=True, env=env,
+        )
+        assert r.returncode == 0, r.stderr
+        with open(path) as f:
+            assert obs_trace.validate_trace(json.load(f)) == []
