@@ -1,0 +1,214 @@
+"""Online-adaptation serving tier: sustained decision throughput + lag.
+
+Drives :class:`repro.serve.adapt.AdaptiveTier` with the seeded
+drifting-skew request stream (``repro.sweep.synth``) and reports the
+numbers ROADMAP item 1 promises:
+
+  serve/decisions_per_s   — us per *sustained* adaptive decision
+                            (GATED: joins THROUGHPUT_KEYS).  Sustained
+                            = post-transient picks of each drift phase,
+                            i.e. after the phase's working set entered
+                            the bounded memory cache, while the
+                            background re-fit thread keeps retraining
+                            the gate underneath.
+  serve/static_warm       — the same timed windows through a
+                            pre-warmed tier with no re-fit thread: the
+                            pure memory-hit floor the adaptive path is
+                            held within 10% of.
+  serve/adapt_overhead_pct— adaptive vs static, as a percentage.
+  serve/adaptation_lag    — mean picks after a drift step until the
+                            deployed gate's agreement on a *held-out*
+                            new-phase sample reaches within 0.05 of
+                            the level it eventually converges to for
+                            that phase (``AdaptiveTier.agreement_probe``
+                            trajectory; 0 == the old gate was already
+                            there, i.e. nothing needed restoring).
+  serve/explore_budget    — measured-tier audit: sessions granted vs
+                            the token-bucket bound (burst + rate * t).
+
+One-off costs (the machine fit's jit compile, numpy calibration
+caches) are paid in an untimed warm-up segment, mirroring how a
+serving process amortizes them over its lifetime.  Everything is
+seeded and the persistent layer lives in a tempdir, so runs are
+comparable and leave no state behind.
+"""
+
+import tempfile
+import time
+
+from benchmarks.common import row
+
+_DRIFT = 3000          # requests per drift phase
+_PHASES = 3
+_N = _DRIFT * _PHASES
+_TRANSIENT = 1000      # per-phase picks excluded from "sustained"
+_PROBE = 256           # held-out sample size for agreement probes
+_LAG_CHUNK = 64        # lag probe: picks between inline re-fits
+_LAG_WINDOW = 1024     # post-drift picks the lag probe traces
+_EXPLORE_RATE = 2.0    # token-bucket refill (sessions/s) for the audit
+_EXPLORE_BURST = 4.0
+
+
+def _make_tier(path, *, measure=False, refit_s=0.2, buffer_size=2048,
+               leaves=8):
+    from repro.autotune import Autotuner, AutotuneCache
+    from repro.core.machine import TPU_V5E
+    from repro.serve.adapt import (
+        AdaptConfig, AdaptiveTier, simulated_measure_fn,
+    )
+
+    return AdaptiveTier(
+        Autotuner(
+            cache=AutotuneCache(path=path),
+            backend="numpy",
+            persist="defer",
+        ),
+        machine=TPU_V5E,
+        config=AdaptConfig(
+            refit_interval_s=refit_s,
+            buffer_size=buffer_size,
+            explore_rate=_EXPLORE_RATE,
+            explore_burst=_EXPLORE_BURST,
+            fit_min_records=2,   # let the warm-up compile the fit path
+            fit_steps=60,
+            gate_max_leaves=leaves,
+        ),
+        measure_fn=(
+            simulated_measure_fn(TPU_V5E, seed=0) if measure else None
+        ),
+    )
+
+
+def _timed_pass(tier, reqs, timed_idx):
+    """Process every request; per-pick time only the sustained window."""
+    total = 0.0
+    for i, r in enumerate(reqs):
+        if i in timed_idx:
+            t0 = time.perf_counter()
+            tier.pick(r.gemm, profile=r.profile)
+            total += time.perf_counter() - t0
+        else:
+            tier.pick(r.gemm, profile=r.profile)
+    return total
+
+
+def _adaptation_lag(reqs, path):
+    """Mean post-drift picks until the deployed gate reaches its
+    eventual (converged) agreement level on a held-out new-phase
+    sample.
+
+    The probe traces the agreement trajectory a(t): the old gate's
+    score right at the drift step (t=0), then after every 64-pick
+    chunk + inline re-fit; lag is the first t within 0.05 of the
+    trajectory's final value.  Converged-relative, because phases
+    differ in how separable their argmin structure is — "back to the
+    previous phase's score" is unreachable when the new phase's
+    ceiling is lower.  A deliberately small gate (2 leaves) keeps the
+    re-fit's work visible: it can only represent the current phase.
+    """
+    tier = _make_tier(path, buffer_size=512, leaves=2)
+    i = 0
+    lags = []
+    restores = []
+
+    def feed(n):
+        nonlocal i
+        for r in reqs[i:i + n]:
+            tier.pick(r.gemm, profile=r.profile)
+        i = min(i + n, len(reqs))
+
+    def sample(start):
+        return [
+            (r.gemm, r.profile) for r in reqs[start:start + _PROBE]
+        ]
+
+    for phase in range(_PHASES):
+        end = (phase + 1) * _DRIFT
+        while i < end:
+            feed(min(_PROBE, end - i))
+            tier.refit_now()
+        if end >= len(reqs):
+            break
+        held_out = sample(end)
+        traj = [(0, tier.agreement_probe(held_out) or 0.0)]
+        since = 0
+        while since < _LAG_WINDOW:
+            feed(_LAG_CHUNK)
+            since += _LAG_CHUNK
+            tier.refit_now()
+            traj.append((since, tier.agreement_probe(held_out) or 0.0))
+        converged = traj[-1][1]
+        lags.append(
+            next(t for t, a in traj if a >= converged - 0.05)
+        )
+        restores.append(converged - traj[0][1])
+    mean = lambda xs: (sum(xs) / len(xs)) if xs else 0.0
+    return mean(lags), mean(restores)
+
+
+def run() -> list[str]:
+    from repro.sweep.synth import drifting_request_stream
+
+    reqs = list(
+        drifting_request_stream(_N, seed=0, drift_every=_DRIFT)
+    )
+    timed_idx = {
+        i for i in range(_N) if i % _DRIFT >= _TRANSIENT
+    }
+    n_timed = len(timed_idx)
+
+    with tempfile.TemporaryDirectory() as d:
+        # Static floor: warm every phase's working set first, then time
+        # pure memory hits (no re-fit thread, nothing expires mid-run).
+        static = _make_tier(f"{d}/static.json")
+        for r in reqs:
+            static.pick(r.gemm, profile=r.profile)
+        t_static = _timed_pass(static, reqs, timed_idx)
+
+        # Adaptive: background re-fit thread live + budgeted measured
+        # tier, same timed windows.  Warm-up pays the one-off costs
+        # (jit compile of fit_machine, calibration caches) untimed.
+        adaptive = _make_tier(f"{d}/adapt.json", measure=True)
+        t_build = time.perf_counter()
+        for r in reqs[:_TRANSIENT]:
+            adaptive.pick(r.gemm, profile=r.profile)
+        adaptive.refit_now()
+        adaptive.refit_now()
+        with adaptive:
+            t_adapt = _timed_pass(adaptive, reqs, timed_idx)
+        # The token bucket fills from tier construction, so the budget
+        # the audit holds `granted` to spans the tier's whole lifetime
+        # (warm-up included), not just the timed windows.
+        lifetime = time.perf_counter() - t_build
+        pol = adaptive.policy
+        budget_bound = _EXPLORE_BURST + _EXPLORE_RATE * lifetime
+        stats = adaptive.stats()
+
+        # The lag probe gets its own stream draw: a seed whose phases
+        # exercise the gate's capacity limit (seed 0's working set is
+        # separable enough that every phase scores 1.0 and there is
+        # nothing to restore).
+        lag_reqs = list(
+            drifting_request_stream(_N, seed=1, drift_every=_DRIFT)
+        )
+        lag, restore = _adaptation_lag(lag_reqs, f"{d}/lag.json")
+
+    overhead = 100.0 * (t_adapt / t_static - 1.0)
+    return [
+        row("serve/decisions_per_s", 1e6 * t_adapt / n_timed,
+            f"{n_timed / t_adapt:.0f} sustained decisions/s, re-fit "
+            f"thread live (gate v{stats['gate_version']}, "
+            f"agreement {stats['last_agreement']})"),
+        row("serve/static_warm", 1e6 * t_static / n_timed,
+            f"{n_timed / t_static:.0f} decisions/s, pure memory hits"),
+        row("serve/adapt_overhead_pct", 0.0,
+            f"{overhead:.1f}% over static warm cache (criterion <10%)"),
+        row("serve/adaptation_lag", lag,
+            f"{lag:.0f} picks to re-converge on held-out post-drift "
+            f"traffic (mean agreement restored {restore:+.2f})"),
+        row("serve/explore_budget", 0.0,
+            f"{pol.granted} measured sessions of <= "
+            f"{budget_bound:.1f} budget ({pol.ambiguous} ambiguous, "
+            f"{pol.denied} denied), "
+            f"respected={pol.granted <= budget_bound}"),
+    ]

@@ -12,6 +12,7 @@ Prints ``name,us_per_call,derived`` CSV.  Figure mapping:
   sharded sweep subsystem         -> bench_sweep_shard
   device-resident mixed sweep     -> bench_sweep_device (--only sweepdevice)
   learned gate + calibration      -> bench_learn (--only learn)
+  online-adaptation serving tier  -> bench_serve (--only serve)
 
 ``--json [PATH]`` additionally writes a machine-readable name ->
 us_per_call map (default ``BENCH_sweep.json``) so the perf trajectory is
@@ -46,6 +47,7 @@ THROUGHPUT_KEYS = (
     "sweepdevice/ragged_stats",
     "learn/features",
     "learn/train",
+    "serve/decisions_per_s",
 )
 # Keys whose value is an accuracy percentage (higher is better); the
 # guard fails if one drops more than ACCURACY_SLACK_PCT points below
@@ -69,6 +71,7 @@ ONLY_ALIASES = {
     "learn": "bench_learn",
     "sweepdevice": "bench_sweep_device",
     "obs": "bench_obs",
+    "serve": "bench_serve",
 }
 
 
@@ -141,6 +144,7 @@ def main() -> None:
         bench_proportions,
         bench_ragged,
         bench_schedules,
+        bench_serve,
         bench_shard_overlap,
         bench_sweep,
         bench_sweep_device,
@@ -152,7 +156,7 @@ def main() -> None:
         bench_schedules, bench_shard_overlap, bench_comparison,
         bench_heuristic, bench_cpu_overlap, bench_arch_schedules,
         bench_sweep, bench_autotune, bench_ragged, bench_sweep_shard,
-        bench_sweep_device, bench_learn, bench_obs,
+        bench_sweep_device, bench_learn, bench_obs, bench_serve,
     ]
 
     ap = argparse.ArgumentParser(description=__doc__)

@@ -40,14 +40,31 @@ wipes it.
 Writes are atomic (tempfile + ``os.replace``) and loads are tolerant: a
 corrupt or version-mismatched file is treated as empty, never an error —
 the cache is an accelerator, not a source of truth.
+
+Concurrency + hot-path persistence:
+
+* Every mutation and ``save()`` holds a per-instance re-entrant lock,
+  so a background re-fit thread writing artifacts can never race a
+  serving thread's ``put`` into a lost entry (``save`` snapshots,
+  merges and swaps ``entries`` under the same lock the writers take).
+* ``put(..., persist="defer")`` marks the store dirty instead of
+  rewriting the whole JSON file — the eager ``persist=True`` path is
+  O(store) disk I/O *per decision*, which is exactly what the serving
+  hot path must not pay.  Deferred writes flush on ``flush()``, and
+  every dirty cache still alive at interpreter exit is flushed by an
+  ``atexit`` hook (best-effort: a flush into a vanished temp dir is
+  swallowed).  Merge-on-save semantics are identical on both paths.
 """
 
 from __future__ import annotations
 
+import atexit
 import dataclasses
 import json
 import os
 import tempfile
+import threading
+import weakref
 from typing import Any
 
 SCHEMA_VERSION = 2  # v2: ragged step-profile digest joined the key schema
@@ -108,8 +125,24 @@ def _read_entries(path: str) -> dict[str, Any] | None:
     return {k: v for k, v in entries.items() if isinstance(v, dict)}
 
 
-@dataclasses.dataclass
-class AutotuneCache:
+# Caches holding deferred (unflushed) writes; flushed best-effort at
+# interpreter exit.  A WeakSet so registration never extends a cache's
+# lifetime — a collected cache simply loses its unflushed writes, the
+# same contract an abrupt process death has always had.
+_DIRTY_CACHES: "weakref.WeakSet[AutotuneCache]" = weakref.WeakSet()
+
+
+@atexit.register
+def _flush_dirty_caches() -> None:
+    for cache in list(_DIRTY_CACHES):
+        try:
+            cache.flush()
+        except Exception:
+            pass  # exit-time best effort (tmp dir may be gone)
+
+
+@dataclasses.dataclass(eq=False)  # identity semantics: hashable for the
+class AutotuneCache:              # dirty-cache WeakSet
     """Versioned persistent key -> tuned-decision store.
 
     Keys are produced by :class:`repro.autotune.tuner.TuneKey` and embed
@@ -124,6 +157,11 @@ class AutotuneCache:
         default_factory=dict
     )
     _loaded_from_disk: bool = False
+    _lock: threading.RLock = dataclasses.field(
+        default_factory=threading.RLock, repr=False, compare=False
+    )
+    _dirty: bool = dataclasses.field(default=False, repr=False,
+                                     compare=False)
 
     def __post_init__(self):
         if self.path is None:
@@ -135,8 +173,10 @@ class AutotuneCache:
     def load(self) -> None:
         """Read the backing file; silently start empty on any mismatch."""
         entries = _read_entries(self.path)
-        self.entries = entries if entries is not None else {}
-        self._loaded_from_disk = entries is not None
+        with self._lock:
+            self.entries = entries if entries is not None else {}
+            self._loaded_from_disk = entries is not None
+            self._dirty = False
 
     def save(self) -> None:
         """Atomic write (tempfile + rename) of the whole store.
@@ -144,47 +184,88 @@ class AutotuneCache:
         Merge-on-save: entries another process persisted since our load
         are folded in first (ours win on key collision), so concurrent
         processes tuning disjoint keys don't clobber each other — the
-        union survives, whoever writes last.
+        union survives, whoever writes last.  The merge + swap + write
+        happens under the instance lock, so a ``put`` racing from
+        another thread either lands before the snapshot (persisted now)
+        or after the swap (persisted by the next flush) — never lost
+        mid-``save``.
         """
-        merged = {**(_read_entries(self.path) or {}), **self.entries}
-        self.entries = merged
-        d = os.path.dirname(self.path)
-        os.makedirs(d, exist_ok=True)
-        payload = {
-            "schema": SCHEMA_VERSION,
-            "jax": _jax_version(),
-            "entries": merged,
-        }
-        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
-        try:
-            with os.fdopen(fd, "w") as f:
-                json.dump(payload, f, indent=1, sort_keys=True)
-            os.replace(tmp, self.path)
-        except BaseException:
+        with self._lock:
+            merged = {**(_read_entries(self.path) or {}), **self.entries}
+            self.entries = merged
+            self._dirty = False
+            _DIRTY_CACHES.discard(self)
+            d = os.path.dirname(self.path)
+            os.makedirs(d, exist_ok=True)
+            payload = {
+                "schema": SCHEMA_VERSION,
+                "jax": _jax_version(),
+                "entries": merged,
+            }
+            fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
             try:
-                os.unlink(tmp)
-            except OSError:
-                pass
-            raise
+                with os.fdopen(fd, "w") as f:
+                    json.dump(payload, f, indent=1, sort_keys=True)
+                os.replace(tmp, self.path)
+            except BaseException:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+                raise
+
+    def flush(self) -> None:
+        """Persist deferred writes, if any (no-op on a clean store)."""
+        with self._lock:
+            if self._dirty:
+                self.save()
+
+    @property
+    def dirty(self) -> bool:
+        """True when deferred writes await a ``flush()``."""
+        return self._dirty
 
     def clear(self) -> None:
-        self.entries = {}
-        try:
-            os.unlink(self.path)
-        except OSError:
-            pass
+        with self._lock:
+            self.entries = {}
+            self._dirty = False
+            _DIRTY_CACHES.discard(self)
+            try:
+                os.unlink(self.path)
+            except OSError:
+                pass
 
     # -- access ---------------------------------------------------------
 
     def get(self, key: str) -> dict[str, Any] | None:
-        return self.entries.get(key)
+        with self._lock:
+            return self.entries.get(key)
 
     def put(
-        self, key: str, entry: dict[str, Any], *, persist: bool = True
+        self,
+        key: str,
+        entry: dict[str, Any],
+        *,
+        persist: bool | str = True,
     ) -> None:
-        self.entries[key] = entry
-        if persist:
-            self.save()
+        """Record one entry.
+
+        ``persist`` is ``True`` (write the whole store now — the
+        pre-existing O(store) behavior), ``False`` (in-memory only), or
+        ``"defer"`` (mark dirty; persisted by the next ``flush()`` /
+        ``save()`` or the atexit hook — the serving hot path's choice).
+        """
+        if persist not in (True, False, "defer"):
+            raise ValueError(
+                f"persist must be True, False or 'defer', got {persist!r}"
+            )
+        with self._lock:
+            self.entries[key] = entry
+            if persist == "defer":
+                self._dirty = True
+                _DIRTY_CACHES.add(self)
+            elif persist:
+                self.save()
 
     def __len__(self) -> int:
         return len(self.entries)
@@ -200,7 +281,7 @@ class AutotuneCache:
         name: str,
         payload: dict[str, Any],
         *,
-        persist: bool = True,
+        persist: bool | str = True,
     ) -> None:
         """Store a non-decision artifact (e.g. a ``repro.learn`` gate).
 
@@ -216,21 +297,23 @@ class AutotuneCache:
 
     def artifact_names(self, kind: str) -> tuple[str, ...]:
         prefix = f"{ARTIFACT_PREFIX}/{kind}/"
-        return tuple(
-            sorted(
-                k[len(prefix):]
-                for k in self.entries
-                if k.startswith(prefix)
+        with self._lock:
+            return tuple(
+                sorted(
+                    k[len(prefix):]
+                    for k in self.entries
+                    if k.startswith(prefix)
+                )
             )
-        )
 
     def decision_entries(self) -> dict[str, dict[str, Any]]:
         """Tuned-decision entries only (artifact segment filtered out)."""
-        return {
-            k: v
-            for k, v in self.entries.items()
-            if not k.startswith(f"{ARTIFACT_PREFIX}/")
-        }
+        with self._lock:
+            return {
+                k: v
+                for k, v in self.entries.items()
+                if not k.startswith(f"{ARTIFACT_PREFIX}/")
+            }
 
 
 __all__ = [

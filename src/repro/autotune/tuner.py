@@ -136,7 +136,7 @@ class Autotuner:
         cache: AutotuneCache | None = None,
         *,
         backend: str = "jax",
-        persist: bool = True,
+        persist: bool | str = True,
         gate=None,
         audit=None,
     ):
@@ -145,6 +145,9 @@ class Autotuner:
         get_engine(backend)  # fail fast: ValueError lists valid engines
         self.cache = cache if cache is not None else AutotuneCache()
         self.backend = backend
+        # True = eager save per decision, False = in-memory only,
+        # "defer" = batched persistence (cache.flush() / atexit) — the
+        # serving hot path's choice (see repro.serve.adapt).
         self.persist = persist
         self.hits = 0
         self.misses = 0
@@ -159,6 +162,22 @@ class Autotuner:
         # Artifact gates load lazily, once per artifact name ("default"
         # plus one "machine:<family>" slot per family queried).
         self._artifact_gates: dict = {}
+
+    def set_gate(self, gate) -> None:
+        """Atomically swap the explicit learned gate this tuner consults.
+
+        One attribute store (atomic under the GIL), so a background
+        re-fit thread can install a freshly trained gate while request
+        threads are mid-``pick`` — each pick sees either the old or the
+        new gate, never a torn state.  ``None`` reverts to the ambient
+        gate resolution order (see :meth:`learned_gate`).
+        """
+        self._gate = gate
+
+    @property
+    def gate(self):
+        """The explicitly installed gate (``set_gate``), or ``None``."""
+        return self._gate
 
     # -- observability ---------------------------------------------------
 
@@ -312,17 +331,7 @@ class Autotuner:
         self.misses += 1
         eff = machine_for_group(machine, group) if group else machine
         try:
-            ranked = self._shortlist(gemm, eff, top=None, profile=profile)
-            if profile is None:
-                # Uniform AG->GEMM path: ficco_linear chunks the shard
-                # one level deeper, so filter by its divisibility rule.
-                # Ragged picks go to the profile-quantized kernel path
-                # (ficco_a2a_ffn), which handles arbitrary chunk sizes —
-                # the cost model's own validity mask already applied.
-                ranked = [
-                    (s, t) for s, t in ranked
-                    if _runtime_executable(gemm, eff.group, s)
-                ]
+            ranked = self.executable_ranking(gemm, eff, profile=profile)
             sched, model_t = ranked[0]  # serial always survives the filter
         except Exception:
             # Zero-cost fallback, against the group-retargeted machine so
@@ -357,6 +366,34 @@ class Autotuner:
             sched, "analytic", model_t, key=key,
             shortlist=tuple((s.value, float(t)) for s, t in ranked[:3]),
         )
+
+    def executable_ranking(
+        self,
+        gemm: GemmShape,
+        machine: MachineSpec,
+        *,
+        group: int | None = None,
+        profile=None,
+    ) -> list[tuple[Schedule, float]]:
+        """Full analytic ranking filtered to runtime-executable schedules.
+
+        Uniform AG->GEMM path: ficco_linear chunks the shard one level
+        deeper, so the ranking is filtered by its divisibility rule.
+        Ragged picks go to the profile-quantized kernel path
+        (ficco_a2a_ffn), which handles arbitrary chunk sizes — the cost
+        model's own validity mask already applied.  Shared by
+        ``_pick_impl`` and the adaptive serving tier
+        (:mod:`repro.serve.adapt`), so an online re-rank can never pick
+        a schedule the runtime would refuse.
+        """
+        eff = machine_for_group(machine, group) if group else machine
+        ranked = self._shortlist(gemm, eff, top=None, profile=profile)
+        if profile is None:
+            ranked = [
+                (s, t) for s, t in ranked
+                if _runtime_executable(gemm, eff.group, s)
+            ]
+        return ranked
 
     def shortlist(
         self,

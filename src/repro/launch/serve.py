@@ -8,6 +8,12 @@ Usage:
 the persistent runtime autotuner (repro.autotune) — serving processes
 restart often, so tuned decisions surviving on disk is exactly what the
 cache is for.
+
+``--adapt`` additionally runs the online-adaptation tier
+(:mod:`repro.serve.adapt`): a bounded in-memory decision cache over the
+persistent store, a background re-fit thread, and the
+exploration-budget measured tier.  Knobs: ``--adapt-cache-size``,
+``--adapt-ttl``, ``--adapt-refit-s``, ``--adapt-explore-rate``.
 """
 
 from __future__ import annotations
@@ -36,6 +42,18 @@ def main():
         help="gspmd_serial | serial | shard_p2p | ficco_auto | "
         "ficco_autotune | explicit schedule value",
     )
+    ap.add_argument(
+        "--adapt", action="store_true",
+        help="enable the online-adaptation tier (repro.serve.adapt)",
+    )
+    ap.add_argument("--adapt-cache-size", type=int, default=4096,
+                    help="in-memory decision cache bound (LRU beyond)")
+    ap.add_argument("--adapt-ttl", type=float, default=300.0,
+                    help="decision TTL seconds (expiry forces a re-rank)")
+    ap.add_argument("--adapt-refit-s", type=float, default=2.0,
+                    help="background re-fit cadence seconds")
+    ap.add_argument("--adapt-explore-rate", type=float, default=1.0,
+                    help="measured-tier token-bucket refill (sessions/s)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -47,9 +65,21 @@ def main():
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     enc_len = 16 if cfg.encdec else 0
+    tier = None
+    if args.adapt:
+        from repro.serve.adapt import AdaptConfig, AdaptiveTier
+
+        tier = AdaptiveTier(
+            config=AdaptConfig(
+                cache_size=args.adapt_cache_size,
+                ttl_s=args.adapt_ttl,
+                refit_interval_s=args.adapt_refit_s,
+                explore_rate=args.adapt_explore_rate,
+            ),
+        ).start()
     eng = DecodeEngine(
         cfg, params, batch_size=args.prompts, cache_len=args.cache_len,
-        enc_len=enc_len,
+        enc_len=enc_len, adapt=tier,
     )
     if cfg.encdec:
         import jax.numpy as jnp
@@ -70,6 +100,11 @@ def main():
     total = sum(len(r.out) for r in out)
     print(f"decoded {total} tokens in {dt:.2f}s "
           f"({total / dt:.1f} tok/s on CPU interpret)")
+    if tier is not None:
+        dec = eng.last_decision
+        sched = dec.schedule.value if dec is not None else "-"
+        print(f"adapt: schedule={sched} stats={tier.stats()}")
+        tier.stop()
     for i, r in enumerate(out):
         print(f"req{i}: {list(r.prompt)} -> {r.out}")
 

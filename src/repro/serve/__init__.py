@@ -1,0 +1,26 @@
+"""repro.serve — serving substrate + online-adaptation tier.
+
+* :mod:`repro.serve.engine` — prefill + batched greedy decode engine
+  (jax).
+* :mod:`repro.serve.adapt` — the continuously-adapting schedule
+  selection tier (bounded decision cache, background re-fit,
+  exploration-budget measured tier); numpy-only import graph.
+
+Submodules export lazily (PEP 562) so importing the package — or just
+the adaptation tier — never pulls jax in.
+"""
+
+from __future__ import annotations
+
+_LAZY = {"engine", "adapt"}
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        import importlib
+
+        return importlib.import_module(f"repro.serve.{name}")
+    raise AttributeError(f"module 'repro.serve' has no attribute {name!r}")
+
+
+__all__ = ["engine", "adapt"]

@@ -1,0 +1,731 @@
+"""Online-adaptation serving tier: continuously re-tuned schedule
+selection under drifting traffic (ROADMAP item 1).
+
+The paper pitches its FiCCO heuristics as signals "frameworks and
+runtimes can harness"; :mod:`repro.autotune` made that a tiered runtime
+tuner, and :mod:`repro.obs` (PR 7) gave it live signals — per-tier pick
+counters, pick-latency histograms, gate-vs-argmin agreement, a
+replayable audit log.  This module closes the loop for a long-lived
+serving process whose traffic *drifts*:
+
+* :class:`DecisionCache` — a bounded in-memory decision store keyed by
+  :class:`~repro.autotune.tuner.TuneKey` strings, LRU eviction + TTL.
+  The persistent :class:`~repro.autotune.cache.AutotuneCache` is only a
+  **warm-start** (preloaded at construction) and **write-behind** layer
+  (``persist="defer"`` puts, flushed by the re-fit thread and atexit) —
+  the hot path never touches disk.
+* :class:`AdaptiveTier` — the pick path: memory hit -> analytic re-rank
+  with the *currently deployed* gate/model -> (budgeted) measured tier.
+  TTL expiry is what makes selection adaptive: a stale decision is
+  re-ranked rather than served forever, so machine-model re-fits and
+  gate swaps actually reach future picks.
+* :class:`Refitter` — a background daemon thread that periodically (a)
+  retrains the :class:`~repro.learn.gate.LearnedGate` from a bounded
+  buffer of *live* request scenarios and atomically swaps it into the
+  tuner, (b) re-runs :func:`~repro.learn.fit.fit_machine` over live
+  ``Autotuner.measure`` records to tighten the analytic error bar, and
+  (c) flushes the write-behind layer.  Swaps are single attribute
+  stores — request threads see the old or the new artifact, never a
+  torn one.
+* :class:`ExplorationPolicy` — the measured-tier policy that was still
+  open: ``measure()`` fires only when the analytic shortlist's top-2
+  gap is inside the fitted machine model's log-time error bar (the
+  model genuinely cannot separate the candidates) AND a token-bucket
+  budget allows it — so exploration is bounded per wall-clock second no
+  matter how hard traffic drifts.
+
+Synthetic drifting traffic comes from
+:func:`repro.sweep.synth.drifting_request_stream`;
+``benchmarks/bench_serve.py`` reports sustained decisions/sec and the
+adaptation lag (picks until gate agreement recovers after a drift
+step).  Metric namespace (beside PR 7's ``tuner/pick.*``)::
+
+  serve/adapt.decisions        total tier picks
+  serve/adapt.pick.<tier>      memory | warm | analytic | measured | heuristic
+  serve/adapt.pick_seconds     per-pick wall-time histogram
+  serve/adapt.expired          TTL re-ranks (staleness-driven adaptation)
+  serve/adapt.evicted          LRU evictions (bounded-memory proof)
+  serve/adapt.measures         exploration-budget measured sessions
+  serve/adapt.refits,.gate_swaps  background re-fit activity
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+import threading
+import time
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.autotune.tuner import Autotuner, TuneDecision, TuneKey
+from repro.core.heuristics import select_schedule
+from repro.core.machine import TPU_V5E, MachineSpec, machine_for_group
+from repro.core.schedule_types import Schedule
+from repro.core.workload import GemmShape, StepProfile
+from repro.obs import audit as _audit
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptConfig:
+    """Knobs of the online-adaptation tier (README "Online adaptation")."""
+
+    cache_size: int = 4096        # in-memory decision bound (LRU beyond)
+    ttl_s: float = 300.0          # decision freshness; expiry -> re-rank
+    refit_interval_s: float = 2.0  # background re-fit cadence
+    refit_min_picks: int = 64     # buffered scenarios before a gate retrain
+    buffer_size: int = 2048       # live-scenario buffer bound (newest win)
+    explore_rate: float = 1.0     # measured-tier token-bucket refill /s
+    explore_burst: float = 8.0    # token-bucket capacity
+    error_bar_z: float = 2.0      # top-2 gap within z*sigma -> explore
+    default_sigma: float = 0.10   # log-time error bar before any fit
+    fit_min_records: int = 6      # measured records before a machine re-fit
+    fit_params: tuple[str, ...] = ("link_bw", "s_half")
+    fit_steps: int = 120          # Adam steps per background re-fit
+    gate_max_leaves: int = 8
+
+    def __post_init__(self):
+        if self.cache_size < 1:
+            raise ValueError(f"cache_size must be >= 1, got {self.cache_size}")
+        if self.ttl_s <= 0:
+            raise ValueError(f"ttl_s must be > 0, got {self.ttl_s}")
+
+
+class TokenBucket:
+    """Thread-safe token bucket: ``rate`` tokens/s up to ``burst``.
+
+    ``try_take`` never blocks — a denied token means "serve the analytic
+    answer now, explore later", which is the only acceptable behavior on
+    a request path.
+    """
+
+    def __init__(self, rate: float, burst: float, *, clock=time.monotonic):
+        self.rate = float(rate)
+        self.burst = float(burst)
+        self._clock = clock
+        self._tokens = float(burst)
+        self._stamp = clock()
+        self._lock = threading.Lock()
+
+    def try_take(self, n: float = 1.0) -> bool:
+        with self._lock:
+            now = self._clock()
+            self._tokens = min(
+                self.burst, self._tokens + (now - self._stamp) * self.rate
+            )
+            self._stamp = now
+            if self._tokens >= n:
+                self._tokens -= n
+                return True
+            return False
+
+
+class DecisionCache:
+    """Bounded in-memory TuneKey -> decision store (LRU + TTL).
+
+    A hit refreshes recency (LRU), never freshness: an entry older than
+    ``ttl_s`` is dropped on lookup and the miss forces a re-rank under
+    whatever gate/model the re-fit thread has deployed since — that is
+    the adaptation mechanism, not a cache implementation detail.
+    """
+
+    def __init__(self, size: int, ttl_s: float, *, clock=time.monotonic):
+        self.size = int(size)
+        self.ttl_s = float(ttl_s)
+        self._clock = clock
+        self._data: "collections.OrderedDict[str, tuple[TuneDecision, float]]" = (
+            collections.OrderedDict()
+        )
+        self._lock = threading.Lock()
+        self.expired = 0
+        self.evicted = 0
+
+    def get(self, key: str) -> Optional[TuneDecision]:
+        with self._lock:
+            item = self._data.get(key)
+            if item is None:
+                return None
+            dec, expires = item
+            if self._clock() >= expires:
+                del self._data[key]
+                self.expired += 1
+                return None
+            self._data.move_to_end(key)
+            return dec
+
+    def put(self, key: str, dec: TuneDecision) -> None:
+        with self._lock:
+            self._data[key] = (dec, self._clock() + self.ttl_s)
+            self._data.move_to_end(key)
+            while len(self._data) > self.size:
+                self._data.popitem(last=False)
+                self.evicted += 1
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._data)
+
+    def __contains__(self, key: str) -> bool:
+        with self._lock:
+            return key in self._data
+
+
+class ExplorationPolicy:
+    """Measured-tier policy: explore only when the model cannot decide
+    AND the budget allows.
+
+    The analytic ranking's top-2 candidates are worth measuring exactly
+    when their modelled gap is inside the machine model's own error bar
+    — ``|log(t2/t1)| <= z * sigma`` where ``sigma`` is the fitted
+    model's RMS log-time error (:class:`~repro.learn.fit.FitResult`
+    loss), updated by every background re-fit.  Even then a token
+    bucket caps measured sessions per wall-clock second, so a drift
+    step cannot stampede the measured tier.
+    """
+
+    def __init__(self, config: AdaptConfig, *, clock=time.monotonic):
+        self._z = float(config.error_bar_z)
+        self._sigma = float(config.default_sigma)
+        self._bucket = TokenBucket(
+            config.explore_rate, config.explore_burst, clock=clock
+        )
+        self.ambiguous = 0   # picks whose top-2 gap was inside the bar
+        self.granted = 0     # ... that the budget actually let explore
+        self.denied = 0      # ... denied by the token bucket
+
+    @property
+    def sigma(self) -> float:
+        return self._sigma
+
+    def set_sigma(self, sigma: float) -> None:
+        """Atomic swap of the error bar (the re-fit thread's hook)."""
+        self._sigma = max(float(sigma), 1e-6)
+
+    def should_measure(self, ranked: Sequence[tuple[Schedule, float]]) -> bool:
+        if len(ranked) < 2:
+            return False
+        t1, t2 = float(ranked[0][1]), float(ranked[1][1])
+        if t1 <= 0.0 or t2 <= 0.0:
+            return False
+        if abs(math.log(t2 / t1)) > self._z * self._sigma:
+            return False  # the model separates them confidently
+        self.ambiguous += 1
+        if self._bucket.try_take():
+            self.granted += 1
+            return True
+        self.denied += 1
+        return False
+
+
+class AdaptiveTier:
+    """The continuously-adapting schedule-selection tier.
+
+    ``tuner`` supplies the analytic ranking, the learned-gate slot the
+    re-fit thread swaps, and the persistent cache used as warm-start +
+    write-behind (it is constructed with ``persist="defer"`` when not
+    given).  ``measure_fn(gemm, candidates, profile) -> {Schedule:
+    seconds}`` is the measured-tier hook — wrap
+    :meth:`~repro.autotune.tuner.Autotuner.measure` in a real
+    deployment, or a simulator in benchmarks; ``None`` disables the
+    measured tier regardless of budget.
+
+    ``clock`` injects time for TTL/budget tests (monotonic seconds).
+    Use as a context manager to scope the background re-fit thread::
+
+        with AdaptiveTier(machine=machine) as tier:
+            for req in stream:
+                tier.pick(req.gemm, profile=req.profile)
+    """
+
+    def __init__(
+        self,
+        tuner: Autotuner | None = None,
+        *,
+        machine: MachineSpec | None = None,
+        group: int | None = None,
+        config: AdaptConfig | None = None,
+        measure_fn: Callable | None = None,
+        clock=time.monotonic,
+        backend: str = "numpy",
+    ):
+        self.config = config or AdaptConfig()
+        self.machine = machine or TPU_V5E
+        self.group = group
+        self.tuner = tuner if tuner is not None else Autotuner(
+            backend=backend, persist="defer"
+        )
+        self.measure_fn = measure_fn
+        self._clock = clock
+        self.cache = DecisionCache(
+            self.config.cache_size, self.config.ttl_s, clock=clock
+        )
+        self.policy = ExplorationPolicy(self.config, clock=clock)
+        # Live-scenario buffer the gate retrain trains on: newest
+        # ``buffer_size`` (gemm, frac-or-None) pairs, i.e. the traffic
+        # *after* a drift step quickly dominates.
+        self._buffer: collections.deque = collections.deque(
+            maxlen=self.config.buffer_size
+        )
+        self._buffer_lock = threading.Lock()
+        self._refitter: Refitter | None = None
+        self.gate_version = 0
+        self.last_agreement: float | None = None
+        self._warm_start()
+
+    # -- lifecycle -------------------------------------------------------
+
+    def start(self) -> "AdaptiveTier":
+        """Start the background re-fit thread (idempotent)."""
+        if self._refitter is None or not self._refitter.is_alive():
+            self._refitter = Refitter(self)
+            self._refitter.start()
+        return self
+
+    def stop(self) -> None:
+        """Stop the re-fit thread and flush the write-behind layer."""
+        if self._refitter is not None:
+            self._refitter.stop()
+            self._refitter = None
+        self.tuner.cache.flush()
+
+    def __enter__(self) -> "AdaptiveTier":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- warm start ------------------------------------------------------
+
+    def _warm_start(self) -> None:
+        """Pre-seed the memory tier from the persistent store.
+
+        The persistent cache is the cross-process memory; decisions it
+        holds enter the LRU with a normal TTL, so they serve instantly
+        on startup and still age out into re-ranks like any other
+        entry.
+        """
+        reg = _metrics.get_metrics()
+        n = 0
+        for key, entry in self.tuner.cache.decision_entries().items():
+            try:
+                sched = Schedule(entry["schedule"])
+            except (KeyError, ValueError):
+                continue
+            self.cache.put(
+                key,
+                TuneDecision(
+                    sched,
+                    "cache",
+                    entry.get("model_total_s"),
+                    entry.get("measured_total_s"),
+                    key=key,
+                ),
+            )
+            n += 1
+            if n >= self.config.cache_size:
+                break
+        if n:
+            reg.counter("serve/adapt.warm_start").inc(n)
+
+    # -- the pick path ---------------------------------------------------
+
+    def pick(
+        self,
+        gemm: GemmShape,
+        machine: MachineSpec | None = None,
+        *,
+        group: int | None = None,
+        profile: StepProfile | None = None,
+    ) -> TuneDecision:
+        """Tiered adaptive pick.  Never raises (heuristic fallback)."""
+        machine = machine or self.machine
+        group = group if group is not None else self.group
+        tkey = TuneKey.for_gemm(gemm, machine, group, profile=profile)
+        key = str(tkey)
+        t0 = time.perf_counter()
+        reg = _metrics.get_metrics()
+        with _trace.span("serve/adapt.pick", "serve", key=key) as sp:
+            dec = self.cache.get(key)
+            if dec is not None:
+                tier = "memory"
+            else:
+                try:
+                    dec, tier = self._rank_and_decide(
+                        gemm, machine, key, group, profile
+                    )
+                except Exception:
+                    # Never-raise contract (same as the tuner's): any
+                    # engine/model failure degrades to the static
+                    # heuristic, un-cached so a healthy pick re-ranks.
+                    hdec = select_schedule(
+                        gemm,
+                        machine_for_group(machine, group) if group else machine,
+                        profile=profile,
+                    )
+                    dec, tier = (
+                        TuneDecision(hdec.schedule, "heuristic", key=key),
+                        "heuristic",
+                    )
+            sp.set(tier=tier, schedule=dec.schedule.value)
+        self._observe_scenario(gemm, profile)
+        seconds = time.perf_counter() - t0
+        try:
+            reg.counter("serve/adapt.decisions").inc()
+            reg.counter(f"serve/adapt.pick.{tier}").inc()
+            reg.histogram("serve/adapt.pick_seconds").observe(seconds)
+        except Exception:  # pragma: no cover - observability best-effort
+            pass
+        return dec
+
+    def _rank_and_decide(
+        self, gemm, machine, key: str, group, profile
+    ) -> tuple[TuneDecision, str]:
+        ranked = self.tuner.executable_ranking(
+            gemm, machine, group=group, profile=profile
+        )
+        if (
+            self.measure_fn is not None
+            and self.policy.should_measure(ranked)
+        ):
+            dec = self._measure(gemm, ranked, key, profile)
+            if dec is not None:
+                self.cache.put(key, dec)
+                return dec, "measured"
+        sched, model_t = ranked[0]
+        dec = TuneDecision(
+            sched, "analytic", model_t, key=key,
+            shortlist=tuple((s.value, float(t)) for s, t in ranked[:3]),
+        )
+        self.cache.put(key, dec)
+        # Write-behind: the persistent layer learns the decision without
+        # hot-path disk I/O (the re-fit thread / atexit flushes).
+        self.tuner.cache.put(
+            key,
+            {
+                "schedule": sched.value,
+                "source": "analytic",
+                "model_total_s": float(model_t),
+                "measured_total_s": None,
+            },
+            persist="defer",
+        )
+        return dec, "analytic"
+
+    def _measure(self, gemm, ranked, key: str, profile):
+        """Budgeted measured tier: time the top-2, record + audit."""
+        reg = _metrics.get_metrics()
+        candidates = [s for s, _ in ranked[:2]]
+        try:
+            with _trace.span(
+                "serve/adapt.measure", "serve", key=key,
+                candidates=[s.value for s in candidates],
+            ):
+                timings = self.measure_fn(gemm, candidates, profile)
+        except Exception:
+            return None
+        if not timings:
+            return None
+        winner = min(timings, key=timings.get)
+        best = float(timings[winner])
+        self.tuner.cache.put(
+            key,
+            {
+                "schedule": winner.value,
+                "source": "measured",
+                "model_total_s": float(dict(ranked).get(winner, 0.0)) or None,
+                "measured_total_s": best,
+            },
+            persist="defer",
+        )
+        dec = TuneDecision(
+            winner, "measured", measured_total_s=best, key=key,
+            shortlist=tuple(
+                (s.value, float(t))
+                for s, t in sorted(timings.items(), key=lambda kv: kv[1])
+            ),
+        )
+        try:
+            reg.counter("serve/adapt.measures").inc()
+            log = _audit.get_audit()
+            if log is not None:
+                log.record({
+                    "kind": "adapt_measure",
+                    "key": key,
+                    "schedule": winner.value,
+                    "source": "measured",
+                    "measured_total_s": best,
+                    "shortlist": [[s.value, float(t)]
+                                  for s, t in timings.items()],
+                })
+        except Exception:  # pragma: no cover - observability best-effort
+            pass
+        return dec
+
+    # -- DecodeEngine wiring ---------------------------------------------
+
+    def pick_for_requests(self, requests, cfg) -> TuneDecision:
+        """Schedule pick for one decode batch's request-load digest.
+
+        The batch's per-request work shares (prompt + generation
+        tokens) are the serving-side analog of an expert-load profile:
+        quantized to 64ths so identical load *shapes* share a cache key
+        even when absolute lengths differ slightly.  The GEMM is the
+        batch's FFN workload (total token rows x d_model x d_ff).
+        """
+        work = [
+            max(len(r.prompt) + r.max_new_tokens, 1) for r in requests
+        ] or [1]
+        total = sum(work)
+        profile = None
+        if len(work) > 1:
+            counts = StepProfile.from_weights(work, name="reqload").quantize(64)
+            profile = StepProfile(
+                tuple(c / 64 for c in counts), name="reqload"
+            )
+        gemm = GemmShape(total, cfg.d_ff, cfg.d_model, 2)
+        return self.pick(gemm, profile=profile)
+
+    # -- re-fit ----------------------------------------------------------
+
+    def _observe_scenario(self, gemm, profile) -> None:
+        frac = None if profile is None else tuple(profile.fractions)
+        with self._buffer_lock:
+            self._buffer.append(
+                (gemm.m, gemm.n, gemm.k, gemm.dtype_bytes, frac)
+            )
+
+    def _snapshot_buffer(self):
+        with self._buffer_lock:
+            return list(self._buffer)
+
+    def refit_now(self) -> dict:
+        """One re-fit cycle, inline (what the background thread runs).
+
+        Returns a report dict: ``gate_agreement`` (post-swap agreement
+        on the live-traffic grid) and/or ``fit_sigma`` when the
+        respective stage ran, plus ``flushed``.  Never raises.
+        """
+        reg = _metrics.get_metrics()
+        out: dict = {}
+        try:
+            out.update(self._refit_gate())
+        except Exception:
+            out["gate_error"] = True
+        try:
+            out.update(self._refit_machine())
+        except Exception:
+            out["fit_error"] = True
+        try:
+            self.tuner.cache.flush()
+            out["flushed"] = True
+        except Exception:
+            out["flushed"] = False
+        try:
+            reg.counter("serve/adapt.refits").inc()
+        except Exception:  # pragma: no cover
+            pass
+        return out
+
+    def _grid_from_rows(self, rows):
+        """Evaluate live-traffic rows ``(m, n, k, b, frac-or-None)``
+        into a decision grid on the tier's effective machine."""
+        from repro.core.batch import RaggedBatch
+        from repro.core.engine import get_engine
+
+        eff = (
+            machine_for_group(self.machine, self.group)
+            if self.group
+            else self.machine
+        )
+        g = eff.group
+        width = max(
+            [len(f) for *_abcd, f in rows if f is not None] + [g]
+        )
+        m = np.asarray([r[0] for r in rows], dtype=np.int64)
+        n = np.asarray([r[1] for r in rows], dtype=np.int64)
+        k = np.asarray([r[2] for r in rows], dtype=np.int64)
+        b = np.asarray([r[3] for r in rows], dtype=np.int64)
+        frac = np.zeros((len(rows), width))
+        uni = np.zeros(width)
+        uni[:g] = 1.0 / g
+        for i, (*_abcd, f) in enumerate(rows):
+            if f is None:
+                frac[i] = uni
+            else:
+                frac[i, : len(f)] = f
+        batch = RaggedBatch(m=m, n=n, k=k, dtype_bytes=b, frac=frac)
+        return get_engine(self.tuner.backend).evaluate(batch, [eff])
+
+    def agreement_probe(self, pairs) -> Optional[float]:
+        """Deployed gate's agreement on held-out traffic.
+
+        ``pairs`` is a sequence of ``(GemmShape, StepProfile | None)``.
+        Unlike the agreement a re-fit reports (the gate's *training*
+        grid), this evaluates the currently deployed gate on traffic it
+        was not trained on — the honest adaptation-lag signal after a
+        drift step.  Returns ``None`` until a re-fit has deployed a
+        gate.
+        """
+        from repro.obs.metrics import observe_gate_agreement
+
+        gate = self.tuner.gate
+        if gate is None or not pairs:
+            return None
+        rows = [
+            (
+                g.m, g.n, g.k, g.dtype_bytes,
+                None if p is None else tuple(p.fractions),
+            )
+            for g, p in pairs
+        ]
+        grid = self._grid_from_rows(rows)
+        return observe_gate_agreement(grid, gate=gate)
+
+    def _refit_gate(self) -> dict:
+        from repro.learn.gate import GATE_ARTIFACT_KIND, train_gate
+        from repro.obs.metrics import observe_gate_agreement
+
+        rows = self._snapshot_buffer()
+        if len(rows) < self.config.refit_min_picks:
+            return {}
+        with _trace.span(
+            "serve/adapt.refit_gate", "serve", n_points=len(rows)
+        ):
+            grid = self._grid_from_rows(rows)
+            gate = train_gate(
+                grid, max_leaves=self.config.gate_max_leaves,
+                meta={"trained_by": "serve.adapt", "n_live": len(rows)},
+            )
+            # Atomic swap: request threads see old or new, never torn.
+            self.tuner.set_gate(gate)
+            self.gate_version += 1
+            agreement = observe_gate_agreement(grid, gate=gate)
+        self.last_agreement = agreement
+        # Persist the deployed gate beside the decisions (write-behind).
+        try:
+            import json as _json
+
+            self.tuner.cache.put_artifact(
+                GATE_ARTIFACT_KIND,
+                "adapt:" + self.machine.name.split("/", 1)[0],
+                _json.loads(gate.to_json()),
+                persist="defer",
+            )
+        except Exception:
+            pass
+        try:
+            _metrics.get_metrics().counter("serve/adapt.gate_swaps").inc()
+        except Exception:  # pragma: no cover
+            pass
+        return {"gate_agreement": agreement, "gate_points": len(rows)}
+
+    def _refit_machine(self) -> dict:
+        from repro.learn.fit import fit_machine, records_from_cache, save_fit
+
+        records = records_from_cache(self.tuner.cache, self.machine.name)
+        groups = {r.group for r in records}
+        if len(records) < self.config.fit_min_records or len(groups) != 1:
+            return {}
+        with _trace.span(
+            "serve/adapt.refit_machine", "serve", n_records=len(records)
+        ):
+            fit = fit_machine(
+                self.machine, records,
+                params=self.config.fit_params,
+                steps=self.config.fit_steps,
+            )
+            # RMS log-time error IS the error bar the exploration
+            # policy compares analytic gaps against.
+            sigma = math.sqrt(max(fit.loss, 0.0))
+            self.policy.set_sigma(sigma)
+            save_fit(fit, cache=self.tuner.cache)
+        return {"fit_sigma": sigma, "fit_records": len(records)}
+
+    # -- reporting -------------------------------------------------------
+
+    def stats(self) -> dict:
+        """One self-describing view of the tier's state (launchers)."""
+        return {
+            "cache_len": len(self.cache),
+            "cache_expired": self.cache.expired,
+            "cache_evicted": self.cache.evicted,
+            "gate_version": self.gate_version,
+            "last_agreement": self.last_agreement,
+            "sigma": self.policy.sigma,
+            "explore_ambiguous": self.policy.ambiguous,
+            "explore_granted": self.policy.granted,
+            "explore_denied": self.policy.denied,
+            "persistent_dirty": self.tuner.cache.dirty,
+        }
+
+
+class Refitter(threading.Thread):
+    """Daemon thread running :meth:`AdaptiveTier.refit_now` on a cadence.
+
+    ``stop()`` wakes the wait and joins; the final cycle's flush is the
+    tier's (``AdaptiveTier.stop`` flushes after joining, so nothing
+    recorded between the last cycle and the stop is lost).
+    """
+
+    def __init__(self, tier: AdaptiveTier):
+        super().__init__(name="serve-adapt-refit", daemon=True)
+        self.tier = tier
+        # NB: not named ``_stop`` — Thread.join's internals call a
+        # private ``_stop()`` method and an Event would shadow it.
+        self._halt = threading.Event()
+
+    def run(self) -> None:
+        while not self._halt.wait(self.tier.config.refit_interval_s):
+            self.tier.refit_now()
+
+    def stop(self, timeout: float = 10.0) -> None:
+        self._halt.set()
+        self.join(timeout=timeout)
+
+
+def simulated_measure_fn(
+    machine: MachineSpec,
+    *,
+    noise: float = 0.03,
+    seed: int = 0,
+    backend: str = "numpy",
+):
+    """A measured-tier hook backed by the analytic model + log-normal
+    noise — the benchmark/test stand-in for timing real collectives
+    (wrap :meth:`~repro.autotune.tuner.Autotuner.measure` in a real
+    deployment).
+    """
+    from repro.core.engine import get_engine, shortlist as engine_shortlist
+
+    eng = get_engine(backend)
+    rng = np.random.default_rng(seed)
+
+    def measure(gemm, candidates, profile):
+        ranked = engine_shortlist(
+            gemm, machine, top=None, engine=eng, profile=profile
+        )
+        times = {s: t for s, t in ranked}
+        out = {}
+        for sched in candidates:
+            if sched in times:
+                out[sched] = float(
+                    times[sched] * np.exp(rng.normal(0.0, noise))
+                )
+        return out
+
+    return measure
+
+
+__all__ = [
+    "AdaptConfig",
+    "TokenBucket",
+    "DecisionCache",
+    "ExplorationPolicy",
+    "AdaptiveTier",
+    "Refitter",
+    "simulated_measure_fn",
+]

@@ -64,6 +64,7 @@ class DecodeEngine:
         batch_size: int = 4,
         cache_len: int = 128,
         enc_len: int = 0,
+        adapt=None,
     ):
         self.cfg = cfg
         self.model = build_model(cfg)
@@ -74,9 +75,22 @@ class DecodeEngine:
             batch_size, cache_len, enc_len=enc_len
         )
         self.step_fn = jax.jit(make_serve_step(self.model))
+        # Online-adaptation tier (repro.serve.adapt.AdaptiveTier): when
+        # set, every run() streams its request-load digest through the
+        # tier and records the tuned overlap schedule for the batch.
+        self.adapt = adapt
+        self.last_decision = None
 
     def run(self, requests: list[Request]) -> list[Request]:
         assert len(requests) <= self.batch
+        # A batch whose requests want zero new tokens (all
+        # max_new_tokens=0, or an empty/dummy-pad-only batch) has
+        # nothing to emit — skip the decode loop entirely instead of
+        # burning max_prompt + max_new jitted steps producing nothing.
+        if not any(len(r.out) < r.max_new_tokens for r in requests):
+            for r in requests:
+                r.done = True
+            return requests
         # left-align all prompts; pad batch with a dummy request
         reqs = list(requests) + [
             Request(np.zeros(1, np.int32), 0)
@@ -85,7 +99,12 @@ class DecodeEngine:
         max_prompt = max(len(r.prompt) for r in reqs)
         max_new = max((r.max_new_tokens for r in reqs), default=0)
         reg = _metrics.get_metrics()
-        tok = jnp.zeros((self.batch, 1), jnp.int32)
+        steps_c = reg.counter("serve/steps")
+        tokens_c = reg.counter("serve/tokens")
+        if self.adapt is not None:
+            self.last_decision = self.adapt.pick_for_requests(
+                requests, self.cfg
+            )
         with _trace.span(
             "serve/run", "serve",
             n_requests=len(requests), batch=self.batch,
@@ -115,8 +134,8 @@ class DecodeEngine:
                             r.out.append(int(nxt[i]))
                             emitted += 1
                     sp.set(tokens=emitted)
-                reg.counter("serve/steps").inc()
-                reg.counter("serve/tokens").inc(emitted)
+                steps_c.inc()
+                tokens_c.inc(emitted)
                 if all(
                     len(r.out) >= r.max_new_tokens
                     for r in reqs[: len(requests)]

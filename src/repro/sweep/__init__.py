@@ -36,7 +36,12 @@ from repro.sweep.runner import (
     summarize_shard,
     sweep_grid,
 )
-from repro.sweep.synth import synthetic_batch, synthetic_ragged_batch
+from repro.sweep.synth import (
+    ServeRequest,
+    drifting_request_stream,
+    synthetic_batch,
+    synthetic_ragged_batch,
+)
 
 # Device-resident pieces (repro.sweep.device) are exported lazily via
 # PEP 562 so importing the package never imports jax: the fast CI lane
@@ -81,5 +86,7 @@ __all__ = [
     "sweep_grid",
     "synthetic_batch",
     "synthetic_ragged_batch",
+    "ServeRequest",
+    "drifting_request_stream",
     *_DEVICE_EXPORTS,
 ]

@@ -14,9 +14,13 @@ regenerate their owned shard locally instead of broadcasting operands.
 
 from __future__ import annotations
 
+import dataclasses
+from typing import Iterator
+
 import numpy as np
 
 from repro.core.batch import RaggedBatch, ScenarioBatch
+from repro.core.workload import GemmShape, StepProfile
 
 # M is drawn in multiples of this, so every group size up to 32
 # decomposes evenly (matching workload.scenario_grid's convention); the
@@ -83,4 +87,95 @@ def synthetic_ragged_batch(
     )
 
 
-__all__ = ["synthetic_batch", "synthetic_ragged_batch"]
+# ---------------------------------------------------------------------------
+# Drifting-skew serving traffic (ROADMAP item 1 / repro.serve.adapt).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeRequest:
+    """One schedule-selection request of the synthetic serving stream."""
+
+    gemm: GemmShape
+    profile: StepProfile
+    phase: int
+    index: int
+
+
+def drifting_request_stream(
+    n: int,
+    *,
+    steps: int = 8,
+    seed: int = 0,
+    drift_every: int = 2000,
+    n_shapes: int = 6,
+    n_profiles: int = 8,
+    concentration: float = 0.5,
+    hot_boost: float = 8.0,
+    quantum: int = 64,
+) -> Iterator[ServeRequest]:
+    """Seeded drifting-skew request stream for the adaptive serving tier.
+
+    Serving traffic has a *small* working set at any moment — a few hot
+    GEMM shapes and a family of expert-load profiles — that **drifts**:
+    every ``drift_every`` requests the Dirichlet family's hot step
+    rotates (phase ``p`` boosts step ``p % steps`` by ``hot_boost``)
+    and the per-phase profile pool is redrawn, so cached decisions and
+    the deployed gate go stale together.  Profiles are quantized to
+    ``quantum``-ths (the same largest-remainder rounding the kernel
+    layer applies), so digests repeat exactly within a phase — which is
+    what makes a bounded decision cache effective between drift steps.
+
+    Deterministic in ``seed``: the same ``(n, seed, ...)`` always
+    yields the same stream, so benchmark runs are comparable.
+    """
+    if steps < 1:
+        raise ValueError(f"steps must be >= 1, got {steps}")
+    if drift_every < 1:
+        raise ValueError(f"drift_every must be >= 1, got {drift_every}")
+    sb = synthetic_batch(n_shapes, seed=seed)
+    shapes = [
+        GemmShape(int(sb.m[i]), int(sb.n[i]), int(sb.k[i]),
+                  int(sb.dtype_bytes[i]))
+        for i in range(n_shapes)
+    ]
+    phase = -1
+    pool: list[StepProfile] = []
+    pick_rng = np.random.default_rng(seed + 2)
+    for i in range(n):
+        p = i // drift_every
+        if p != phase:
+            phase = p
+            # Per-phase profile family: hot step rotates with the phase.
+            alpha = np.full(steps, concentration)
+            alpha[phase % steps] *= hot_boost
+            prng = np.random.default_rng((seed, phase))
+            pool = []
+            for j in range(n_profiles):
+                frac = prng.dirichlet(alpha)
+                raw = StepProfile.from_weights(
+                    frac, name=f"drift{phase}.{j}"
+                )
+                counts = raw.quantize(quantum)
+                if sum(counts) != quantum or not any(counts):
+                    counts = (quantum,) + (0,) * (steps - 1)
+                pool.append(
+                    StepProfile(
+                        tuple(c / quantum for c in counts),
+                        name=f"drift{phase}.{j}",
+                    )
+                )
+        yield ServeRequest(
+            gemm=shapes[int(pick_rng.integers(n_shapes))],
+            profile=pool[int(pick_rng.integers(len(pool)))],
+            phase=phase,
+            index=i,
+        )
+
+
+__all__ = [
+    "synthetic_batch",
+    "synthetic_ragged_batch",
+    "ServeRequest",
+    "drifting_request_stream",
+]

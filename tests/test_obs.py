@@ -137,6 +137,72 @@ class TestMetrics:
         assert snap["counters"]["gate/agree"] == round(rate * 2)
 
 
+class TestHistogramReservoir:
+    """The bounded-growth + thread-safety contract of Histogram."""
+
+    def test_exact_below_reservoir_size(self):
+        h = obs_metrics.Histogram()
+        vals = [float(i) for i in range(1000)]
+        for v in vals:
+            h.observe(v)
+        assert h.count == 1000
+        assert h.total == sum(vals)
+        assert sorted(h.values) == vals  # nothing sampled away yet
+        assert h.percentile(0.5) == 499.0  # nearest-rank, exact
+
+    def test_bounded_above_reservoir_size(self):
+        r = obs_metrics.RESERVOIR_SIZE
+        h = obs_metrics.Histogram(seed=1)
+        n = 3 * r
+        for i in range(n):
+            h.observe(i / n)  # uniform on [0, 1)
+        # count/sum/min/max exact, memory bounded.
+        assert h.count == n
+        assert len(h.values) == r
+        assert abs(h.total - sum(i / n for i in range(n))) < 1e-6
+        j = h.to_json()
+        assert j["count"] == n
+        assert j["min"] == 0.0 and j["max"] == (n - 1) / n
+        # Percentiles carry the documented ~1/sqrt(K) sampling error;
+        # 0.05 is ~6 sigma for K=4096 — loose enough to never flake,
+        # tight enough to catch a broken reservoir (e.g. keeping only
+        # the newest samples would push p50 toward the tail).
+        assert abs(j["p50"] - 0.5) < 0.05
+        assert abs(j["p95"] - 0.95) < 0.05
+
+    def test_concurrent_observe_loses_nothing(self):
+        import threading
+
+        h = obs_metrics.Histogram()
+        c = obs_metrics.Counter()
+        n_threads, iters = 8, 20_000
+
+        def worker():
+            for _ in range(iters):
+                c.inc()
+                h.observe(1.0)
+
+        threads = [
+            threading.Thread(target=worker) for _ in range(n_threads)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        total = n_threads * iters
+        assert c.value == total          # the bare += would lose counts
+        assert h.count == total
+        assert h.total == float(total)   # every observation summed
+        assert len(h.values) == obs_metrics.RESERVOIR_SIZE
+
+    def test_empty_histogram_snapshot(self):
+        h = obs_metrics.Histogram()
+        assert h.percentile(0.5) == 0.0
+        j = h.to_json()
+        assert j == {"count": 0, "sum": 0.0, "min": 0.0, "max": 0.0,
+                     "p50": 0.0, "p95": 0.0}
+
+
 class TestTimeline:
     @pytest.mark.parametrize("schedule", list(STUDIED))
     def test_lanes_integrate_to_simulate(self, schedule):

@@ -1,0 +1,502 @@
+"""Online-adaptation serving tier (repro.serve.adapt) + the
+concurrency/growth fixes it exposed.
+
+Contracts under test:
+
+* :class:`DecisionCache` — LRU+TTL semantics under an injected clock:
+  expiry forces a re-rank, the size bound actually bounds, recency is
+  refreshed on hit.
+* :class:`ExplorationPolicy` / :class:`TokenBucket` — the measured tier
+  fires only when the analytic top-2 gap is inside the model's error
+  bar AND the budget allows; the grant count is bounded by
+  burst + rate * time no matter the traffic.
+* :class:`AdaptiveTier` — tier routing (memory / analytic / measured /
+  heuristic-never-raise), TTL-driven adaptation, persistent warm-start,
+  write-behind persistence, and gate re-fit from live traffic.
+* The threaded stress contract: request threads hammering
+  ``AdaptiveTier.pick`` + ``Autotuner.pick`` + metrics while the
+  background re-fit thread swaps gates and flushes the cache must lose
+  no counter increments, no cache entries, and raise nothing.
+* ``DecodeEngine`` — the zero-token early return executes zero jitted
+  steps, and the adapt hook records a per-batch decision.
+* ``drifting_request_stream`` — deterministic, quantized, phase-rotating.
+"""
+
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.autotune.cache import AutotuneCache
+from repro.autotune.tuner import Autotuner, TuneKey
+from repro.core.machine import TPU_V5E
+from repro.core.workload import GemmShape, StepProfile
+from repro.obs import metrics as obs_metrics
+from repro.serve.adapt import (
+    AdaptConfig,
+    AdaptiveTier,
+    DecisionCache,
+    ExplorationPolicy,
+    TokenBucket,
+    simulated_measure_fn,
+)
+from repro.sweep.synth import ServeRequest, drifting_request_stream
+
+GEMM = GemmShape(16384, 16384, 32768, 2)
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def _tier(tmp_path, name="adapt.json", *, clock=None, config=None,
+          measure_fn=None):
+    tuner = Autotuner(
+        cache=AutotuneCache(path=str(tmp_path / name)),
+        backend="numpy",
+        persist="defer",
+    )
+    kw = {} if clock is None else {"clock": clock}
+    return AdaptiveTier(
+        tuner, machine=TPU_V5E, config=config or AdaptConfig(),
+        measure_fn=measure_fn, **kw,
+    )
+
+
+class TestDecisionCache:
+    def test_ttl_expiry_forces_miss(self):
+        clk = FakeClock()
+        c = DecisionCache(8, ttl_s=10.0, clock=clk)
+        c.put("k", "decision")
+        assert c.get("k") == "decision"
+        clk.advance(9.99)
+        assert c.get("k") == "decision"
+        clk.advance(0.02)
+        assert c.get("k") is None
+        assert c.expired == 1
+        assert len(c) == 0
+
+    def test_lru_bound_and_recency(self):
+        clk = FakeClock()
+        c = DecisionCache(3, ttl_s=100.0, clock=clk)
+        for k in "abc":
+            c.put(k, k.upper())
+        assert c.get("a") == "A"  # refresh a's recency
+        c.put("d", "D")           # evicts b, the least recent
+        assert c.evicted == 1
+        assert c.get("b") is None
+        assert all(c.get(k) for k in "acd")
+        assert len(c) == 3
+
+    def test_hit_refreshes_recency_not_freshness(self):
+        clk = FakeClock()
+        c = DecisionCache(8, ttl_s=10.0, clock=clk)
+        c.put("k", "v")
+        clk.advance(6.0)
+        assert c.get("k") == "v"   # hit at t=6 does NOT reset the TTL
+        clk.advance(6.0)
+        assert c.get("k") is None  # dead at t=12 regardless of the hit
+
+
+class TestTokenBucket:
+    def test_burst_then_refill(self):
+        clk = FakeClock()
+        b = TokenBucket(rate=1.0, burst=2.0, clock=clk)
+        assert b.try_take() and b.try_take()
+        assert not b.try_take()  # burst exhausted, clock frozen
+        clk.advance(1.0)
+        assert b.try_take()
+        assert not b.try_take()
+
+    def test_refill_caps_at_burst(self):
+        clk = FakeClock()
+        b = TokenBucket(rate=100.0, burst=3.0, clock=clk)
+        clk.advance(60.0)
+        granted = sum(b.try_take() for _ in range(10))
+        assert granted == 3
+
+
+class TestExplorationPolicy:
+    def _policy(self, clk, **kw):
+        cfg = AdaptConfig(
+            explore_rate=kw.pop("rate", 0.0),
+            explore_burst=kw.pop("burst", 2.0),
+            default_sigma=kw.pop("sigma", 0.10),
+            **kw,
+        )
+        return ExplorationPolicy(cfg, clock=clk)
+
+    def test_confident_gap_never_measures(self):
+        from repro.core.schedule_types import Schedule
+
+        p = self._policy(FakeClock())
+        ranked = [(Schedule.SERIAL, 1.0), (Schedule.UNIFORM_FUSED_1D, 2.0)]
+        assert not p.should_measure(ranked)
+        assert p.ambiguous == 0
+
+    def test_ambiguous_gap_bounded_by_budget(self):
+        from repro.core.schedule_types import Schedule
+
+        p = self._policy(FakeClock(), burst=2.0)
+        ranked = [(Schedule.SERIAL, 1.00), (Schedule.UNIFORM_FUSED_1D, 1.01)]
+        grants = [p.should_measure(ranked) for _ in range(6)]
+        assert grants == [True, True, False, False, False, False]
+        assert (p.ambiguous, p.granted, p.denied) == (6, 2, 4)
+
+    def test_sigma_swap_widens_the_bar(self):
+        from repro.core.schedule_types import Schedule
+
+        p = self._policy(FakeClock(), burst=10.0)
+        ranked = [(Schedule.SERIAL, 1.0), (Schedule.UNIFORM_FUSED_1D, 1.5)]
+        assert not p.should_measure(ranked)   # gap >> 2 * 0.10
+        p.set_sigma(5.0)                       # a terrible model
+        assert p.should_measure(ranked)        # now inside the bar
+
+    def test_degenerate_rankings(self):
+        from repro.core.schedule_types import Schedule
+
+        p = self._policy(FakeClock())
+        assert not p.should_measure([])
+        assert not p.should_measure([(Schedule.SERIAL, 1.0)])
+        assert not p.should_measure(
+            [(Schedule.SERIAL, 0.0), (Schedule.UNIFORM_FUSED_1D, 0.0)]
+        )
+
+
+class TestAdaptiveTier:
+    def test_memory_tier_then_ttl_rerank(self, tmp_path):
+        clk = FakeClock()
+        tier = _tier(tmp_path, clock=clk, config=AdaptConfig(ttl_s=60.0))
+        reg = obs_metrics.get_metrics()
+        d1 = tier.pick(GEMM)
+        d2 = tier.pick(GEMM)
+        assert d1.schedule == d2.schedule
+        assert reg.counter("serve/adapt.pick.analytic").value == 1
+        assert reg.counter("serve/adapt.pick.memory").value == 1
+        clk.advance(61.0)
+        tier.pick(GEMM)
+        assert reg.counter("serve/adapt.pick.analytic").value == 2
+        assert tier.cache.expired == 1
+        assert reg.counter("serve/adapt.decisions").value == 3
+
+    def test_never_raises_falls_back_to_heuristic(self, tmp_path,
+                                                  monkeypatch):
+        tier = _tier(tmp_path)
+
+        def boom(*a, **kw):
+            raise RuntimeError("engine down")
+
+        monkeypatch.setattr(tier.tuner, "executable_ranking", boom)
+        dec = tier.pick(GEMM)
+        assert dec.source == "heuristic"
+        reg = obs_metrics.get_metrics()
+        assert reg.counter("serve/adapt.pick.heuristic").value == 1
+        # Un-cached: a healthy pick re-ranks instead of serving the
+        # degraded answer from memory.
+        monkeypatch.undo()
+        assert tier.pick(GEMM).source == "analytic"
+
+    def test_warm_start_from_persistent_store(self, tmp_path):
+        tier1 = _tier(tmp_path, "shared.json")
+        gemms = [GEMM, GemmShape(8192, 8192, 16384, 2)]
+        for g in gemms:
+            tier1.pick(g)
+        tier1.tuner.cache.flush()
+
+        reg = obs_metrics.get_metrics()
+        before = reg.counter("serve/adapt.pick.analytic").value
+        tier2 = _tier(tmp_path, "shared.json")
+        assert reg.counter("serve/adapt.warm_start").value == len(gemms)
+        for g in gemms:
+            assert tier2.pick(g).schedule == tier1.pick(g).schedule
+        # Every tier2 pick was a memory hit off the warm start.
+        assert reg.counter("serve/adapt.pick.analytic").value == before
+
+    def test_write_behind_defers_disk_io(self, tmp_path):
+        tier = _tier(tmp_path, "defer.json")
+        tier.pick(GEMM)
+        path = tier.tuner.cache.path
+        assert tier.tuner.cache.dirty
+        assert not os.path.exists(path)  # the hot path never wrote
+        tier.stop()                      # stop() flushes
+        assert not tier.tuner.cache.dirty
+        fresh = AutotuneCache(path=path)
+        key = str(TuneKey.for_gemm(GEMM, TPU_V5E, None))
+        assert key in fresh.decision_entries()
+
+    def test_measured_tier_budget_and_audit(self, tmp_path):
+        from repro.obs import audit as obs_audit
+
+        log_path = tmp_path / "audit.jsonl"
+        obs_audit.enable_audit(str(log_path))
+        clk = FakeClock()
+        cfg = AdaptConfig(explore_rate=0.0, explore_burst=3.0)
+        tier = _tier(
+            tmp_path, clock=clk, config=cfg,
+            measure_fn=simulated_measure_fn(TPU_V5E, seed=0),
+        )
+        tier.policy.set_sigma(10.0)  # every top-2 gap is "ambiguous"
+        gemms = [
+            GemmShape(1024 * 8 * (i + 1), 8192, 8192, 2) for i in range(8)
+        ]
+        decisions = [tier.pick(g) for g in gemms]
+        measured = [d for d in decisions if d.source == "measured"]
+        # Frozen clock + rate 0: the burst is the whole budget.
+        assert len(measured) == 3
+        assert tier.policy.granted == 3
+        assert tier.policy.denied == 5
+        reg = obs_metrics.get_metrics()
+        assert reg.counter("serve/adapt.measures").value == 3
+        recs = [
+            __import__("json").loads(line)
+            for line in log_path.read_text().splitlines()
+        ]
+        assert sum(r["kind"] == "adapt_measure" for r in recs) == 3
+
+    def test_pick_for_requests_load_digest(self, tmp_path):
+        from repro.serve.engine import Request
+
+        tier = _tier(tmp_path)
+
+        class Cfg:
+            d_model, d_ff = 4096, 16384
+
+        reqs = [
+            Request(np.zeros(8, np.int32), max_new_tokens=24),
+            Request(np.zeros(16, np.int32), max_new_tokens=16),
+        ]
+        dec = tier.pick_for_requests(reqs, Cfg)
+        assert dec.key is not None
+        # Same load *shape* at different absolute scale shares the key.
+        reqs2 = [
+            Request(np.zeros(16, np.int32), max_new_tokens=48),
+            Request(np.zeros(32, np.int32), max_new_tokens=32),
+        ]
+        reg = obs_metrics.get_metrics()
+        before = reg.counter("serve/adapt.pick.memory").value
+        tier.pick_for_requests(reqs2, Cfg)
+        # 2x the tokens changes the GEMM M, so keys differ; but a
+        # single request always collapses to the uniform profile.
+        one = tier.pick_for_requests(
+            [Request(np.zeros(8, np.int32), max_new_tokens=24)], Cfg
+        )
+        assert "reqload" not in (one.key or "")
+        assert reg.counter("serve/adapt.pick.memory").value == before
+
+    def test_refit_deploys_gate_and_tracks_agreement(self, tmp_path):
+        cfg = AdaptConfig(refit_min_picks=64, buffer_size=512,
+                          fit_min_records=10 ** 9)
+        tier = _tier(tmp_path, config=cfg)
+        assert tier.refit_now().get("gate_agreement") is None  # too few
+        reqs = list(
+            drifting_request_stream(200, seed=0, drift_every=1000)
+        )
+        for r in reqs:
+            tier.pick(r.gemm, profile=r.profile)
+        rep = tier.refit_now()
+        assert tier.gate_version == 1
+        assert tier.tuner.gate is not None
+        assert 0.0 < rep["gate_agreement"] <= 1.0
+        assert tier.last_agreement == rep["gate_agreement"]
+        assert rep["flushed"]
+        # The probe scores the deployed gate on held-out traffic.
+        held_out = [(r.gemm, r.profile) for r in reqs[:64]]
+        ag = tier.agreement_probe(held_out)
+        assert 0.0 < ag <= 1.0
+        # Drift + another re-fit swaps a new gate in.
+        for r in drifting_request_stream(200, seed=5, drift_every=50):
+            tier.pick(r.gemm, profile=r.profile)
+        tier.refit_now()
+        assert tier.gate_version == 2
+
+    def test_stats_surface(self, tmp_path):
+        tier = _tier(tmp_path)
+        tier.pick(GEMM)
+        s = tier.stats()
+        assert s["cache_len"] == 1
+        assert s["persistent_dirty"] is True
+        assert set(s) >= {
+            "cache_expired", "cache_evicted", "gate_version",
+            "last_agreement", "sigma", "explore_ambiguous",
+            "explore_granted", "explore_denied",
+        }
+
+
+class TestThreadedStress:
+    def test_picks_metrics_and_flushes_under_contention(self, tmp_path):
+        """N request threads hammer AdaptiveTier.pick + Autotuner.pick +
+        a shared counter while the background re-fit thread swaps gates
+        and flushes the write-behind cache.  Nothing may be lost."""
+        cache = AutotuneCache(path=str(tmp_path / "stress.json"))
+        tuner = Autotuner(cache=cache, backend="numpy", persist="defer")
+        cfg = AdaptConfig(
+            ttl_s=0.05,              # force mid-run TTL re-ranks
+            refit_interval_s=0.01,   # re-fit as hot as possible
+            refit_min_picks=32,
+            buffer_size=256,
+            fit_min_records=10 ** 9,  # gate refits only (numpy-fast)
+        )
+        tier = AdaptiveTier(tuner, machine=TPU_V5E, config=cfg)
+        gemms = [
+            GemmShape(1024 * 8 * (i + 1), 8192, 8192, 2)
+            for i in range(12)
+        ]
+        n_threads, iters = 8, 150
+        reg = obs_metrics.get_metrics()
+        shared = reg.counter("test/stress")
+        errors = []
+
+        def worker(tid):
+            try:
+                for i in range(iters):
+                    g = gemms[(tid + i) % len(gemms)]
+                    if tid % 2:
+                        tier.pick(g)
+                    else:
+                        tuner.pick(g, TPU_V5E)
+                    shared.inc()
+            except BaseException as e:  # noqa: BLE001 - the assertion
+                errors.append(e)
+
+        threads = [
+            threading.Thread(target=worker, args=(t,))
+            for t in range(n_threads)
+        ]
+        with tier:  # background re-fit thread live
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+        assert errors == []
+        # No lost counter increments: the shared counter and the tier's
+        # own accounting are both exact.
+        assert shared.value == n_threads * iters
+        tier_picks = (n_threads // 2) * iters
+        assert reg.counter("serve/adapt.decisions").value == tier_picks
+        assert (
+            reg.histogram("serve/adapt.pick_seconds").count == tier_picks
+        )
+        # No hidden exceptions: the never-raise path would have routed
+        # failures to the heuristic tier.
+        assert reg.counter("serve/adapt.pick.heuristic").value == 0
+        assert reg.counter("tuner/pick.heuristic").value == 0
+        # No lost cache entries: every key survived the concurrent
+        # defer-puts + background flushes, in memory and on disk.
+        tier.stop()
+        assert not cache.dirty
+        on_disk = AutotuneCache(path=cache.path).decision_entries()
+        for g in gemms:
+            key = str(TuneKey.for_gemm(g, TPU_V5E, None))
+            assert key in cache.decision_entries()
+            assert key in on_disk
+        # The re-fit thread actually did its job while all that ran.
+        assert tier.gate_version >= 1
+
+
+class TestDecodeEngineFixes:
+    @pytest.fixture(scope="class")
+    def engine_parts(self):
+        import jax
+
+        from repro.configs import get_config
+        from repro.models.model import build_model
+
+        cfg = get_config("smollm-360m").reduced()
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        return cfg, params
+
+    def test_zero_token_batch_executes_zero_steps(self, engine_parts):
+        from repro.serve.engine import DecodeEngine, Request
+
+        cfg, params = engine_parts
+        eng = DecodeEngine(cfg, params, batch_size=2, cache_len=32)
+        reqs = [
+            Request(np.asarray([1, 2, 3], np.int32), max_new_tokens=0),
+            Request(np.asarray([4], np.int32), max_new_tokens=0),
+        ]
+        out = eng.run(reqs)
+        assert all(r.done and r.out == [] for r in out)
+        reg = obs_metrics.get_metrics()
+        assert reg.counter("serve/steps").value == 0
+        assert reg.counter("serve/tokens").value == 0
+        assert eng.run([]) == []  # empty batch: same early return
+
+    def test_adapt_hook_records_batch_decision(self, engine_parts):
+        from repro.serve.engine import DecodeEngine, Request
+
+        cfg, params = engine_parts
+
+        class FakeTier:
+            calls = 0
+
+            def pick_for_requests(self, requests, c):
+                FakeTier.calls += 1
+                return ("sentinel", len(requests))
+
+        eng = DecodeEngine(
+            cfg, params, batch_size=2, cache_len=32, adapt=FakeTier()
+        )
+        reqs = [Request(np.asarray([1, 2], np.int32), max_new_tokens=2)]
+        eng.run(reqs)
+        assert eng.last_decision == ("sentinel", 1)
+        assert FakeTier.calls == 1
+        assert len(reqs[0].out) == 2
+        # Zero-token batches return before consulting the tier.
+        eng.run([Request(np.asarray([1], np.int32), max_new_tokens=0)])
+        assert FakeTier.calls == 1
+
+
+class TestDriftingStream:
+    def test_deterministic_in_seed(self):
+        a = list(drifting_request_stream(300, seed=7, drift_every=100))
+        b = list(drifting_request_stream(300, seed=7, drift_every=100))
+        assert a == b
+        c = list(drifting_request_stream(300, seed=8, drift_every=100))
+        assert a != c
+
+    def test_phases_and_quantization(self):
+        reqs = list(drifting_request_stream(400, seed=0, drift_every=100,
+                                            quantum=64))
+        assert [r.phase for r in reqs] == [i // 100 for i in range(400)]
+        for r in reqs:
+            assert isinstance(r, ServeRequest)
+            fr = np.asarray(r.profile.fractions)
+            assert abs(fr.sum() - 1.0) < 1e-9
+            # Quantized to 64ths: digests repeat within a phase.
+            np.testing.assert_allclose(fr * 64, np.round(fr * 64),
+                                       atol=1e-9)
+        for phase in range(4):
+            digs = {
+                r.profile.digest()
+                for r in reqs[phase * 100:(phase + 1) * 100]
+            }
+            assert len(digs) <= 8  # n_profiles bounds the working set
+
+    def test_hot_step_rotates_with_phase(self):
+        reqs = list(drifting_request_stream(
+            600, seed=0, drift_every=200, steps=3, n_profiles=4,
+            concentration=0.2, hot_boost=50.0,
+        ))
+        hot = []
+        for phase in range(3):
+            chunk = [r for r in reqs if r.phase == phase]
+            mean = np.mean(
+                [np.asarray(r.profile.fractions) for r in chunk], axis=0
+            )
+            hot.append(int(np.argmax(mean)))
+        assert hot == [0, 1, 2]
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            list(drifting_request_stream(10, steps=0))
+        with pytest.raises(ValueError):
+            list(drifting_request_stream(10, drift_every=0))
