@@ -1,0 +1,99 @@
+"""Kernel-variant autotuning tranche: the enumerate->prune->measure->
+refit->promote loop (``repro.tune``).
+
+Four sections:
+
+  * **space**: enumerated vs feasible variant counts per kernel on
+    MI300X (the pruner's VMEM / semaphore / granule budgets at work).
+  * **search**: us per candidate through ``search_kernel_variants``
+    (cost-model runner, local in-memory tuner) — the gated throughput
+    key; a regression here slows every cold autotune pass.
+  * **speedup**: geometric-mean best-vs-default speedup across the
+    three kernels (>1 means the search beats the shipped default).
+  * **fit_mse**: log-time MSE of ``fit_machine`` on the variant-keyed
+    cache records the search just wrote (derived shows loss0 -> loss).
+
+Everything runs against a throwaway cache (``persist=False`` +
+temp-dir path), so benchmarking never touches the user's decision
+store or promotion artifacts.
+"""
+
+import math
+import os
+import tempfile
+import time
+
+from repro.core import MI300X
+from repro.core.workload import GemmShape
+
+from benchmarks.common import row
+
+_GEMMS = (
+    GemmShape(4096, 4096, 4096, 2),
+    GemmShape(8192, 4096, 2048, 2),
+)
+
+
+def run() -> list[str]:
+    from repro.autotune import Autotuner, AutotuneCache
+    from repro.learn import fit_machine, variant_records_from_cache
+    from repro.tune import (
+        KERNELS,
+        enumerate_variants,
+        prune_variants,
+        reset_variants,
+        search_kernel_variants,
+    )
+
+    tmp = tempfile.mkdtemp(prefix="bench_kernel_tune_")
+    tuner = Autotuner(
+        cache=AutotuneCache(path=os.path.join(tmp, "tune.json")),
+        persist=False,
+    )
+
+    n_enum = n_feas = 0
+    for kernel in KERNELS:
+        cands = enumerate_variants(kernel, MI300X, group=MI300X.group)
+        feas, _ = prune_variants(
+            cands, _GEMMS[0], MI300X, group=MI300X.group
+        )
+        n_enum += len(cands)
+        n_feas += len(feas)
+
+    t0 = time.perf_counter()
+    results = [
+        search_kernel_variants(
+            kernel, gemm, MI300X, group=MI300X.group, tuner=tuner
+        )
+        for kernel in KERNELS
+        for gemm in _GEMMS
+    ]
+    t_search = time.perf_counter() - t0
+    n_cands = sum(r.n_enumerated for r in results)
+    speedup = math.exp(
+        sum(math.log(r.speedup) for r in results) / len(results)
+    )
+
+    recs = variant_records_from_cache(tuner.cache, MI300X.name)
+    t0 = time.perf_counter()
+    fit = fit_machine(MI300X, recs, steps=60)
+    t_fit = time.perf_counter() - t0
+
+    # Promotions above were process-global; a benchmark must not leak
+    # winners into whatever runs after it in the same interpreter.
+    reset_variants()
+
+    return [
+        row("kerneltune/space", 0.0,
+            f"{n_enum} enumerated -> {n_feas} feasible across "
+            f"{len(KERNELS)} kernels on {MI300X.name} g={MI300X.group}"),
+        row("kerneltune/search", 1e6 * t_search / n_cands,
+            f"{len(results)} searches / {n_cands} candidates in "
+            f"{t_search:.3f}s (cost-model runner)"),
+        row("kerneltune/speedup", speedup,
+            f"geomean best-vs-default over {len(results)} "
+            f"(kernel, gemm) searches"),
+        row("kerneltune/fit_mse", fit.loss,
+            f"{len(recs)} variant records, loss {fit.loss0:.4g} -> "
+            f"{fit.loss:.4g} in {t_fit:.2f}s"),
+    ]

@@ -41,6 +41,7 @@ from repro.core.engine import get_engine
 from repro.core.workload import ragged_scenario_grid
 from repro.learn import (
     gate_accuracy,
+    refine_gate,
     scenario_features,
     sweep_stats,
     train_gate_from_stats,
@@ -104,6 +105,17 @@ def _run() -> list[str]:
     gate = _train(machines)
     t_train = time.perf_counter() - t0
 
+    # Regret-weighted threshold refinement on the (ragged) training
+    # distribution: per-leaf sub-bin search between the coarse candidate
+    # thresholds.  Held-out accuracy below tells whether the finer
+    # thresholds generalize.
+    grid_refit = get_engine("numpy").evaluate(rb, machines)
+    t0 = time.perf_counter()
+    refined = refine_gate(gate, grid_refit)
+    t_refine = time.perf_counter() - t0
+    ref_info = refined.meta["refine"]
+    refit_points = _TRAIN_N * len(machines)
+
     # Held-out skewed EP family (the bench_ragged grid).
     base = [s for s in TABLE_I if s.parallelism == "EP"]
     base += synthetic_scenarios(12)
@@ -116,6 +128,7 @@ def _run() -> list[str]:
     )
     skew_scalar = 100 * gate_accuracy(grid_skew)
     skew_learned = 100 * gate_accuracy(grid_skew, gate)
+    skew_refined = 100 * gate_accuracy(grid_skew, refined)
 
     # PR-1 uniform design-space grid (~720 x 8): the do-no-harm guard.
     grid_unif = get_engine("numpy").evaluate(
@@ -123,6 +136,7 @@ def _run() -> list[str]:
     )
     unif_scalar = 100 * gate_accuracy(grid_unif)
     unif_learned = 100 * gate_accuracy(grid_unif, gate)
+    unif_refined = 100 * gate_accuracy(grid_unif, refined)
 
     n_skew = grid_skew.total.shape[1] * grid_skew.total.shape[2]
     n_unif = grid_unif.total.shape[1] * grid_unif.total.shape[2]
@@ -132,14 +146,24 @@ def _run() -> list[str]:
         row("learn/train", 1e6 * t_train / train_points,
             f"{train_points} points via {_SHARDS}-shard reduce sweeps, "
             f"{gate.n_leaves} leaves, {t_train:.2f}s"),
+        row("learn/refine", 1e6 * t_refine / refit_points,
+            f"{refit_points}-point refit grid, regret_q "
+            f"{ref_info['regret_q_before']} -> "
+            f"{ref_info['regret_q_after']}, {t_refine:.2f}s"),
         row("learn/within5_skewed", skew_learned,
             f"{skew_learned:.1f}% of {n_skew} held-out skewed points "
             f"(scalar gate: {skew_scalar:.1f}%)"),
         row("learn/within5_skewed_scalar", skew_scalar,
             "scalar-gate baseline on the same grid"),
+        row("learn/within5_skewed_refined", skew_refined,
+            f"refined-gate delta {skew_refined - skew_learned:+.2f} pts "
+            "vs coarse gate on the held-out skewed grid"),
         row("learn/within5_uniform", unif_learned,
             f"{unif_learned:.1f}% of {n_unif} uniform grid points "
             f"(scalar gate: {unif_scalar:.1f}%)"),
         row("learn/within5_uniform_scalar", unif_scalar,
             "scalar-gate baseline on the same grid"),
+        row("learn/within5_uniform_refined", unif_refined,
+            f"refined-gate delta {unif_refined - unif_learned:+.2f} pts "
+            "vs coarse gate on the uniform grid"),
     ]

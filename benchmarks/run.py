@@ -13,6 +13,7 @@ Prints ``name,us_per_call,derived`` CSV.  Figure mapping:
   device-resident mixed sweep     -> bench_sweep_device (--only sweepdevice)
   learned gate + calibration      -> bench_learn (--only learn)
   online-adaptation serving tier  -> bench_serve (--only serve)
+  kernel-variant autotuning       -> bench_kernel_tune (--only kerneltune)
 
 ``--json [PATH]`` additionally writes a machine-readable name ->
 us_per_call map (default ``BENCH_sweep.json``) so the perf trajectory is
@@ -48,6 +49,7 @@ THROUGHPUT_KEYS = (
     "learn/features",
     "learn/train",
     "serve/decisions_per_s",
+    "kerneltune/search",
 )
 # Keys whose value is an accuracy percentage (higher is better); the
 # guard fails if one drops more than ACCURACY_SLACK_PCT points below
@@ -56,7 +58,9 @@ THROUGHPUT_KEYS = (
 # re-recordings, not run-to-run noise.
 ACCURACY_KEYS = (
     "learn/within5_skewed",
+    "learn/within5_skewed_refined",
     "learn/within5_uniform",
+    "learn/within5_uniform_refined",
 )
 ACCURACY_SLACK_PCT = 2.0
 # >20% throughput drop == us_per_call growing beyond 1/0.8.
@@ -72,6 +76,7 @@ ONLY_ALIASES = {
     "sweepdevice": "bench_sweep_device",
     "obs": "bench_obs",
     "serve": "bench_serve",
+    "kerneltune": "bench_kernel_tune",
 }
 
 
@@ -139,6 +144,7 @@ def main() -> None:
         bench_dil_comm,
         bench_dil_gemm,
         bench_heuristic,
+        bench_kernel_tune,
         bench_learn,
         bench_obs,
         bench_proportions,
@@ -157,6 +163,7 @@ def main() -> None:
         bench_heuristic, bench_cpu_overlap, bench_arch_schedules,
         bench_sweep, bench_autotune, bench_ragged, bench_sweep_shard,
         bench_sweep_device, bench_learn, bench_obs, bench_serve,
+        bench_kernel_tune,
     ]
 
     ap = argparse.ArgumentParser(description=__doc__)

@@ -91,6 +91,19 @@ def main() -> None:
         help="pmap each owned shard over the local jax devices",
     )
     ap.add_argument(
+        "--use-fit", default=None, metavar="NAME",
+        help="evaluate through the fitted engine: load the persisted "
+        "sim-to-real fit artifact NAME (repro.learn.fit) and patch its "
+        "calibrated parameters into the matching machine lanes",
+    )
+    ap.add_argument(
+        "--train-gate", default=None, metavar="NAME",
+        help="reduce mode only: fold every shard grid into GateStats, "
+        "train a LearnedGate and persist it under artifact NAME — with "
+        "--use-fit this is the fit-then-retrain loop (the gate trains "
+        "against the calibrated machine model)",
+    )
+    ap.add_argument(
         "--out", default=None, metavar="PATH",
         help="append one JSON line per finished shard (stdout if unset)",
     )
@@ -116,6 +129,34 @@ def main() -> None:
         engine = MixedEngine(dtype=args.dtype)
     elif args.dtype != "float64":
         ap.error("--dtype other than float64 requires --backend mixed")
+
+    if args.use_fit:
+        if engine is not None:
+            ap.error("--use-fit is incompatible with --backend mixed")
+        from repro.learn import FittedEngine, load_fit
+
+        fit = load_fit(args.use_fit)
+        if fit is None:
+            ap.error(f"no persisted fit artifact {args.use_fit!r}")
+        engine = FittedEngine(fit)
+        print(
+            f"# fitted engine: {fit.machine} params "
+            f"{sorted(fit.fitted)} (loss {fit.loss0:.4g} -> "
+            f"{fit.loss:.4g})",
+            file=sys.stderr,
+        )
+
+    gate_stats = None
+    on_shard_grid = None
+    if args.train_gate:
+        if args.mode != "reduce":
+            ap.error("--train-gate requires --mode reduce")
+        from repro.learn import GateStats
+
+        gate_stats = GateStats.empty()
+
+        def on_shard_grid(grid, _summ) -> None:
+            gate_stats.update_from_grid(grid)
 
     if args.synth_device:
         from repro.sweep import device_batch, device_ragged_batch
@@ -156,6 +197,7 @@ def main() -> None:
         host_count=args.host_count,
         device_parallel=args.device_parallel,
         on_shard=emit,
+        on_shard_grid=on_shard_grid,
         overlap_dispatch=args.overlap_dispatch,
     )
     wall = time.perf_counter() - t0
@@ -183,6 +225,30 @@ def main() -> None:
     # enforces for bin edges).
     merged["dtype"] = args.dtype
     merged["synth"] = "device" if args.synth_device else "host"
+    if args.train_gate:
+        from repro.learn import save_gate, train_gate_from_stats
+
+        gate = train_gate_from_stats(
+            gate_stats,
+            meta={
+                "source": "scripts/sweep.py",
+                "engine": (
+                    f"fitted:{args.use_fit}" if args.use_fit
+                    else args.backend
+                ),
+            },
+        )
+        save_gate(gate, name=args.train_gate)
+        merged["gate"] = {
+            "name": args.train_gate,
+            "n_leaves": gate.n_leaves,
+            "trained_regret_q": gate.meta.get("trained_regret_q"),
+        }
+        print(
+            f"# trained gate {args.train_gate!r}: {gate.n_leaves} "
+            f"leaves over {gate_stats.n_points} points",
+            file=sys.stderr,
+        )
     # Total shard count of the deterministic plan: what the gather-side
     # aggregator (scripts/merge_sweep.py) checks completeness against.
     merged["plan_shards"] = len(res.plan.bounds)

@@ -50,6 +50,14 @@ class TuneKey:
     (:meth:`repro.core.workload.StepProfile.digest`): ``uG`` for the
     paper's uniform G-step split, a name+hash for skewed profiles.  Its
     arrival is the schema-v2 key change — see ``repro.autotune.cache``.
+
+    ``variant`` is the optional trailing kernel-variant segment
+    (:attr:`repro.tune.KernelVariant.key_segment`, ``v`` + digest).  A
+    non-empty variant makes the key an 8-segment *variant-timing* record
+    — per-variant measurements feeding ``repro.learn.fit`` — while the
+    7-segment keys stay the schedule-decision records every existing
+    consumer parses (they skip variant keys structurally: the extra
+    segment lands in the profile slot and fails the ``u\\d+`` filter).
     """
 
     machine: str
@@ -59,12 +67,14 @@ class TuneKey:
     k: int
     dtype_bytes: int
     profile: str = "uniform"
+    variant: str = ""
 
     def __str__(self) -> str:
-        return (
+        base = (
             f"{self.machine}/g{self.group}/m{self.m}/n{self.n}"
             f"/k{self.k}/b{self.dtype_bytes}/{self.profile}"
         )
+        return f"{base}/{self.variant}" if self.variant else base
 
     @classmethod
     def for_gemm(
@@ -73,8 +83,15 @@ class TuneKey:
         machine: MachineSpec,
         group: int | None = None,
         profile=None,
+        variant=None,
     ) -> "TuneKey":
         g = int(group if group is not None else machine.group)
+        if variant is None:
+            vseg = ""
+        elif isinstance(variant, str):
+            vseg = variant if variant.startswith("v") else "v" + variant
+        else:
+            vseg = variant.key_segment
         return cls(
             machine=machine.name,
             group=g,
@@ -83,6 +100,7 @@ class TuneKey:
             k=gemm.k,
             dtype_bytes=gemm.dtype_bytes,
             profile=f"u{g}" if profile is None else profile.digest(),
+            variant=vseg,
         )
 
 
@@ -532,6 +550,81 @@ class Autotuner:
             pass
         self._observe("measure", tkey, dec, time.perf_counter() - t0)
         return dec
+
+    def measure_variants(
+        self,
+        kernel: str,
+        gemm: GemmShape,
+        variants,
+        *,
+        machine: MachineSpec | None = None,
+        group: int | None = None,
+        profile=None,
+        runner=None,
+        iters: int = 1,
+    ) -> list[tuple]:
+        """Time kernel variants and persist variant-keyed records.
+
+        ``runner(variant) -> seconds`` measures for real (the caller owns
+        the mesh / sharded operands); with ``runner=None`` the
+        deterministic discrete-event cost model (:mod:`repro.tune.cost`)
+        stands in — the interpret-mode CI substitute, still
+        variant-sensitive through wave quantization and the buffer-depth
+        recurrence.
+
+        Every variant's time lands at the 8-segment variant-keyed
+        :class:`TuneKey` with the kernel name, variant digest, and (for
+        skewed profiles) the raw step fractions in the entry, so
+        ``repro.learn.fit.variant_records_from_cache`` can rebuild the
+        fit objective — including the ragged one — from the cache alone.
+        Returns ``[(variant, seconds), ...]`` in input order.
+        """
+        from repro.tune.cost import variant_cost
+        from repro.tune.variants import KERNEL_SCHEDULE
+
+        machine = machine or TPU_V5E
+        g = int(group if group is not None else machine.group)
+        sched = KERNEL_SCHEDULE[kernel]
+        out: list[tuple] = []
+        for variant in variants:
+            if runner is not None:
+                best = float("inf")
+                for _ in range(max(1, iters)):
+                    best = min(best, float(runner(variant)))
+                source = "measured"
+            else:
+                best = float(
+                    variant_cost(
+                        variant, gemm, machine, group=g, profile=profile
+                    )
+                )
+                source = "variant-model"
+            key = str(
+                TuneKey.for_gemm(
+                    gemm, machine, g, profile=profile, variant=variant
+                )
+            )
+            entry = {
+                "schedule": sched.value,
+                "source": source,
+                "model_total_s": None if runner is not None else best,
+                "measured_total_s": best,
+                "kernel": kernel,
+                "variant": variant.digest(),
+            }
+            if profile is not None:
+                entry["profile_frac"] = [
+                    float(f) for f in profile.trimmed().fractions
+                ]
+            self.cache.put(key, entry, persist=self.persist)
+            out.append((variant, best))
+        try:
+            _metrics.get_metrics().counter("tuner/measure_variants").inc(
+                len(out)
+            )
+        except Exception:  # pragma: no cover
+            pass
+        return out
 
     # -- bookkeeping ----------------------------------------------------
 

@@ -64,6 +64,14 @@ class MachineSpec:
     # shorter than this lose a large fraction of peak (why *unfused*
     # per-chunk GEMMs hurt on small operators).
     kernel_ramp: float = 20.0e-6
+    # DMA-engine resource budgets, consumed by the kernel-variant
+    # feasibility pruner (repro.tune.prune), not by the analytic model:
+    # completion-semaphore slots one kernel may allocate, regular
+    # (flow-control) semaphore slots, and the minimum granule one DMA
+    # descriptor moves efficiently (transfers must be a whole multiple).
+    dma_sem_slots: int = 128
+    reg_sem_slots: int = 32
+    dma_granule: int = 512
 
     # ---- derived ------------------------------------------------------
     @property

@@ -44,11 +44,18 @@ def chunked_matmul(
     block_n: int = 128,
     block_k: int = 128,
     interpret: bool = False,
+    variant=None,
 ) -> jax.Array:
     """out = x @ w with K accumulated in VMEM across grid steps.
 
     x: (M, K); w: (K, N) -> (M, N).  All dims must divide their blocks.
+    A :class:`repro.tune.KernelVariant` passed as ``variant`` overrides
+    the three block arguments with its tile.
     """
+    if variant is not None:
+        block_m = int(variant.block_m)
+        block_n = int(variant.block_n)
+        block_k = int(variant.block_k)
     m, k = x.shape
     k2, n = w.shape
     assert k == k2, (x.shape, w.shape)

@@ -39,6 +39,7 @@ from repro.compat import (
 def _exchange_kernel(
     group: int,
     axis_name: str,
+    reverse: bool,
     chunk_ref,
     out_ref,
     send_sems,
@@ -50,6 +51,10 @@ def _exchange_kernel(
     barrier every device owns the identical (g, m_c, K) gathered buffer.
     Traffic is fully symmetric: g-1 egress and g-1 ingress DMAs per device,
     saturating every ICI link of the axis — the paper's full-mesh argument.
+
+    ``reverse`` issues the egress DMAs to peers in descending offset
+    order; every device uses the same order, so each (sender, receiver,
+    semaphore index) pairing stays unique and results are unchanged.
     """
     me = lax.axis_index(axis_name)
 
@@ -61,7 +66,7 @@ def _exchange_kernel(
 
     copies = []
     for i in range(1, group):
-        peer = lax.rem(me + i, group)
+        peer = lax.rem(me + (group - i if reverse else i), group)
         device_id, id_type = remote_device_id(peer)
         rc = pltpu.make_async_remote_copy(
             src_ref=chunk_ref,
@@ -89,6 +94,7 @@ def a2a_chunk_exchange(
     axis_name: str,
     group: int,
     interpret: bool = False,
+    reverse: bool = False,
 ) -> jax.Array:
     """One FiCCO exchange step: (m_c, K) chunk -> (g, m_c, K) gathered.
 
@@ -96,7 +102,7 @@ def a2a_chunk_exchange(
     devices.  Equivalent to ``lax.all_gather(chunk, axis_name, axis=0)``
     but executed entirely by the ICI DMA engines from a single kernel.
     """
-    kernel = functools.partial(_exchange_kernel, group, axis_name)
+    kernel = functools.partial(_exchange_kernel, group, axis_name, reverse)
     return pl.pallas_call(
         kernel,
         out_shape=jax.ShapeDtypeStruct((group, *chunk.shape), chunk.dtype),
@@ -119,6 +125,7 @@ def ficco_uniform_fused_1d_dma(
     *,
     axis_name: str,
     interpret: bool = False,
+    variant=None,
 ) -> jax.Array:
     """uniform-fused-1D with DMA-offloaded communication.
 
@@ -126,20 +133,61 @@ def ficco_uniform_fused_1d_dma(
     standard XLA GEMM on the gathered step buffer (compute) — library GEMMs
     untouched, exactly the paper's realization strategy (§VI-A).  XLA's
     scheduler overlaps step s+1's kernel DMAs with step s's matmul.
+
+    ``variant`` (a :class:`repro.tune.KernelVariant`) picks the chunk
+    count, the step-GEMM tile (routed through
+    :func:`repro.kernels.chunked_gemm.chunked_matmul` with a full-K
+    contraction, so row dots — and results — are unchanged), and the DMA
+    dispatch order; ``None`` resolves the promoted default from
+    :mod:`repro.tune.registry`.
     """
     g = axis_size(axis_name)
     m_s, k = x.shape
     n_local = w.shape[1]
-    m_c = m_s // g
-    chunks = x.reshape(g, m_c, k)
+    if variant is None:
+        from repro.tune.registry import resolve_variant
+
+        variant = resolve_variant("dma_exchange", group=g)
+    steps = int(variant.chunks)
+    if m_s % steps:
+        steps = g  # promoted cut doesn't divide this shard; classic cut
+    m_c = m_s // steps
+    reverse = variant.dispatch_order == "reverse"
+    chunks = x.reshape(steps, m_c, k)
+    rows = g * m_c
+    # Tile the step GEMM only when the variant's blocks divide it evenly;
+    # K stays un-blocked so each output row remains one full-K dot.
+    blocked = (
+        rows % variant.block_m == 0
+        and n_local % variant.block_n == 0
+        and (variant.block_m < rows or variant.block_n < n_local)
+    )
     out = jnp.zeros((g * m_s, n_local), dtype=jnp.result_type(x, w))
-    for s in range(g):
+    order = list(range(steps))
+    if reverse:
+        order.reverse()
+    for s in order:
         gathered = a2a_chunk_exchange(
-            chunks[s], axis_name=axis_name, group=g, interpret=interpret
+            chunks[s],
+            axis_name=axis_name,
+            group=g,
+            interpret=interpret,
+            reverse=reverse,
         )
-        step_out = (gathered.reshape(g * m_c, k) @ w).reshape(
-            g, m_c, n_local
-        )
+        flat = gathered.reshape(rows, k)
+        if blocked:
+            from repro.kernels.chunked_gemm import chunked_matmul
+
+            step_out = chunked_matmul(
+                flat,
+                w,
+                block_m=variant.block_m,
+                block_n=variant.block_n,
+                block_k=k,
+                interpret=interpret,
+            ).reshape(g, m_c, n_local)
+        else:
+            step_out = (flat @ w).reshape(g, m_c, n_local)
         for d in range(g):
             out = lax.dynamic_update_slice(
                 out, step_out[d].astype(out.dtype), (d * m_s + s * m_c, 0)

@@ -44,36 +44,47 @@ from repro.compat import (
 def _fused_kernel(
     group: int,
     axis_name: str,
+    steps: int,
+    depth: int,
+    reverse: bool,
     m_c: int,
     k: int,
     n_local: int,
-    x_ref,  # (g, m_c, K) local chunks, ANY/HBM
+    x_ref,  # (steps, m_c, K) local chunks, ANY/HBM
     w_ref,  # (K, n_local), ANY/HBM
-    o_ref,  # (g, g, m_c, n_local): [step, src] output blocks, ANY/HBM
-    step_bufs,  # VMEM (2, g, m_c, K): double-buffered gathered steps
+    o_ref,  # (steps, g, m_c, n_local): [step, src] output blocks, ANY/HBM
+    step_bufs,  # VMEM (depth, g, m_c, K): slot-buffered gathered steps
     w_vmem,  # VMEM (K, n_local)
-    out_vmem,  # VMEM (2, g, m_c, n_local): double-buffered egress staging
-    send_sems,  # DMA (2, g-1)
-    recv_sems,  # DMA (2, g)
-    out_sems,  # DMA (2,): per-slot output egress
-    ready_sems,  # REGULAR (2,): receiver->sender slot flow control
+    out_vmem,  # VMEM (depth, g, m_c, n_local): slot-buffered egress staging
+    send_sems,  # DMA (depth, g-1)
+    recv_sems,  # DMA (depth, g)
+    out_sems,  # DMA (depth,): per-slot output egress
+    ready_sems,  # REGULAR (depth,): receiver->sender slot flow control
 ):
     me = lax.axis_index(axis_name)
+
+    # Dispatch order: which chunk each pipeline position carries.  Output
+    # blocks are indexed by the chunk id, so reversing the issue order
+    # changes overlap, not results.
+    order = list(range(steps))
+    if reverse:
+        order.reverse()
 
     w_copy = pltpu.make_async_copy(w_ref, w_vmem, recv_sems.at[0, group - 1])
     w_copy.start()
 
-    def start_step(s: int, slot: int):
+    def start_step(s: int, slot: int, wait_slot: bool):
         """Send chunk s to all peers; receive into step_bufs[slot].
 
-        Flow control: a slot is reused every 2 steps.  Before pushing step
-        ``s >= 2`` into a peer's slot we must have that peer's release
-        signal from its step ``s-2`` consumption (g-1 signals total) —
-        otherwise a fast sender can overwrite a buffer a slow receiver is
-        still multiplying from (a data race the Mosaic interpreter's race
-        detector reproduces if this wait is removed).
+        Flow control: a slot is reused every ``depth`` steps.  Before
+        pushing a position ``>= depth`` into a peer's slot we must have
+        that peer's release signal from its consumption ``depth``
+        positions earlier (g-1 signals total) — otherwise a fast sender
+        can overwrite a buffer a slow receiver is still multiplying from
+        (a data race the Mosaic interpreter's race detector reproduces if
+        this wait is removed).
         """
-        if s >= 2:
+        if wait_slot:
             pltpu.semaphore_wait(ready_sems.at[slot], group - 1)
         local = pltpu.make_async_copy(
             x_ref.at[s],
@@ -111,24 +122,26 @@ def _fused_kernel(
             remote_semaphore_signal(ready_sems.at[slot], 1, peer)
 
     w_copy.wait()
-    inflight = start_step(0, 0)
-    # Output egress is double-buffered like the ingress: step s's (g, m_c,
-    # n_local) block drains to HBM while step s+1's exchange and matmul
-    # proceed.  A slot is only rewritten after its previous drain (step
-    # s-2) completed — without that wait a fast MXU could clobber bytes the
-    # DMA engine is still reading.
-    out_copies: list = [None, None]
-    for s in range(group):
-        slot = s % 2
+    inflight = start_step(order[0], 0, False)
+    # Output egress is slot-buffered like the ingress: a position's (g,
+    # m_c, n_local) block drains to HBM while later positions' exchange
+    # and matmul proceed.  A slot is only rewritten after its previous
+    # drain (``depth`` positions earlier) completed — without that wait a
+    # fast MXU could clobber bytes the DMA engine is still reading.
+    out_copies: list = [None] * depth
+    for pos, s in enumerate(order):
+        slot = pos % depth
         wait_step(inflight)
         # Load (consume) the gathered buffer, release the slot to peers,
-        # kick off the next exchange, THEN multiply — so step s+1's DMAs
-        # fly while the MXU works on step s.
+        # kick off the next exchange, THEN multiply — so the next
+        # position's DMAs fly while the MXU works on this one.
         gathered = step_bufs[slot].reshape(group * m_c, k)
-        if s + 2 < group:
+        if pos + depth < steps:
             release_slot(slot)
-        if s + 1 < group:
-            inflight = start_step(s + 1, (s + 1) % 2)
+        if pos + 1 < steps:
+            inflight = start_step(
+                order[pos + 1], (pos + 1) % depth, pos + 1 >= depth
+            )
         step_out = jnp.dot(
             gathered, w_vmem[...], preferred_element_type=jnp.float32
         )
@@ -153,37 +166,54 @@ def ficco_ag_matmul_fused(
     *,
     axis_name: str,
     interpret: bool = False,
+    variant=None,
 ) -> jax.Array:
     """Fused uniform-fused-1D: returns (M, n_local) like the reference.
 
     Call inside shard_map over ``axis_name``.  VMEM budget: the step buffer
-    pair (2 * m_s * K), the weight panel (K * n_local) and the
-    double-buffered per-step output (2 * m_s * n_local) must fit VMEM —
-    production shapes tile K/N further; sizes used in tests and smoke
-    configs fit comfortably.
+    slots (depth * m_s/steps * g * K), the weight panel (K * n_local) and
+    the slot-buffered per-step output must fit VMEM — production shapes
+    tile K/N further; sizes used in tests and smoke configs fit
+    comfortably.
+
+    ``variant`` (a :class:`repro.tune.KernelVariant`) picks the chunk
+    count, DMA buffer depth and dispatch order; ``None`` resolves the
+    promoted default from :mod:`repro.tune.registry`.  Results are
+    bit-identical across variants: each output row is one full-K dot.
     """
     g = axis_size(axis_name)
     m_s, k = x.shape
     n_local = w.shape[1]
-    m_c = m_s // g
-    chunks = x.reshape(g, m_c, k)
-    kernel = functools.partial(_fused_kernel, g, axis_name, m_c, k, n_local)
+    if variant is None:
+        from repro.tune.registry import resolve_variant
+
+        variant = resolve_variant("ficco_ag_matmul", group=g)
+    steps = int(variant.chunks)
+    if m_s % steps:
+        steps = g  # promoted cut doesn't divide this shard; classic cut
+    depth = max(2, min(int(variant.buffer_depth), steps))
+    reverse = variant.dispatch_order == "reverse"
+    m_c = m_s // steps
+    chunks = x.reshape(steps, m_c, k)
+    kernel = functools.partial(
+        _fused_kernel, g, axis_name, steps, depth, reverse, m_c, k, n_local
+    )
     out = pl.pallas_call(
         kernel,
-        out_shape=jax.ShapeDtypeStruct((g, g, m_c, n_local), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((steps, g, m_c, n_local), x.dtype),
         in_specs=[
             pl.BlockSpec(memory_space=pl.ANY),
             pl.BlockSpec(memory_space=pl.ANY),
         ],
         out_specs=pl.BlockSpec(memory_space=pl.ANY),
         scratch_shapes=[
-            pltpu.VMEM((2, g, m_c, k), x.dtype),
+            pltpu.VMEM((depth, g, m_c, k), x.dtype),
             pltpu.VMEM((k, n_local), w.dtype),
-            pltpu.VMEM((2, g, m_c, n_local), x.dtype),
-            pltpu.SemaphoreType.DMA((2, g - 1)),
-            pltpu.SemaphoreType.DMA((2, g)),
-            pltpu.SemaphoreType.DMA((2,)),
-            pltpu.SemaphoreType.REGULAR((2,)),
+            pltpu.VMEM((depth, g, m_c, n_local), x.dtype),
+            pltpu.SemaphoreType.DMA((depth, g - 1)),
+            pltpu.SemaphoreType.DMA((depth, g)),
+            pltpu.SemaphoreType.DMA((depth,)),
+            pltpu.SemaphoreType.REGULAR((depth,)),
         ],
         interpret=tpu_interpret(interpret),
         compiler_params=tpu_compiler_params(

@@ -59,6 +59,7 @@ from repro.learn.gate import (
     load_gate,
     load_machine_gate,
     machine_family,
+    refine_gate,
     save_gate,
     save_machine_gates,
     set_default_gate,
@@ -70,12 +71,14 @@ from repro.learn.gate import (
 from repro.learn.fit import (
     FITTABLE_PARAMS,
     FitResult,
+    FittedEngine,
     MeasuredRecord,
     fit_machine,
     load_fit,
     records_from_cache,
     save_fit,
     synthesize_records,
+    variant_records_from_cache,
 )
 from repro.learn.measured import MeasuredEngine, register_measured_engine
 
@@ -100,6 +103,7 @@ __all__ = [
     "LearnedGate",
     "train_gate",
     "train_gate_from_stats",
+    "refine_gate",
     "gate_accuracy",
     "save_gate",
     "load_gate",
@@ -115,9 +119,11 @@ __all__ = [
     "FITTABLE_PARAMS",
     "MeasuredRecord",
     "FitResult",
+    "FittedEngine",
     "fit_machine",
     "synthesize_records",
     "records_from_cache",
+    "variant_records_from_cache",
     "save_fit",
     "load_fit",
     "MeasuredEngine",

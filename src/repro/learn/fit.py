@@ -54,12 +54,22 @@ FITTABLE_PARAMS = (
 
 @dataclasses.dataclass(frozen=True)
 class MeasuredRecord:
-    """One measured schedule execution (what ``Autotuner.measure`` logs)."""
+    """One measured schedule execution (what ``Autotuner.measure`` logs).
+
+    ``profile`` carries the ragged step fractions the execution ran with
+    (None = the uniform cut): profile-bearing records route
+    :func:`fit_machine` through the ragged grid evaluator so skewed
+    ``ficco_a2a_ffn`` timings calibrate the machine too.  ``variant`` is
+    the kernel-variant digest for records produced by
+    ``Autotuner.measure_variants`` ("" for plain schedule timings).
+    """
 
     gemm: GemmShape
     schedule: Schedule
     seconds: float
     group: int
+    profile: tuple[float, ...] | None = None
+    variant: str = ""
 
 
 def records_from_cache(cache, machine_name: str) -> list[MeasuredRecord]:
@@ -97,6 +107,56 @@ def records_from_cache(cache, machine_name: str) -> list[MeasuredRecord]:
                     schedule=sched,
                     seconds=float(t),
                     group=int(g[1:]),
+                )
+            )
+        except (KeyError, ValueError):
+            continue
+    return out
+
+
+def variant_records_from_cache(
+    cache, machine_name: str, *, kernel: str | None = None
+) -> list[MeasuredRecord]:
+    """Extract kernel-variant timing records for one machine.
+
+    These are the 8-segment keys ``Autotuner.measure_variants`` writes
+    (``machine/gG/mM/nN/kK/bB/profile/vDIGEST``).  Skewed entries carry
+    their raw step fractions in the cache entry (``profile_frac``), so
+    the returned records rebuild the *ragged* fit objective exactly;
+    uniform entries (digest ``u<steps>``) come back with
+    ``profile=None``.  ``kernel`` filters to one kernel's records.
+    """
+    import re
+
+    seg = re.compile(r"vc\d+t\d+x\d+x\d+d\d+[fr]")
+    out: list[MeasuredRecord] = []
+    for key, entry in cache.decision_entries().items():
+        t = entry.get("measured_total_s")
+        if not t:
+            continue
+        parts = key.split("/")
+        if len(parts) < 8 or not seg.fullmatch(parts[-1]):
+            continue
+        mach = "/".join(parts[:-7])
+        g, m, n, k, b, profile = parts[-7:-1]
+        if mach != machine_name:
+            continue
+        if kernel is not None and entry.get("kernel") != kernel:
+            continue
+        frac = entry.get("profile_frac")
+        try:
+            out.append(
+                MeasuredRecord(
+                    gemm=GemmShape(
+                        int(m[1:]), int(n[1:]), int(k[1:]), int(b[1:])
+                    ),
+                    schedule=Schedule(entry["schedule"]),
+                    seconds=float(t),
+                    group=int(g[1:]),
+                    profile=(
+                        tuple(float(f) for f in frac) if frac else None
+                    ),
+                    variant=entry.get("variant", parts[-1][1:]),
                 )
             )
         except (KeyError, ValueError):
@@ -220,14 +280,26 @@ def fit_machine(
     log measured time over all records.  ``records`` should span a few
     sizes and schedules — a single operator cannot separate bandwidth
     from latency terms.
+
+    Records carrying a ``profile`` (skewed kernel timings, e.g. the
+    profile-keyed ``ficco_a2a_ffn`` measurements) route the whole fit
+    through the ragged grid evaluator: every record becomes one ragged
+    lane with its own step-fraction row (uniform records get the uniform
+    profile), so the objective stays a single differentiable
+    ``(schedule, lane)`` gather.
     """
     import jax
     import jax.numpy as jnp
     from jax.experimental import enable_x64
 
-    from repro.autotune.jaxgrid import evaluate_grid_raw, machine_arrays
-    from repro.core.batch import ScenarioBatch
+    from repro.autotune.jaxgrid import (
+        evaluate_grid_raw,
+        evaluate_ragged_grid_raw,
+        machine_arrays,
+    )
+    from repro.core.batch import RaggedBatch, ScenarioBatch
     from repro.core.engine import GRID_SCHEDULES
+    from repro.core.workload import StepProfile
 
     for p in params:
         if p not in FITTABLE_PARAMS:
@@ -246,11 +318,21 @@ def fit_machine(
     eff = machine_for_group(machine, groups.pop())
 
     sb = ScenarioBatch.from_gemms([r.gemm for r in records])
+    ragged = any(r.profile is not None for r in records)
+    if ragged:
+        profiles = [
+            StepProfile(tuple(r.profile))
+            if r.profile is not None
+            else StepProfile.uniform(eff.group)
+            for r in records
+        ]
+        sb = RaggedBatch.from_batch_and_profiles(sb, profiles)
     sched_idx = np.asarray(
         [GRID_SCHEDULES.index(r.schedule) for r in records], dtype=np.int64
     )
     lane = np.arange(len(records), dtype=np.int64)
     targets = np.log(np.asarray([r.seconds for r in records]))
+    eval_raw = evaluate_ragged_grid_raw if ragged else evaluate_grid_raw
 
     with enable_x64():
         mp0 = machine_arrays((eff,))
@@ -268,7 +350,7 @@ def fit_machine(
                     for i, name in enumerate(params)
                 }
             )
-            out = evaluate_grid_raw(sb, mp, g_max=eff.group)
+            out = eval_raw(sb, mp, g_max=eff.group)
             total = out[0][0]  # (L, S)
             model = total[s_idx, l_idx]
             return jnp.mean((jnp.log(model) - t_log) ** 2)
@@ -352,6 +434,87 @@ def synthesize_records(
     return records
 
 
+class FittedEngine:
+    """Engine over the jitted grid with one machine's *fitted* parameters.
+
+    The fit-then-retrain bridge: wraps a :class:`FitResult` and patches
+    its fitted values into the matching lanes of the packed
+    :class:`~repro.autotune.jaxgrid.MachineArrays` before evaluation, so
+    sweeps — and the :class:`~repro.learn.gate.LearnedGate` statistics
+    they produce — see the calibrated machine instead of the registry
+    default.  Machines whose name doesn't match ``fit.machine`` pass
+    through untouched, so mixed-machine grids stay meaningful.
+    """
+
+    name = "fitted"
+    supports_ragged = True
+    jit = True
+    differentiable = False
+    trace_safe = False
+
+    def __init__(self, fit: FitResult):
+        self.fit = fit
+
+    def evaluate(
+        self,
+        scenarios,
+        machines,
+        *,
+        dma: bool = True,
+        dma_into_place: bool = False,
+        schedules=None,
+    ):
+        import jax.numpy as jnp
+        from jax.experimental import enable_x64
+
+        from repro.autotune.jaxgrid import (
+            evaluate_grid_raw,
+            evaluate_ragged_grid_raw,
+            machine_arrays,
+        )
+        from repro.core import batch as _batch
+        from repro.core.engine import (
+            GRID_SCHEDULES,
+            GridResult,
+            as_scenario_sequence,
+            is_ragged,
+        )
+
+        scenarios = as_scenario_sequence(scenarios)
+        ragged = is_ragged(scenarios)
+        sb = (
+            _batch._as_ragged_batch(scenarios)
+            if ragged
+            else _batch._as_batch(scenarios)
+        )
+        machines = tuple(machines)
+        schedules = (
+            GRID_SCHEDULES if schedules is None else tuple(schedules)
+        )
+        idx = [
+            j for j, mch in enumerate(machines)
+            if mch.name == self.fit.machine
+        ]
+        with enable_x64():
+            mp = machine_arrays(machines)
+            for name, val in self.fit.fitted.items():
+                arr = getattr(mp, name)
+                for j in idx:
+                    arr = arr.at[j].set(jnp.asarray(val, dtype=arr.dtype))
+                mp = mp._replace(**{name: arr})
+            g_max = max(mch.group for mch in machines)
+            raw = (
+                evaluate_ragged_grid_raw if ragged else evaluate_grid_raw
+            )(
+                sb, mp, g_max=g_max, dma=dma,
+                dma_into_place=dma_into_place, schedules=schedules,
+            )
+        return GridResult.from_machine_major(
+            raw, schedules=schedules, scenarios=sb, machines=machines,
+            dma=dma,
+        )
+
+
 # ---------------------------------------------------------------------------
 # Persistence (autotune-cache artifact segment).
 # ---------------------------------------------------------------------------
@@ -388,7 +551,9 @@ __all__ = [
     "FITTABLE_PARAMS",
     "MeasuredRecord",
     "FitResult",
+    "FittedEngine",
     "records_from_cache",
+    "variant_records_from_cache",
     "fit_machine",
     "synthesize_records",
     "save_fit",

@@ -29,6 +29,7 @@ it ahead of the hand-tuned gate.
 
 from __future__ import annotations
 
+import copy
 import dataclasses
 import json
 import math
@@ -44,6 +45,7 @@ from repro.learn.stats import (
     _C_REG_SERIAL,
     _C_W5_BASE,
     _C_W5_SERIAL,
+    _quantize_regret,
     FEATURE_EDGES,
     SCORE_EDGES,
     GateStats,
@@ -421,6 +423,177 @@ def train_gate(source, **kw) -> LearnedGate:
 
 
 # ---------------------------------------------------------------------------
+# Regret-weighted adaptive leaf thresholds (post-training refinement).
+# ---------------------------------------------------------------------------
+
+
+def _per_point_tables(grid, features: tuple[str, ...]):
+    """Per-(scenario, machine) gate-score / regret / win5 tables.
+
+    The flattened, *unbinned* twin of ``GateStats.update_from_grid``:
+    same terms, same base picks, same regret quantization — but kept
+    per point so a threshold anywhere on the real line can be scored
+    exactly, not just at the fixed bin edges.  Returns
+    ``(X, scores, reg_serial, reg_base, w5_serial, w5_base)`` with rows
+    concatenated machine-major.
+    """
+    from repro.core.engine import GRID_SCHEDULES
+    from repro.core.heuristics import (
+        select_schedule_batch,
+        serial_gate_score_from_terms,
+        serial_gate_terms_batch,
+    )
+    from repro.core.schedule_types import Schedule
+    from repro.core.engine import SCHEDULE_INDEX
+    from repro.learn.features import profile_features
+
+    if tuple(grid.schedules) != GRID_SCHEDULES:
+        raise ValueError(
+            "refine_gate needs the full GRID_SCHEDULES grid, got "
+            f"{tuple(s.value for s in grid.schedules)}"
+        )
+    sb = grid.scenarios
+    S = len(sb)
+    imb, act = profile_features(sb)
+    t = np.nan_to_num(grid.total, nan=np.inf, posinf=np.inf)
+    t_best = grid.best_total()
+    serial_l = SCHEDULE_INDEX[Schedule.SERIAL]
+    s_idx = np.arange(S)
+    cols = [_features.FEATURE_INDEX[f] for f in features]
+    Xs, scs, rss, rbs, w5ss, w5bs = [], [], [], [], [], []
+    for j, machine in enumerate(grid.machines):
+        terms = serial_gate_terms_batch(
+            sb.m, sb.n, sb.k, sb.dtype_bytes, machine
+        )
+        scores = serial_gate_score_from_terms(*terms)
+        base = select_schedule_batch(
+            sb.m, sb.n, sb.k, sb.dtype_bytes, machine,
+            serial_gate=np.inf, terms=terms,
+        )
+        feats = feature_matrix(
+            sb.m, sb.n, sb.k, sb.dtype_bytes, machine,
+            imbalance=imb, active_steps=act, terms=terms,
+        )
+        t_serial = t[serial_l, :, j]
+        t_pick = t[base, s_idx, j]
+        tb = t_best[:, j]
+        Xs.append(feats[:, cols])
+        scs.append(np.asarray(scores, dtype=np.float64))
+        rss.append(_quantize_regret(t_serial, tb))
+        rbs.append(_quantize_regret(t_pick, tb))
+        w5ss.append((t_serial <= 1.05 * tb).astype(np.int64))
+        w5bs.append((t_pick <= 1.05 * tb).astype(np.int64))
+    return (
+        np.concatenate(Xs), np.concatenate(scs),
+        np.concatenate(rss), np.concatenate(rbs),
+        np.concatenate(w5ss), np.concatenate(w5bs),
+    )
+
+
+def _leaf_rows(node, X, rows, features, out) -> None:
+    if node.get("leaf"):
+        out.append((node, rows))
+        return
+    col = features.index(node["feature"])
+    hi = X[rows, col] >= node["edge"]
+    _leaf_rows(node["lo"], X, rows[~hi], features, out)
+    _leaf_rows(node["hi"], X, rows[hi], features, out)
+
+
+def refine_gate(
+    gate: LearnedGate,
+    grid,
+    *,
+    sub_bins: int = 8,
+    meta: dict | None = None,
+) -> LearnedGate:
+    """Regret-weighted adaptive leaf thresholds.
+
+    Training quantizes every candidate threshold to the fixed
+    ``SCORE_EDGES`` geomspace — cheap and shard-exact, but the best
+    threshold inside the winning bin interval is invisible to it.  This
+    pass re-bins that interval per leaf: each leaf's rows (from
+    ``grid``) are scored with the same terms/regret quantization the
+    statistics used, ``sub_bins`` geomspaced sub-candidates between the
+    leaf threshold's neighboring coarse candidates are evaluated by
+    exact integer regret, and the leaf keeps the winner.  The current
+    threshold is always a candidate, so the refined gate is never worse
+    than ``gate`` on ``grid`` (regret and within-5% accounting).
+    Infinite interval ends fall back to the leaf's observed score range.
+
+    Returns a new :class:`LearnedGate`; ``meta["refine"]`` records the
+    before/after quantized regret and win5 totals.
+    """
+    if sub_bins < 1:
+        raise ValueError(f"sub_bins must be >= 1, got {sub_bins}")
+    X, scores, reg_s, reg_b, w5_s, w5_b = _per_point_tables(
+        grid, gate.features
+    )
+    tree = copy.deepcopy(gate.tree)
+    leaves: list[tuple[dict, np.ndarray]] = []
+    _leaf_rows(tree, X, np.arange(X.shape[0]), gate.features, leaves)
+    ts = np.asarray(_THRESHOLDS)
+
+    before_loss = before_win5 = after_loss = after_win5 = 0
+    for leaf, rows in leaves:
+        s = scores[rows]
+        rs, rb = reg_s[rows], reg_b[rows]
+        w5s, w5b = w5_s[rows], w5_b[rows]
+
+        def _score(tau):
+            serial = s >= tau
+            return (
+                int(rs[serial].sum() + rb[~serial].sum()),
+                int(w5s[serial].sum() + w5b[~serial].sum()),
+            )
+
+        thr = float(leaf["gate"])
+        cur_loss, cur_win5 = _score(thr)
+        before_loss += cur_loss
+        before_win5 += cur_win5
+        # Interval between the coarse candidates bracketing the leaf's
+        # threshold; the coarse search already proved thr beats both
+        # neighbors, so only the inside of this bracket can improve.
+        lo = float(ts[ts < thr].max()) if (ts < thr).any() else -math.inf
+        hi = float(ts[ts > thr].min()) if (ts > thr).any() else math.inf
+        if not math.isfinite(lo):
+            lo = float(s.min()) if rows.size else math.nan
+        if not math.isfinite(hi):
+            hi = float(s.max()) if rows.size else math.nan
+        best = (cur_loss, -cur_win5, -thr)
+        if math.isfinite(lo) and math.isfinite(hi) and 0.0 < lo < hi:
+            for tau in np.geomspace(lo, hi, sub_bins + 2)[1:-1]:
+                tau = float(tau)
+                loss, win5 = _score(tau)
+                # Mirrors _best_threshold: lowest regret, most win5,
+                # least-serial (largest) threshold.
+                cand = (loss, -win5, -tau)
+                if cand < best:
+                    best = cand
+        loss, win5, tau = best[0], -best[1], -best[2]
+        leaf["gate"] = tau
+        leaf["regret_q"] = loss
+        leaf["win5"] = win5
+        after_loss += loss
+        after_win5 += win5
+
+    info = dict(gate.meta)
+    info["refine"] = {
+        "sub_bins": int(sub_bins),
+        "n_rows": int(X.shape[0]),
+        "regret_q_before": int(before_loss),
+        "regret_q_after": int(after_loss),
+        "win5_before": int(before_win5),
+        "win5_after": int(after_win5),
+    }
+    if meta:
+        info["refine"].update(meta)
+    return LearnedGate(
+        tree=tree, features=gate.features, version=gate.version, meta=info
+    )
+
+
+# ---------------------------------------------------------------------------
 # Evaluation helper.
 # ---------------------------------------------------------------------------
 
@@ -596,6 +769,7 @@ __all__ = [
     "LearnedGate",
     "train_gate",
     "train_gate_from_stats",
+    "refine_gate",
     "gate_accuracy",
     "save_gate",
     "load_gate",

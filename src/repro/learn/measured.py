@@ -38,13 +38,15 @@ class MeasuredEngine:
 
     Capability flags: host-side NumPy post-processing of another
     engine's grid — not jitted, not differentiable (measured wall times
-    have no gradients), ragged unsupported (the measured tier times
-    uniform-chunk collectives today; see ROADMAP "measured ragged
-    tier"), but trace-safe (no jax computation is staged).
+    have no gradients), but trace-safe (no jax computation is staged).
+    Ragged profiles are supported: the analytic base grid comes from the
+    ragged evaluator and the measured lookup keys on the per-scenario
+    profile digest — exactly the profile-keyed records the skewed
+    ``ficco_a2a_ffn`` variant search persists.
     """
 
     name = "measured"
-    supports_ragged = False
+    supports_ragged = True
     jit = False
     differentiable = False
     trace_safe = True
@@ -86,16 +88,23 @@ class MeasuredEngine:
         from repro.autotune.tuner import TuneKey
 
         scenarios = as_scenario_sequence(scenarios)
-        if is_ragged(scenarios):
-            raise TypeError(
-                "the measured engine times uniform-chunk collectives only "
-                "(supports_ragged=False); use an analytic engine for "
-                "ragged profiles"
-            )
+        ragged = is_ragged(scenarios)
+        # Profile digests key the measured lookup for ragged scenarios.
+        # Prefer the original RaggedScenario profiles (their name enters
+        # the digest); a bare RaggedBatch reconstructs name-less
+        # "custom" profiles, which only match records stored the same way.
+        profiles = None
+        if ragged:
+            if isinstance(scenarios, (list, tuple)):
+                profiles = [s.profile for s in scenarios]
         base = get_engine(self.analytic_backend).evaluate(
             scenarios, machines,
             dma=dma, dma_into_place=dma_into_place, schedules=schedules,
         )
+        if ragged and profiles is None:
+            profiles = [
+                base.scenarios.profile(i) for i in range(len(base.scenarios))
+            ]
         cache = self._store()
         total = base.total.copy()
         comm = base.comm_busy.copy()
@@ -116,7 +125,13 @@ class MeasuredEngine:
                 if serial_l is not None:
                     keep.add(serial_l)
                 entry = cache.get(
-                    str(TuneKey.for_gemm(base.scenarios.gemm(i), machine))
+                    str(
+                        TuneKey.for_gemm(
+                            base.scenarios.gemm(i),
+                            machine,
+                            profile=profiles[i] if profiles else None,
+                        )
+                    )
                 )
                 t_meas = entry.get("measured_total_s") if entry else None
                 for l in range(L):

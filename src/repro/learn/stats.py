@@ -293,6 +293,7 @@ def sweep_stats(
     machines,
     *,
     backend: str = "numpy",
+    engine=None,
     num_shards: int | None = None,
     host_index: int = 0,
     host_count: int = 1,
@@ -309,6 +310,11 @@ def sweep_stats(
     Returns ``(stats, sweep_result)``; merge stats across hosts with
     :meth:`GateStats.merge` (they serialize via ``to_json`` for the
     ``sweep_host*.jsonl``-style streams).
+
+    ``engine`` passes an engine *instance* through to ``sweep_grid``
+    (overriding ``backend``) — the fit-then-retrain path hands a
+    :class:`~repro.learn.fit.FittedEngine` here so the gate trains
+    against the calibrated machine model instead of registry defaults.
     """
     from repro.sweep import sweep_grid
 
@@ -317,6 +323,7 @@ def sweep_stats(
         scenarios,
         machines,
         backend=backend,
+        engine=engine,
         num_shards=num_shards,
         mode="reduce",
         dma=dma,

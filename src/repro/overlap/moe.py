@@ -84,6 +84,7 @@ def ficco_a2a_ffn(
     chunks: int | None = None,
     chunk_sizes=None,
     profile=None,
+    variant=None,
 ) -> jax.Array:
     """FiCCO: capacity dimension cut into chunks; each chunk's dispatch
     A2A overlaps the previous chunk's expert GEMM (XLA async collectives
@@ -99,15 +100,32 @@ def ficco_a2a_ffn(
     profile=...)``, ``evaluate_ragged_grid``) models.  All sizes are
     trace-time constants, so the loop unrolls jit-compatibly with one
     dispatch/combine A2A pair per non-empty chunk.
+
+    ``variant`` (a :class:`repro.tune.KernelVariant`) supplies the
+    uniform chunk count when ``chunks``/``chunk_sizes``/``profile`` don't
+    pin one, and its dispatch order: ``"reverse"`` issues the chunk
+    A2A+FFN pairs last-to-first (front-loading a skewed profile's tail
+    mass) while outputs are still reassembled in capacity order, so
+    results are bit-identical across variants.
     """
     g = axis_size(axis_name)
     e, c, d = x.shape
+    if variant is None and chunks is None and chunk_sizes is None:
+        from repro.tune.registry import resolve_variant
+
+        variant = resolve_variant("ficco_a2a_ffn", group=g, profile=profile)
     if chunk_sizes is None and profile is not None:
         chunk_sizes = skewed_chunk_sizes(c, profile)
     if chunk_sizes is None:
+        from_variant = chunks is None and variant is not None
+        if from_variant:
+            chunks = int(variant.chunks)
         n_chunks = chunks or g
         if c % n_chunks:
-            return serial_a2a_ffn(x, w_up, w_down, axis_name=axis_name)
+            if from_variant and c % g == 0:
+                n_chunks = g  # promoted cut doesn't divide; classic cut
+            else:
+                return serial_a2a_ffn(x, w_up, w_down, axis_name=axis_name)
         chunk_sizes = (c // n_chunks,) * n_chunks
     else:
         chunk_sizes = tuple(int(s) for s in chunk_sizes)
@@ -117,13 +135,20 @@ def ficco_a2a_ffn(
                 f"capacity {c}"
             )
     e_local = e // g
-    outs = []
+    offsets = []
     offset = 0
     for c_c in chunk_sizes:
+        offsets.append(offset)
+        offset += c_c
+    order = list(range(len(chunk_sizes)))
+    if variant is not None and variant.dispatch_order == "reverse":
+        order.reverse()
+    outs: list = [None] * len(chunk_sizes)
+    for idx in order:
+        c_c = chunk_sizes[idx]
         if c_c == 0:
             continue  # empty chunk (masked tail / unloaded expert slot)
-        piece = lax.dynamic_slice(x, (0, offset, 0), (e, c_c, d))
-        offset += c_c
+        piece = lax.dynamic_slice(x, (0, offsets[idx], 0), (e, c_c, d))
         recv = lax.all_to_all(
             piece.reshape(g, e_local, c_c, d),
             axis_name,
@@ -134,10 +159,11 @@ def ficco_a2a_ffn(
         expert_out = _ffn(expert_in, w_up, w_down)
         send = expert_out.reshape(e_local, g, c_c, d).transpose(1, 0, 2, 3)
         back = lax.all_to_all(send, axis_name, split_axis=0, concat_axis=0)
-        outs.append(back.reshape(e, c_c, d))
-    if len(outs) == 1:
-        return outs[0]
-    return jnp.concatenate(outs, axis=1)
+        outs[idx] = back.reshape(e, c_c, d)
+    pieces = [o for o in outs if o is not None]
+    if len(pieces) == 1:
+        return pieces[0]
+    return jnp.concatenate(pieces, axis=1)
 
 
 __all__ = ["serial_a2a_ffn", "ficco_a2a_ffn", "skewed_chunk_sizes"]

@@ -54,6 +54,7 @@ _DEVICE_EXPORTS = (
     "evaluate_mixed_grid",
     "dispatch_mixed_grid",
     "sweep_device_stats",
+    "device_merge_stats",
 )
 
 

@@ -872,6 +872,69 @@ def _feature_count():
     return FEATURE_NAMES
 
 
+def device_merge_stats(stats_list):
+    """Device-side multi-host :class:`GateStats` merge.
+
+    The multi-host stat streams (``sweep_host*.jsonl``) merge their
+    integer histograms on the accelerator instead of the host: when the
+    local device count covers the list, each histogram is laid on its
+    own device and a ``psum`` over a ``"hosts"`` axis reduces them —
+    the same collective a real multi-host pod would run, exercised here
+    on simulated devices; longer lists fall back to a jitted on-device
+    sum.  int64 addition is associative and exact, so either path is
+    bit-identical to the host-side left fold
+    ``functools.reduce(GateStats.merge, stats_list)``.  The float
+    moments and the best-count/point tallies are reporting-only and
+    tiny; they fold on the host in list order so even their float
+    rounding matches the ``merge`` chain.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    from repro.learn.stats import GateStats
+
+    stats_list = list(stats_list)
+    if not stats_list:
+        return GateStats.empty()
+    first = stats_list[0]
+    for other in stats_list[1:]:
+        if other.schema != first.schema:
+            raise ValueError(
+                f"cannot merge GateStats schema {other.schema} "
+                f"into schema {first.schema}"
+            )
+        if other.hist.shape != first.hist.shape:
+            raise ValueError("GateStats bin layouts differ")
+    with enable_x64():
+        stacked = jnp.asarray(
+            np.stack([s.hist for s in stats_list]), dtype=jnp.int64
+        )
+        if len(stats_list) <= jax.local_device_count():
+            merged = jax.pmap(
+                lambda h: jax.lax.psum(h, "hosts"), axis_name="hosts"
+            )(stacked)[0]
+        else:
+            merged = jax.jit(lambda h: h.sum(axis=0))(stacked)
+        hist = np.asarray(merged)
+
+    moments = first.moments.copy()
+    counts = dict(first.best_counts)
+    n_points = first.n_points
+    for other in stats_list[1:]:
+        moments = moments + other.moments
+        for key, v in other.best_counts.items():
+            counts[key] = counts.get(key, 0) + v
+        n_points += other.n_points
+    return GateStats(
+        hist=hist,
+        moments=moments,
+        best_counts=counts,
+        n_points=n_points,
+        schema=first.schema,
+    )
+
+
 __all__ = [
     "host_batch",
     "host_ragged_batch",
@@ -880,4 +943,5 @@ __all__ = [
     "evaluate_mixed_grid",
     "dispatch_mixed_grid",
     "sweep_device_stats",
+    "device_merge_stats",
 ]

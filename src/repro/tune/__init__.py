@@ -1,0 +1,67 @@
+"""Kernel-variant autotuning: enumerate, prune, measure, refit, promote.
+
+The Pallas kernels (`ficco_ag_matmul_fused`, the `dma_exchange` schedule,
+`ficco_a2a_ffn`) each admit a family of shapes — chunk count, tile shape,
+DMA buffer depth, dispatch order — that the analytic engines silently
+assumed.  This package closes the kernel-level sim-to-real loop:
+
+- :mod:`repro.tune.variants` — typed :class:`KernelVariant` records with
+  deterministic enumeration of the per-kernel design space.
+- :mod:`repro.tune.prune` — feasibility pruning against the hardware
+  resource budgets carried by :class:`~repro.core.machine.MachineSpec`
+  (VMEM footprint, DMA/regular semaphore slots, min-DMA-granule
+  alignment, divisibility).
+- :mod:`repro.tune.cost` — a deterministic discrete-event cost model for
+  one variant (wave-quantized step GEMMs + depth-``d`` slot recurrence),
+  the interpret-mode stand-in for wall-clock timing.
+- :mod:`repro.tune.search` — time the feasible set through
+  :meth:`Autotuner.measure_variants`, persist variant-keyed records, and
+  promote per-(machine-family, scenario-class) winners.
+- :mod:`repro.tune.registry` — the promotion registry the kernels
+  consult when called without an explicit ``variant=``.
+"""
+
+from repro.tune.variants import (
+    DISPATCH_ORDERS,
+    KERNELS,
+    KERNEL_SCHEDULE,
+    KernelVariant,
+    default_variant,
+    enumerate_variants,
+)
+from repro.tune.prune import (
+    Infeasible,
+    ResourceBudget,
+    check_variant,
+    prune_variants,
+)
+from repro.tune.cost import variant_cost
+from repro.tune.search import SearchResult, search_kernel_variants
+from repro.tune.registry import (
+    VARIANT_ARTIFACT_KIND,
+    promote_variant,
+    reset_variants,
+    resolve_variant,
+    set_variant,
+)
+
+__all__ = [
+    "DISPATCH_ORDERS",
+    "KERNELS",
+    "KERNEL_SCHEDULE",
+    "KernelVariant",
+    "default_variant",
+    "enumerate_variants",
+    "Infeasible",
+    "ResourceBudget",
+    "check_variant",
+    "prune_variants",
+    "variant_cost",
+    "SearchResult",
+    "search_kernel_variants",
+    "VARIANT_ARTIFACT_KIND",
+    "promote_variant",
+    "reset_variants",
+    "resolve_variant",
+    "set_variant",
+]

@@ -46,6 +46,11 @@ def _isolated_autotune_cache(tmp_path, monkeypatch):
         if gate_mod is not None:
             gate_mod.set_default_gate(None)
             gate_mod.clear_machine_gates()
+        # In-process promoted kernel variants resolve ahead of persisted
+        # artifacts and registry defaults; drop any a test promoted.
+        tune_mod = sys.modules.get("repro.tune.registry")
+        if tune_mod is not None:
+            tune_mod.reset_variants()
         # Process-wide observability state (tracer / metric registry /
         # audit log) would otherwise leak spans and counts across tests.
         trace_mod = sys.modules.get("repro.obs.trace")

@@ -11,6 +11,7 @@ os.environ["XLA_FLAGS"] = (
     + os.environ.get("XLA_FLAGS", "")
 )
 
+import dataclasses  # noqa: E402
 import functools  # noqa: E402
 import sys  # noqa: E402
 import traceback  # noqa: E402
@@ -27,6 +28,8 @@ from repro.kernels.dma_exchange import (  # noqa: E402
     ficco_uniform_fused_1d_dma,
 )
 from repro.kernels.ficco_ag_matmul import ficco_ag_matmul_fused  # noqa: E402
+from repro.overlap.moe import ficco_a2a_ffn, serial_a2a_ffn  # noqa: E402
+from repro.tune import default_variant  # noqa: E402
 
 G = 8
 AXIS = "tp"
@@ -133,11 +136,152 @@ def fused_kernel_matches_serial():
         )
 
 
+def ag_fused_variants_bit_identical():
+    """Chunk-count / buffer-depth / dispatch-order variants of the fused
+    AG kernel must be BIT-identical to the default: every output row is
+    one full-K dot whichever slot/step order produced its operand."""
+    m = mesh()
+    rng = np.random.default_rng(3)
+    ms, k, n_local = 64, 128, 128
+    x = jnp.asarray(rng.standard_normal((G * ms, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, G * n_local)), jnp.float32)
+    base = default_variant("ficco_ag_matmul", group=G)
+    variants = [
+        base,
+        dataclasses.replace(base, chunks=4),
+        dataclasses.replace(base, buffer_depth=3),
+        dataclasses.replace(base, chunks=4, buffer_depth=3),
+        dataclasses.replace(base, dispatch_order="reverse"),
+    ]
+
+    def run(v):
+        def body(xs, ws):
+            return ficco_ag_matmul_fused(
+                xs, ws, axis_name=AXIS, interpret=True, variant=v
+            )
+
+        return np.asarray(
+            jax.jit(
+                shard_map(
+                    body, mesh=m,
+                    in_specs=(P(AXIS, None), P(None, AXIS)),
+                    out_specs=P(None, AXIS),
+                    check_vma=False,
+                )
+            )(x, w)
+        )
+
+    want = run(variants[0])
+    for v in variants[1:]:
+        np.testing.assert_array_equal(run(v), want, err_msg=v.digest())
+
+
+def dma_schedule_variants_match():
+    """dma_exchange variants: chunk/order cuts are bit-identical (same
+    full-K row dots, different step batching); a blocked step-GEMM tile
+    keeps the full-K contraction so it matches to float tolerance."""
+    m = mesh()
+    rng = np.random.default_rng(4)
+    ms, k, n_local = 64, 128, 128
+    x = jnp.asarray(rng.standard_normal((G * ms, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, G * n_local)), jnp.float32)
+    base = default_variant("dma_exchange", group=G)
+
+    def run(v):
+        def body(xs, ws):
+            return ficco_uniform_fused_1d_dma(
+                xs, ws, axis_name=AXIS, interpret=True, variant=v
+            )
+
+        return np.asarray(
+            jax.jit(
+                shard_map(
+                    body, mesh=m,
+                    in_specs=(P(AXIS, None), P(None, AXIS)),
+                    out_specs=(P(None, AXIS)),
+                    check_vma=False,
+                )
+            )(x, w)
+        )
+
+    want = run(base)
+    for v in (
+        dataclasses.replace(base, chunks=4),
+        dataclasses.replace(base, dispatch_order="reverse"),
+    ):
+        np.testing.assert_array_equal(run(v), want, err_msg=v.digest())
+    tiled = dataclasses.replace(base, block_m=64, block_n=64)
+    np.testing.assert_allclose(
+        run(tiled), want, rtol=1e-6, atol=1e-6, err_msg=tiled.digest()
+    )
+
+
+def a2a_ffn_variants_bit_identical():
+    """MoE dispatch variants (chunk count, dispatch order) reassemble
+    outputs in capacity order, so results are bit-identical to the
+    serial all-to-all baseline's chunking-free layout."""
+    m = mesh()
+    rng = np.random.default_rng(5)
+    e, c, d, f = 16, 16, 32, 64  # 16 global experts over 8 devices
+    x = jnp.asarray(rng.standard_normal((G * e, c, d)), jnp.float32)
+    w_up = jnp.asarray(
+        rng.standard_normal((e, d, f)) / np.sqrt(d), jnp.float32
+    )
+    w_down = jnp.asarray(
+        rng.standard_normal((e, f, d)) / np.sqrt(f), jnp.float32
+    )
+    base = default_variant("ficco_a2a_ffn", group=G)
+
+    def run(v):
+        def body(xs, wu, wd):
+            return ficco_a2a_ffn(xs, wu, wd, axis_name=AXIS, variant=v)
+
+        return np.asarray(
+            jax.jit(
+                shard_map(
+                    body, mesh=m,
+                    in_specs=(P(AXIS, None, None), P(AXIS, None, None),
+                              P(AXIS, None, None)),
+                    out_specs=P(AXIS, None, None),
+                    check_vma=False,
+                )
+            )(x, w_up, w_down)
+        )
+
+    want = run(base)
+    for v in (
+        dataclasses.replace(base, chunks=4),
+        dataclasses.replace(base, dispatch_order="reverse"),
+        dataclasses.replace(base, chunks=4, dispatch_order="reverse"),
+    ):
+        np.testing.assert_array_equal(run(v), want, err_msg=v.digest())
+
+    # and the chunked pipeline agrees with the one-shot serial baseline
+    def serial_body(xs, wu, wd):
+        return serial_a2a_ffn(xs, wu, wd, axis_name=AXIS)
+
+    serial = np.asarray(
+        jax.jit(
+            shard_map(
+                serial_body, mesh=m,
+                in_specs=(P(AXIS, None, None), P(AXIS, None, None),
+                          P(AXIS, None, None)),
+                out_specs=P(AXIS, None, None),
+                check_vma=False,
+            )
+        )(x, w_up, w_down)
+    )
+    np.testing.assert_allclose(want, serial, rtol=1e-5, atol=1e-5)
+
+
 def main():
     assert len(jax.devices()) == G
     check("exchange_matches_all_gather", exchange_matches_all_gather)
     check("dma_schedule_matches_serial", dma_schedule_matches_serial)
     check("fused_kernel_matches_serial", fused_kernel_matches_serial)
+    check("ag_fused_variants_bit_identical", ag_fused_variants_bit_identical)
+    check("dma_schedule_variants_match", dma_schedule_variants_match)
+    check("a2a_ffn_variants_bit_identical", a2a_ffn_variants_bit_identical)
     if failures:
         print("FAILED:", failures)
         sys.exit(1)

@@ -460,3 +460,57 @@ def test_sweep_cli_mixed_dtype_and_synth_device(tmp_path):
     proc = run("--scenarios", "8", "--dtype", "bfloat16")
     assert proc.returncode == 2
     assert "requires --backend mixed" in proc.stderr
+
+
+class TestDeviceMergeStats:
+    """device_merge_stats: on-device multi-host GateStats reduction."""
+
+    def _stats_list(self, n=3):
+        from repro.learn import sweep_stats
+        from repro.sweep import synthetic_ragged_batch
+
+        return [
+            sweep_stats(
+                synthetic_ragged_batch(60, seed=40 + i),
+                MACHINES[:2],
+                num_shards=2,
+            )[0]
+            for i in range(n)
+        ]
+
+    def test_bit_identical_to_host_fold(self):
+        import functools
+
+        from repro.learn import GateStats
+        from repro.sweep import device_merge_stats
+
+        stats = self._stats_list(3)
+        got = device_merge_stats(stats)
+        want = functools.reduce(GateStats.merge, stats)
+        assert np.array_equal(got.hist, want.hist)
+        assert np.array_equal(got.moments, want.moments)
+        assert got.best_counts == want.best_counts
+        assert got.n_points == want.n_points
+        assert got.schema == want.schema
+
+    def test_single_and_empty_inputs(self):
+        from repro.learn import GateStats
+        from repro.sweep import device_merge_stats
+
+        (only,) = self._stats_list(1)
+        got = device_merge_stats([only])  # pmap path on 1 device
+        assert np.array_equal(got.hist, only.hist)
+        assert got.n_points == only.n_points
+        empty = device_merge_stats([])
+        assert empty.n_points == 0
+        assert np.array_equal(empty.hist, GateStats.empty().hist)
+
+    def test_schema_mismatch_rejected(self):
+        import dataclasses
+
+        from repro.sweep import device_merge_stats
+
+        a, b, _ = self._stats_list(3)
+        bad = dataclasses.replace(b, schema=b.schema + 1)
+        with pytest.raises(ValueError, match="schema"):
+            device_merge_stats([a, bad])

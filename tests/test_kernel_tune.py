@@ -1,0 +1,332 @@
+"""Kernel-variant autotuning: enumerate -> prune -> measure -> refit -> promote.
+
+Covers the `repro.tune` loop end to end on the deterministic cost model
+(no accelerator needed): enumeration determinism, resource-budget
+pruning, variant-keyed cache schema round-trips, search-beats-default,
+the variant-timing -> `fit_machine` objective, and the skewed
+`ficco_a2a_ffn` profile-keyed records feeding both the measured
+shortlist and the ragged fit.  Interpret-mode bit-equivalence of the
+variants lives in the multi-device driver
+(``multidev_kernels_driver.py``).
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.machine import MI300X, TPU_V5E
+from repro.core.schedule_types import Schedule
+from repro.core.workload import (
+    CollectiveKind,
+    GemmShape,
+    RaggedScenario,
+    StepProfile,
+)
+from repro.tune import (
+    KERNELS,
+    KERNEL_SCHEDULE,
+    KernelVariant,
+    check_variant,
+    default_variant,
+    enumerate_variants,
+    prune_variants,
+    search_kernel_variants,
+    variant_cost,
+)
+
+GEMM = GemmShape(4096, 4096, 4096, 2)
+
+
+def _tuner(tmp_path):
+    from repro.autotune.cache import AutotuneCache
+    from repro.autotune.tuner import Autotuner
+
+    cache = AutotuneCache(path=str(tmp_path / "tune.json"))
+    return Autotuner(cache=cache, persist=True)
+
+
+# ---------------------------------------------------------------------------
+# Variant identity + enumeration.
+# ---------------------------------------------------------------------------
+
+
+def test_digest_round_trip():
+    v = KernelVariant(
+        kernel="dma_exchange", chunks=4, block_m=256, block_n=128,
+        block_k=64, buffer_depth=3, dispatch_order="reverse",
+    )
+    assert v.digest() == "c4t256x128x64d3r"
+    assert KernelVariant.from_digest("dma_exchange", v.digest()) == v
+    assert KernelVariant.from_payload(v.to_payload()) == v
+    with pytest.raises(ValueError):
+        KernelVariant.from_digest("dma_exchange", "t128x128x128")
+
+
+def test_variant_validation():
+    with pytest.raises(ValueError):
+        KernelVariant("nope", 4, 128, 128, 128)
+    with pytest.raises(ValueError):
+        KernelVariant("dma_exchange", 4, 128, 128, 128, buffer_depth=1)
+    with pytest.raises(ValueError):
+        KernelVariant("dma_exchange", 4, 4, 128, 128)
+    with pytest.raises(ValueError):
+        KernelVariant("dma_exchange", 4, 128, 128, 128,
+                      dispatch_order="sideways")
+
+
+def test_enumeration_deterministic_and_complete():
+    for kernel in KERNELS:
+        a = enumerate_variants(kernel, MI300X)
+        b = enumerate_variants(kernel, MI300X)
+        assert a == b  # same tuple, same order
+        assert len(set(a)) == len(a)
+        assert list(a) == sorted(a)
+        # the incumbent default is always a candidate
+        assert default_variant(kernel, MI300X) in a
+        assert all(v.kernel == kernel for v in a)
+
+
+def test_enumeration_respects_exposed_axes():
+    # The fused AG kernel's tile is pinned to the machine tile ...
+    ag = enumerate_variants("ficco_ag_matmul", MI300X)
+    assert {(v.block_m, v.block_n, v.block_k) for v in ag} == {
+        (MI300X.tile_mn, MI300X.tile_mn, MI300X.tile_k)
+    }
+    # ... but its buffer depth is searchable, unlike the a2a FFN's.
+    assert {v.buffer_depth for v in ag} == {2, 3}
+    a2a = enumerate_variants("ficco_a2a_ffn", MI300X)
+    assert {v.buffer_depth for v in a2a} == {2}
+    # The exchange schedule searches tiles.
+    ex = enumerate_variants("dma_exchange", MI300X)
+    assert len({(v.block_m, v.block_n, v.block_k) for v in ex}) > 1
+
+
+# ---------------------------------------------------------------------------
+# Feasibility pruning.
+# ---------------------------------------------------------------------------
+
+
+def test_prune_rejects_overbudget_vmem():
+    tiny = dataclasses.replace(MI300X, fast_mem_bytes=1 << 20)
+    cands = enumerate_variants("ficco_ag_matmul", tiny)
+    feasible, rejected = prune_variants(cands, GEMM, tiny)
+    assert not feasible
+    assert any("vmem" in r.reason for r in rejected)
+
+
+def test_prune_rejects_overbudget_semaphores():
+    starved = dataclasses.replace(MI300X, dma_sem_slots=8)
+    v = default_variant("ficco_ag_matmul", starved)
+    reason = check_variant(v, GEMM, starved)
+    assert reason is not None and "semaphores" in reason
+    # The semaphore-free XLA-collective kernel is unaffected.
+    assert check_variant(
+        default_variant("ficco_a2a_ffn", starved), GEMM, starved
+    ) is None
+
+
+def test_prune_rejects_indivisible_and_subgranule_chunks():
+    v = KernelVariant("ficco_ag_matmul", chunks=7, block_m=256,
+                      block_n=256, block_k=64)
+    reason = check_variant(v, GEMM, MI300X)
+    assert reason is not None and "indivisible" in reason
+    # A chunk smaller than the DMA granule can't be described.
+    small = GemmShape(128, 4096, 8, 1)
+    v2 = KernelVariant("ficco_ag_matmul", chunks=16, block_m=256,
+                       block_n=256, block_k=64)
+    reason2 = check_variant(v2, small, MI300X)
+    assert reason2 is not None and "granule" in reason2
+
+
+def test_prune_preserves_order_and_partitions():
+    cands = enumerate_variants("dma_exchange", MI300X)
+    feasible, rejected = prune_variants(cands, GEMM, MI300X)
+    assert len(feasible) + len(rejected) == len(cands)
+    # order preserved: feasible appears in enumeration order
+    pos = {v: i for i, v in enumerate(cands)}
+    assert [pos[v] for v in feasible] == sorted(pos[v] for v in feasible)
+
+
+# ---------------------------------------------------------------------------
+# Cost model sanity.
+# ---------------------------------------------------------------------------
+
+
+def test_variant_cost_positive_and_variant_sensitive():
+    for kernel in KERNELS:
+        base = default_variant(kernel, MI300X)
+        costs = {
+            v: variant_cost(v, GEMM, MI300X)
+            for v in enumerate_variants(kernel, MI300X)
+        }
+        assert all(c > 0.0 and np.isfinite(c) for c in costs.values())
+        # the space is not flat: some variant prices differently
+        assert len({round(c, 15) for c in costs.values()}) > 1
+        assert costs[base] == variant_cost(base, GEMM, MI300X)
+
+
+def test_deeper_buffering_never_slower_on_skew():
+    skew = StepProfile((0.5, 0.2, 0.1, 0.1, 0.05, 0.03, 0.01, 0.01),
+                       name="hot")
+    d2 = dataclasses.replace(default_variant("ficco_ag_matmul", MI300X),
+                             buffer_depth=2)
+    d3 = dataclasses.replace(d2, buffer_depth=3)
+    assert variant_cost(d3, GEMM, MI300X, profile=skew) <= variant_cost(
+        d2, GEMM, MI300X, profile=skew
+    )
+
+
+# ---------------------------------------------------------------------------
+# Variant-keyed cache records.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.autotune
+def test_variant_keys_survive_schema_round_trip(tmp_path):
+    from repro.autotune.cache import AutotuneCache
+    from repro.learn import records_from_cache, variant_records_from_cache
+
+    tuner = _tuner(tmp_path)
+    feasible, _ = prune_variants(
+        enumerate_variants("dma_exchange", MI300X), GEMM, MI300X
+    )
+    timings = tuner.measure_variants("dma_exchange", GEMM, feasible,
+                                     machine=MI300X)
+    assert len(timings) == len(feasible)
+
+    # Reload the persisted file through a fresh cache object.
+    reloaded = AutotuneCache(path=tuner.cache.path)
+    assert len(reloaded.entries) == len(tuner.cache.entries)
+
+    # 8-segment variant keys are invisible to the 7-segment extractor...
+    assert records_from_cache(reloaded, MI300X.name) == []
+    # ...and fully recovered by the variant-aware one.
+    recs = variant_records_from_cache(reloaded, MI300X.name)
+    assert len(recs) == len(feasible)
+    assert {r.variant for r in recs} == {v.digest() for v in feasible}
+    assert all(r.schedule == KERNEL_SCHEDULE["dma_exchange"] for r in recs)
+    assert all(r.profile is None for r in recs)
+    # kernel filter
+    assert variant_records_from_cache(
+        reloaded, MI300X.name, kernel="ficco_ag_matmul"
+    ) == []
+
+
+# ---------------------------------------------------------------------------
+# Search: beats the single-variant default, promotes the winner.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.autotune
+def test_search_beats_default_and_promotes(tmp_path):
+    from repro.tune.registry import resolve_variant
+
+    tuner = _tuner(tmp_path)
+    improved = 0
+    for kernel in KERNELS:
+        res = search_kernel_variants(kernel, GEMM, MI300X, tuner=tuner)
+        assert res.n_feasible > 0
+        assert res.best_seconds <= res.default_seconds
+        improved += res.speedup > 1.0
+        # the winner is what the kernels now resolve by default
+        got = resolve_variant(kernel, MI300X, cache=tuner.cache)
+        assert got == res.best
+    # acceptance: at least one kernel's search beat the incumbent
+    assert improved >= 1
+
+
+@pytest.mark.autotune
+def test_promotion_persists_across_processes(tmp_path):
+    from repro.autotune.cache import AutotuneCache
+    from repro.tune.registry import reset_variants, resolve_variant
+
+    tuner = _tuner(tmp_path)
+    res = search_kernel_variants("ficco_ag_matmul", GEMM, MI300X,
+                                 tuner=tuner)
+    # Simulate a new process: in-memory promotions gone, artifact left.
+    reset_variants()
+    reloaded = AutotuneCache(path=tuner.cache.path)
+    got = resolve_variant("ficco_ag_matmul", MI300X, cache=reloaded)
+    assert got == res.best
+    # And with no artifact either, the structural default comes back.
+    reset_variants()
+    empty = AutotuneCache(path=str(tmp_path / "empty.json"))
+    assert resolve_variant(
+        "ficco_ag_matmul", MI300X, cache=empty
+    ) == default_variant("ficco_ag_matmul", MI300X)
+
+
+# ---------------------------------------------------------------------------
+# Variant timings -> fit objective.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.autotune
+def test_variant_records_fit_machine(tmp_path):
+    from repro.learn import fit_machine, variant_records_from_cache
+
+    tuner = _tuner(tmp_path)
+    for g in (
+        GemmShape(2048, 4096, 4096, 2),
+        GemmShape(4096, 4096, 2048, 2),
+        GemmShape(8192, 2048, 4096, 1),
+    ):
+        feasible, _ = prune_variants(
+            enumerate_variants("dma_exchange", MI300X), g, MI300X
+        )
+        tuner.measure_variants("dma_exchange", g, feasible, machine=MI300X)
+    recs = variant_records_from_cache(tuner.cache, MI300X.name)
+    assert len(recs) >= 3
+    fit = fit_machine(MI300X, recs, steps=60)
+    # acceptance: fitting to the variant timings strictly beats the
+    # registry-default parameters in log-time MSE
+    assert fit.loss < fit.loss0
+
+
+# ---------------------------------------------------------------------------
+# Skewed ficco_a2a_ffn: profile-keyed records join the measured
+# shortlist AND the ragged fit objective.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.autotune
+def test_skewed_a2a_profile_records_join_shortlist_and_fit(tmp_path):
+    from repro.learn import fit_machine, variant_records_from_cache
+    from repro.learn.measured import MeasuredEngine
+
+    tuner = _tuner(tmp_path)
+    profile = StepProfile((0.4, 0.2, 0.15, 0.1, 0.05, 0.05, 0.03, 0.02),
+                          name="zipf-hot")
+    assert not profile.is_uniform
+    res = search_kernel_variants(
+        "ficco_a2a_ffn", GEMM, MI300X, profile=profile, tuner=tuner
+    )
+    assert res.n_feasible > 0
+
+    # (a) the per-variant records carry the raw fractions and rebuild
+    # the ragged fit objective.
+    recs = variant_records_from_cache(
+        tuner.cache, MI300X.name, kernel="ficco_a2a_ffn"
+    )
+    assert recs and all(r.profile is not None for r in recs)
+    np.testing.assert_allclose(
+        recs[0].profile, profile.trimmed().fractions
+    )
+    fit = fit_machine(MI300X, recs, steps=60)
+    assert fit.loss < fit.loss0
+
+    # (b) the promoted winner's plain profile-keyed record reaches the
+    # measured-engine shortlist for the matching ragged scenario.
+    scen = RaggedScenario(
+        name="ep-moe/zipf-hot", parallelism="EP", model="moe",
+        gemm=GEMM, profile=profile,
+        collective=CollectiveKind.ALL_TO_ALL,
+    )
+    # top wide enough that the chunked lane survives the analytic
+    # shortlist — the point under test is the profile-keyed override.
+    eng = MeasuredEngine(cache=tuner.cache, top=8)
+    grid = eng.evaluate([scen], (MI300X,))
+    l = grid.schedules.index(KERNEL_SCHEDULE["ficco_a2a_ffn"])
+    assert grid.valid[l, 0, 0]
+    assert grid.total[l, 0, 0] == pytest.approx(res.best_seconds)

@@ -12,3 +12,6 @@ def test_dma_kernels_multidevice():
     assert "ok exchange_matches_all_gather" in out
     assert "ok dma_schedule_matches_serial" in out
     assert "ok fused_kernel_matches_serial" in out
+    assert "ok ag_fused_variants_bit_identical" in out
+    assert "ok dma_schedule_variants_match" in out
+    assert "ok a2a_ffn_variants_bit_identical" in out

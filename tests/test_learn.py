@@ -576,7 +576,7 @@ class TestMeasuredEngine:
         eng = get_engine("measured")
         assert isinstance(eng, Engine)
         assert eng.name == "measured"
-        assert not eng.supports_ragged
+        assert eng.supports_ragged
         assert not eng.jit
         assert not eng.differentiable
         assert eng.trace_safe
@@ -615,13 +615,31 @@ class TestMeasuredEngine:
         # Invalidated entries are NaN.
         assert np.isnan(grid.total[~grid.valid]).all()
 
-    def test_ragged_rejected_per_capability_flag(self):
+    def test_ragged_shortlist_with_profile_keyed_override(self):
         from repro.autotune.cache import AutotuneCache
+        from repro.autotune.tuner import TuneKey
         from repro.learn.measured import MeasuredEngine
 
         rb = synthetic_ragged_batch(4, seed=0)
-        with pytest.raises(TypeError):
-            MeasuredEngine(AutotuneCache()).evaluate(rb, (MI300X,))
+        base = get_engine("numpy").evaluate(rb, (MI300X,))
+        l0 = int(base.best_idx()[0, 0])
+        t_meas = 0.5 * float(base.total[l0, 0, 0])
+        cache = AutotuneCache()
+        cache.put(
+            str(
+                TuneKey.for_gemm(
+                    rb.gemm(0), MI300X, profile=rb.profile(0)
+                )
+            ),
+            {"schedule": base.schedules[l0].value, "source": "measured",
+             "model_total_s": None, "measured_total_s": t_meas},
+            persist=False,
+        )
+        grid = MeasuredEngine(cache, top=3).evaluate(rb, (MI300X,))
+        # Profile-keyed measured record overrides the model time.
+        assert grid.total[l0, 0, 0] == t_meas
+        # Shortlist semantics carry over to ragged grids.
+        assert (grid.valid.sum(axis=0) <= 4).all()
 
     def test_no_reregistration_on_reimport(self):
         import importlib
@@ -996,3 +1014,58 @@ def test_check_regression_skips_zero_baselines(capsys):
     )
     assert bad == []
     assert "skipping" in capsys.readouterr().err
+
+
+class TestRefineGate:
+    """refine_gate: per-leaf sub-bin threshold refinement on a grid."""
+
+    def test_never_worse_on_refit_grid(self):
+        """Refinement strictly reduces (or preserves) quantized regret
+        and never loses within-5% accuracy on the grid it refits to —
+        the current threshold is always a candidate."""
+        from repro.learn import refine_gate
+
+        rb = synthetic_ragged_batch(400, seed=31)
+        machines = MACHINES[:3]
+        stats, _ = sweep_stats(rb, machines, num_shards=4)
+        gate = train_gate_from_stats(stats)
+        grid = get_engine("numpy").evaluate(rb, machines)
+
+        refined = refine_gate(gate, grid)
+        info = refined.meta["refine"]
+        assert info["regret_q_after"] <= info["regret_q_before"]
+        assert info["win5_after"] >= info["win5_before"]
+        assert info["n_rows"] == 400 * len(machines)
+        assert gate_accuracy(grid, refined) >= gate_accuracy(grid, gate)
+        # Same tree structure, only leaf thresholds moved.
+        assert refined.n_leaves == gate.n_leaves
+        assert refined.features == gate.features
+
+    def test_roundtrip_and_input_untouched(self):
+        from repro.learn import refine_gate
+
+        rb = synthetic_ragged_batch(200, seed=32)
+        machines = MACHINES[:2]
+        stats, _ = sweep_stats(rb, machines, num_shards=2)
+        gate = train_gate_from_stats(stats)
+        before = gate.to_json()
+        grid = get_engine("numpy").evaluate(rb, machines)
+        refined = refine_gate(gate, grid, sub_bins=4)
+        # The input gate is deep-copied, never mutated.
+        assert gate.to_json() == before
+        back = LearnedGate.from_json(refined.to_json())
+        assert back.to_json() == refined.to_json()
+
+    def test_sub_bins_validated(self):
+        from repro.learn import refine_gate
+
+        gate = train_gate_from_stats(
+            sweep_stats(
+                synthetic_batch(100, seed=33), MACHINES[:2], num_shards=2
+            )[0]
+        )
+        grid = get_engine("numpy").evaluate(
+            synthetic_batch(100, seed=33), MACHINES[:2]
+        )
+        with pytest.raises(ValueError, match="sub_bins"):
+            refine_gate(gate, grid, sub_bins=0)
