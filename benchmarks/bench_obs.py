@@ -9,6 +9,13 @@ enabled numbers are recorded for trend tracking, not gated: tracing on
 is a debugging/profiling mode, and its cost is dominated by span-arg
 dict construction.
 
+The signature stream and drift sentinel (this PR's additions) sit on
+the *decision* hot path — the serving tier picks in tens of
+microseconds — so their steady-state per-call costs are gated too:
+``obs/signature_overhead`` (memoized ``observe_decision``) and
+``obs/sentinel_step`` (one ``observe_residual``) join THROUGHPUT_KEYS.
+The signature budget is <=5% of ``serve/decisions_per_s``.
+
   obs/span_disabled       — one ``trace.span(...)`` call, tracer off
                             (the per-site tax every instrumented call
                             pays forever)
@@ -16,9 +23,15 @@ dict construction.
   obs/sweep_disabled      — sharded sweep us/point, tracer off (GATED)
   obs/sweep_enabled       — same sweep, tracer + metrics recording on
   obs/overhead_pct        — enabled/disabled - 1, as a percentage
+  obs/signature_overhead  — one memoized signature observe (GATED)
+  obs/sentinel_step       — one sentinel residual step (GATED)
 """
 
-from repro.core.workload import machine_grid
+from repro.core.machine import TPU_V5E
+from repro.core.schedule_types import Schedule
+from repro.core.workload import GemmShape, machine_grid
+from repro.obs import sentinel as obs_sentinel
+from repro.obs import signature as obs_signature
 from repro.obs import trace as obs_trace
 from repro.sweep import sweep_grid, synthetic_batch
 
@@ -26,6 +39,7 @@ from benchmarks.common import row, timed
 
 _S = 8192
 _SPAN_CALLS = 100_000
+_SIG_CALLS = 50_000
 _SHARDS = 4
 
 
@@ -38,6 +52,21 @@ def _span_loop(n: int) -> None:
 
 def _sweep(sb, machines) -> None:
     sweep_grid(sb, machines, num_shards=_SHARDS, mode="reduce")
+
+
+def _signature_loop(n: int) -> None:
+    stream = obs_signature.get_signatures()
+    gemm = GemmShape(4096, 4096, 4096, 2)
+    sched = Schedule.UNIFORM_FUSED_1D
+    for _ in range(n):
+        stream.observe_decision(
+            gemm, TPU_V5E, sched, group=8, source="bench",
+        )
+
+
+def _sentinel_loop(sentinel, n: int) -> None:
+    for _ in range(n):
+        sentinel.observe_residual(1.0e-3, 1.0e-3, key="bench")
 
 
 def run() -> list[str]:
@@ -61,6 +90,18 @@ def run() -> list[str]:
     obs_trace.disable()
 
     overhead = 100.0 * (sweep_on / sweep_off - 1.0)
+
+    # Steady state: the decomposition is memoized after the first
+    # sighting of the decision key, so this measures the permanent
+    # per-decision tax (dict hit + locked float adds), not the one-time
+    # analytic lowering.
+    obs_signature.enable_signatures(None)
+    _, us_sig = timed(_signature_loop, _SIG_CALLS)
+    obs_signature._STREAM = None
+
+    sentinel = obs_sentinel.Sentinel(obs_sentinel.SentinelConfig())
+    _, us_sen = timed(_sentinel_loop, sentinel, _SIG_CALLS)
+
     return [
         row("obs/span_disabled", us_off / _SPAN_CALLS,
             f"{1e3 * us_off / _SPAN_CALLS:.1f} ns per disabled span"),
@@ -73,4 +114,10 @@ def run() -> list[str]:
             f"({n_events} events)"),
         row("obs/overhead_pct", 0.0,
             f"{overhead:.1f}% sweep slowdown with tracing enabled"),
+        row("obs/signature_overhead", us_sig / _SIG_CALLS,
+            f"{1e3 * us_sig / _SIG_CALLS:.0f} ns per memoized "
+            f"signature observe"),
+        row("obs/sentinel_step", us_sen / _SIG_CALLS,
+            f"{1e3 * us_sen / _SIG_CALLS:.0f} ns per sentinel "
+            f"residual step"),
     ]

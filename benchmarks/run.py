@@ -43,6 +43,8 @@ THROUGHPUT_KEYS = (
     "ragged/jax",
     "sweepshard/reduce",
     "obs/sweep_disabled",
+    "obs/signature_overhead",
+    "obs/sentinel_step",
     "sweepdevice/fused",
     "sweepdevice/stats",
     "sweepdevice/ragged_stats",

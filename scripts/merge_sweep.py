@@ -150,6 +150,12 @@ def main() -> None:
         help="exit 3 if any expected shard is unreported (the signal a "
         "re-dispatcher keys off)",
     )
+    ap.add_argument(
+        "--metrics", nargs="+", default=None, metavar="JSONL",
+        help="per-host metrics exports (sweep.py --metrics): their last "
+        "snapshots are unioned (repro.obs.metrics.merge_snapshots) and "
+        "folded into the output under 'metrics'",
+    )
     args = ap.parse_args()
 
     streams = []
@@ -161,6 +167,21 @@ def main() -> None:
     except ValueError as e:
         print(f"# REFUSED: {e}", file=sys.stderr)
         sys.exit(4)
+
+    if args.metrics:
+        from repro.obs import metrics as obs_metrics
+
+        snaps = []
+        for path in args.metrics:
+            last = None
+            with open(path) as f:
+                for line in f:
+                    if line.strip():
+                        last = json.loads(line)
+            if last is not None:
+                snaps.append(last)
+        if snaps:
+            merged["metrics"] = obs_metrics.merge_snapshots(snaps)
 
     text = json.dumps(merged, indent=1, sort_keys=True)
     if args.out:

@@ -259,7 +259,13 @@ def main() -> None:
     if args.metrics:
         from repro.obs import metrics as obs_metrics
 
-        obs_metrics.get_metrics().export_jsonl(args.metrics)
+        # Reservoir + host identity make the export fleet-mergeable:
+        # scripts/obs_merge.py recovers exact union percentiles and
+        # attributes every counter to its host.
+        obs_metrics.get_metrics().export_jsonl(
+            args.metrics, reservoir=True,
+            host={"host_index": args.host_index},
+        )
     if args.trace:
         from repro.obs import trace as obs_trace
 

@@ -1,6 +1,6 @@
 """Observability CLI: schedule timelines, trace/metric validation, replay.
 
-Four subcommands over the :mod:`repro.obs` stack:
+Five subcommands over the :mod:`repro.obs` stack:
 
 ``timeline``
     Render named Table-I scenarios (or any ``--gemm M N K``) as per-step
@@ -14,11 +14,24 @@ Four subcommands over the :mod:`repro.obs` stack:
 
 ``validate``
     Schema-validate an exported trace file, metrics snapshot (JSONL),
-    or decision-audit log; exit non-zero on any violation (CI hook)::
+    decision-audit log, signature-snapshot stream, sentinel-event
+    stream, or merged fleet snapshot; exit non-zero on any violation
+    (CI hook)::
 
         PYTHONPATH=src python scripts/trace.py validate trace.json
         PYTHONPATH=src python scripts/trace.py validate --kind metrics \\
             metrics.jsonl
+        PYTHONPATH=src python scripts/trace.py validate --kind sentinel \\
+            sentinel.jsonl
+
+``signature``
+    Overlay streamed inefficiency-signature snapshots
+    (``REPRO_SIGNATURES=sig.jsonl`` / ``--signatures``) on the schedule
+    grid: per (machine family, scenario class) row, each observed
+    schedule's decision count, mean analytic time, and dominant loss
+    category::
+
+        PYTHONPATH=src python scripts/trace.py signature sig.jsonl
 
 ``metrics``
     Summarize a metrics JSONL snapshot stream: counters, histogram
@@ -41,6 +54,8 @@ from repro.core.schedule_types import STUDIED, Schedule
 from repro.core.workload import SCENARIOS, GemmShape
 from repro.obs import audit as obs_audit
 from repro.obs import metrics as obs_metrics
+from repro.obs import sentinel as obs_sentinel
+from repro.obs import signature as obs_signature
 from repro.obs import timeline as obs_timeline
 from repro.obs import trace as obs_trace
 
@@ -110,20 +125,33 @@ def cmd_timeline(args) -> int:
     return 0
 
 
+def _jsonl(path):
+    with open(path) as f:
+        return [json.loads(line) for line in f if line.strip()]
+
+
 def cmd_validate(args) -> int:
     errors: list[str] = []
     if args.kind == "trace":
         with open(args.path) as f:
             errors = obs_trace.validate_trace(json.load(f))
     elif args.kind == "metrics":
+        for i, snap in enumerate(_jsonl(args.path)):
+            errors += [
+                f"line {i}: {e}"
+                for e in obs_metrics.validate_snapshot(snap)
+            ]
+    elif args.kind == "merged":
         with open(args.path) as f:
-            for i, line in enumerate(f):
-                if not line.strip():
-                    continue
-                errors += [
-                    f"line {i}: {e}"
-                    for e in obs_metrics.validate_snapshot(json.loads(line))
-                ]
+            errors = obs_metrics.validate_merged_snapshot(json.load(f))
+    elif args.kind == "signature":
+        for i, snap in enumerate(_jsonl(args.path)):
+            errors += [
+                f"line {i}: {e}"
+                for e in obs_signature.validate_signature(snap)
+            ]
+    elif args.kind == "sentinel":
+        errors = obs_sentinel.validate_sentinel(_jsonl(args.path))
     else:  # audit
         try:
             errors = obs_audit.validate_audit(obs_audit.read_audit(args.path))
@@ -168,6 +196,53 @@ def cmd_metrics(args) -> int:
                 f"{t}={r:.2%}" for t, r in sorted(rates.items())
             )
             print(f"  tier rates: {pretty}")
+    return 0
+
+
+def cmd_signature(args) -> int:
+    snaps = _jsonl(args.path)
+    if not snaps:
+        print("no signature snapshots", file=sys.stderr)
+        return 1
+    errors = []
+    for i, snap in enumerate(snaps):
+        errors += [
+            f"line {i}: {e}" for e in obs_signature.validate_signature(snap)
+        ]
+    if errors:
+        for e in errors:
+            print(f"invalid: {e}", file=sys.stderr)
+        return 1
+    grid = obs_signature.overlay(snaps)
+    observed = sorted(
+        {sched for row in grid.values() for sched in row}
+    )
+    print(
+        f"{len(snaps)} snapshot(s), {len(grid)} (family, scenario) rows, "
+        f"{len(observed)} schedules observed"
+    )
+    for (family, scenario) in sorted(grid):
+        row = grid[(family, scenario)]
+        print(f"\n{family} :: {scenario}")
+        for sched in observed:
+            agg = row.get(sched)
+            if agg is None:
+                print(f"  {sched:<18} -")
+                continue
+            fracs = ", ".join(
+                f"{k}={v:.1%}"
+                for k, v in sorted(
+                    agg["loss_fractions"].items(),
+                    key=lambda kv: -kv[1],
+                )
+                if v > 0.0
+            )
+            print(
+                f"  {sched:<18} n={agg['count']:<6}"
+                f" mean={agg['mean_total_s'] * 1e3:.4f}ms"
+                f"  dominant={agg['dominant']}"
+                + (f"  [{fracs}]" if fracs else "")
+            )
     return 0
 
 
@@ -228,9 +303,20 @@ def main() -> None:
     va = sub.add_parser("validate", help="schema-validate an export")
     va.add_argument("path")
     va.add_argument(
-        "--kind", choices=("trace", "metrics", "audit"), default="trace",
+        "--kind",
+        choices=(
+            "trace", "metrics", "audit", "signature", "sentinel", "merged",
+        ),
+        default="trace",
     )
     va.set_defaults(fn=cmd_validate)
+
+    sg = sub.add_parser(
+        "signature",
+        help="overlay streamed inefficiency signatures on the schedule grid",
+    )
+    sg.add_argument("path", help="signature snapshot JSONL (REPRO_SIGNATURES)")
+    sg.set_defaults(fn=cmd_signature)
 
     me = sub.add_parser("metrics", help="summarize a metrics JSONL stream")
     me.add_argument("path")

@@ -37,6 +37,7 @@ from repro.core.schedule_types import Schedule
 from repro.core.workload import GemmShape
 from repro.obs import audit as _audit
 from repro.obs import metrics as _metrics
+from repro.obs import signature as _signature
 from repro.obs import trace as _trace
 
 from repro.autotune.cache import AutotuneCache
@@ -207,14 +208,30 @@ class Autotuner:
         return _audit.get_audit()
 
     def _observe(self, kind: str, key: TuneKey, dec: TuneDecision,
-                 seconds: float) -> None:
-        """Metrics + audit for one decision.  Never raises — the tuner's
-        never-raise contract outranks observability."""
+                 seconds: float, *, gemm=None, machine=None,
+                 group=None, profile=None) -> None:
+        """Metrics + audit + signature attribution for one decision.
+        Never raises — the tuner's never-raise contract outranks
+        observability.
+
+        ``gemm``/``machine``/``group``/``profile`` carry the live
+        scenario objects to the signature stream: the :class:`TuneKey`
+        alone cannot reconstruct a ragged step profile (digests are
+        one-way), so attribution takes the originals.
+        """
         try:
             reg = _metrics.get_metrics()
             reg.counter("tuner/decisions").inc()
             reg.counter(f"tuner/pick.{dec.source}").inc()
             reg.histogram("tuner/pick_seconds").observe(seconds)
+            stream = _signature.get_signatures()
+            if stream is not None and gemm is not None and machine is not None:
+                stream.observe_decision(
+                    gemm, machine, dec.schedule,
+                    group=group, profile=profile, source=dec.source,
+                    model_total_s=dec.model_total_s,
+                    measured_total_s=dec.measured_total_s,
+                )
             log = self._audit_log()
             if log is not None:
                 log.record({
@@ -325,7 +342,10 @@ class Autotuner:
                 shortlist=[[s, t] for s, t in dec.shortlist],
                 **({"gate": dec.gate} if dec.gate is not None else {}),
             )
-        self._observe("pick", tkey, dec, time.perf_counter() - t0)
+        self._observe(
+            "pick", tkey, dec, time.perf_counter() - t0,
+            gemm=gemm, machine=machine, group=group, profile=profile,
+        )
         return dec
 
     def _pick_impl(
@@ -548,7 +568,10 @@ class Autotuner:
             _metrics.get_metrics().counter("tuner/measure").inc()
         except Exception:  # pragma: no cover
             pass
-        self._observe("measure", tkey, dec, time.perf_counter() - t0)
+        self._observe(
+            "measure", tkey, dec, time.perf_counter() - t0,
+            gemm=gemm, machine=machine, group=g,
+        )
         return dec
 
     def measure_variants(

@@ -369,3 +369,60 @@ def comm_cil(
 def hbm_move_time(nbytes: float, machine: MachineSpec) -> float:
     """Device-local HBM copy (read + write) — Gather/Scatter cost."""
     return machine.kernel_latency + 2.0 * nbytes / machine.hbm_bw
+
+
+def loss_components(
+    result,
+    *,
+    comm_cil: float | None = None,
+    gemm_cil: float | None = None,
+) -> dict:
+    """Exactly-integrating loss decomposition of one simulated schedule.
+
+    Splits a :class:`~repro.core.simulator.SimResult`'s end-to-end time
+    into additive components that sum back to ``result.total`` in exact
+    float arithmetic (modulo the usual summation rounding), so streaming
+    accumulators can attribute *all* of a decision's time to a loss
+    category and audits can assert ``sum(components) == total``:
+
+      ``serial_gemm_s``          the isolated un-chunked GEMM
+      ``gemm_decomposition_s``   DIL of the chunked GEMMs
+                                 (busy/cil - serial: re-reads, launch
+                                 latency, tile quantization)
+      ``gemm_contention_s``      compute slowdown from concurrent
+                                 streams (busy * (1 - 1/cil))
+      ``exposed_comm_s``         comm the compute channel stalled on
+      ``comm_tail_s``            comm outlasting the last compute step
+                                 (total - compute-side finish; 0 when
+                                 compute-bound)
+
+    The CIL split needs the scalar factors the uniform lowering records
+    (``ScheduleSteps.comm_cil``/``gemm_cil``); when they are absent
+    (ragged lowerings apply CIL per step internally) the compute side
+    stays whole:
+
+      ``compute_busy_s`` + ``exposed_comm_s`` + ``comm_tail_s`` == total
+
+    The pipeline recurrence guarantees ``total = max(compute_finish,
+    comm_finish)`` with ``compute_finish = compute_busy + exposed``, so
+    the tail term is what makes the identity hold in comm-bound regimes
+    either way.
+    """
+    tail = result.total - result.compute_busy - result.exposed_comm
+    if gemm_cil is not None:
+        return {
+            "serial_gemm_s": result.serial_gemm,
+            "gemm_decomposition_s": (
+                result.compute_busy / gemm_cil - result.serial_gemm
+            ),
+            "gemm_contention_s": (
+                result.compute_busy * (1.0 - 1.0 / gemm_cil)
+            ),
+            "exposed_comm_s": result.exposed_comm,
+            "comm_tail_s": tail,
+        }
+    return {
+        "compute_busy_s": result.compute_busy,
+        "exposed_comm_s": result.exposed_comm,
+        "comm_tail_s": tail,
+    }

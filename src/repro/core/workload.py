@@ -248,16 +248,26 @@ class StepProfile:
         Computed on the trimmed profile: zero padding is proven not to
         change any engine figure, so a padded profile must share its
         cache key with its trimmed twin rather than fragment the store.
+
+        Memoized per instance — the class is frozen, so the identity
+        never changes, and the hot decision paths (autotune cache,
+        serving tier, signature stream) key by it on every call.
         """
+        cached = self.__dict__.get("_digest")
+        if cached is not None:
+            return cached
         p = self.trimmed()
         if p.is_uniform:
-            return f"u{p.steps}"
-        import hashlib
+            d = f"u{p.steps}"
+        else:
+            import hashlib
 
-        h = hashlib.sha256()
-        for f in p.fractions:
-            h.update(repr(round(f, 12)).encode())
-        return f"{p.name}-{p.steps}-{h.hexdigest()[:10]}"
+            h = hashlib.sha256()
+            for f in p.fractions:
+                h.update(repr(round(f, 12)).encode())
+            d = f"{p.name}-{p.steps}-{h.hexdigest()[:10]}"
+        object.__setattr__(self, "_digest", d)
+        return d
 
     # -- constructors ---------------------------------------------------
 

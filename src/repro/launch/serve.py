@@ -54,7 +54,17 @@ def main():
                     help="background re-fit cadence seconds")
     ap.add_argument("--adapt-explore-rate", type=float, default=1.0,
                     help="measured-tier token-bucket refill (sessions/s)")
+    ap.add_argument("--adapt-no-sentinel", action="store_true",
+                    help="disable the drift sentinel (repro.obs.sentinel)")
+    ap.add_argument("--signatures", metavar="PATH", default=None,
+                    help="stream per-decision inefficiency signatures to "
+                    "this JSONL path (repro.obs.signature)")
     args = ap.parse_args()
+
+    if args.signatures:
+        from repro.obs import signature as _signature
+
+        _signature.enable_signatures(args.signatures)
 
     cfg = get_config(args.arch).reduced()
     if args.overlap_mode != "gspmd_serial":
@@ -75,6 +85,7 @@ def main():
                 ttl_s=args.adapt_ttl,
                 refit_interval_s=args.adapt_refit_s,
                 explore_rate=args.adapt_explore_rate,
+                sentinel=not args.adapt_no_sentinel,
             ),
         ).start()
     eng = DecodeEngine(
@@ -105,6 +116,16 @@ def main():
         sched = dec.schedule.value if dec is not None else "-"
         print(f"adapt: schedule={sched} stats={tier.stats()}")
         tier.stop()
+    if args.signatures:
+        from repro.obs import signature as _signature
+
+        stream = _signature.get_signatures()
+        if stream is not None:
+            snap = stream.export_jsonl()
+            print(
+                f"signatures: {len(snap['cells'])} cells "
+                f"-> {args.signatures}"
+            )
     for i, r in enumerate(out):
         print(f"req{i}: {list(r.prompt)} -> {r.out}")
 

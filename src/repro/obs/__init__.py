@@ -13,20 +13,34 @@ Three layers over the engine/sweep/autotune/serve stack:
   (``REPRO_AUTOTUNE_AUDIT=path`` or ``Autotuner(audit=...)``).
 * :mod:`repro.obs.timeline` — any simulated schedule rendered as a
   per-step comm/GEMM/DMA lane trace with its inefficiency signature.
+* :mod:`repro.obs.signature` — the signature as a *streaming*
+  observable: every live tuner / serving-tier decision decomposed into
+  the paper's loss categories and accumulated per (machine family,
+  scenario class, schedule) (``REPRO_SIGNATURES=path`` or
+  ``signature.enable_signatures()``).
+* :mod:`repro.obs.sentinel` — EWMA/CUSUM drift monitor over
+  predicted-vs-measured residuals and gate agreement, emitting typed
+  refit-trigger events the serving tier's ``Refitter`` acts on.
+
+Fleet merge: ``metrics.merge_snapshots`` / ``trace.merge_traces`` union
+host-stamped exports from a multi-host sweep into one metrics/timeline
+view (``scripts/obs_merge.py``).
 
 This package ``__init__`` stays stdlib-only: the instrumented modules
 (``repro.core.engine``, the sweep runner, the tuner) import
 ``repro.obs.trace`` at their own import time, which executes this file —
 pulling ``repro.core`` back in here would be a cycle.  ``timeline``
 (which needs the simulator) is therefore exported lazily, the same
-PEP 562 pattern ``repro.sweep.__init__`` uses to stay jax-free.
+PEP 562 pattern ``repro.sweep.__init__`` uses to stay jax-free;
+``signature``/``sentinel`` join it for symmetry (their module bodies
+are stdlib-only, their functions lazy-import the core).
 """
 
 from __future__ import annotations
 
 from repro.obs import audit, metrics, trace
 
-_LAZY = {"timeline"}
+_LAZY = {"timeline", "signature", "sentinel"}
 
 
 def __getattr__(name: str):
@@ -37,4 +51,6 @@ def __getattr__(name: str):
     raise AttributeError(f"module 'repro.obs' has no attribute {name!r}")
 
 
-__all__ = ["trace", "metrics", "audit", "timeline"]
+__all__ = [
+    "trace", "metrics", "audit", "timeline", "signature", "sentinel",
+]

@@ -35,7 +35,10 @@ import threading
 import time
 
 ENV_VAR = "REPRO_AUTOTUNE_AUDIT"
+ENV_MAX_BYTES = "REPRO_AUTOTUNE_AUDIT_MAX_BYTES"
+ENV_KEEP = "REPRO_AUTOTUNE_AUDIT_KEEP"
 AUDIT_FILENAME = "decisions.jsonl"
+DEFAULT_KEEP = 3
 
 
 def default_audit_path() -> str:
@@ -47,17 +50,46 @@ def default_audit_path() -> str:
 
 
 class AuditLog:
-    """Append-only JSONL decision log.
+    """Append-only JSONL decision log with size-based rotation.
 
     Each :meth:`record` call appends one line and closes the file, so
     concurrent processes auditing into the same path interleave whole
     lines (POSIX O_APPEND) and a crash loses at most the in-flight
     record.
+
+    ``max_bytes`` bounds the live file: when an append would grow it
+    past the bound, the live file rolls to ``path.1`` (existing rolled
+    segments shift up, the oldest beyond ``keep`` is dropped) — a week
+    of serve traffic keeps at most ``(keep + 1) * max_bytes`` on disk.
+    Defaults come from ``REPRO_AUTOTUNE_AUDIT_MAX_BYTES`` /
+    ``REPRO_AUTOTUNE_AUDIT_KEEP`` (unset == unbounded, the historical
+    behavior).  :func:`audit_segments` / :func:`read_audit_segments`
+    and :func:`replay` read across rolled segments oldest-first.
     """
 
-    def __init__(self, path: str | None = None):
+    def __init__(self, path: str | None = None, *,
+                 max_bytes: int | None = None, keep: int | None = None):
         self.path = path or default_audit_path()
+        if max_bytes is None:
+            max_bytes = int(os.environ.get(ENV_MAX_BYTES, "0") or 0)
+        if keep is None:
+            keep = int(os.environ.get(ENV_KEEP, str(DEFAULT_KEEP))
+                       or DEFAULT_KEEP)
+        self.max_bytes = max(int(max_bytes), 0)  # 0 == unbounded
+        self.keep = max(int(keep), 1)
+        self.rotations = 0
         self._lock = threading.Lock()
+
+    def _rotate_locked(self) -> None:
+        oldest = f"{self.path}.{self.keep}"
+        if os.path.exists(oldest):
+            os.remove(oldest)
+        for i in range(self.keep - 1, 0, -1):
+            src = f"{self.path}.{i}"
+            if os.path.exists(src):
+                os.replace(src, f"{self.path}.{i + 1}")
+        os.replace(self.path, f"{self.path}.1")
+        self.rotations += 1
 
     def record(self, rec: dict) -> None:
         rec.setdefault("ts", time.time())
@@ -66,6 +98,13 @@ class AuditLog:
             d = os.path.dirname(self.path)
             if d:
                 os.makedirs(d, exist_ok=True)
+            if self.max_bytes:
+                try:
+                    size = os.path.getsize(self.path)
+                except OSError:
+                    size = 0
+                if size and size + len(line) > self.max_bytes:
+                    self._rotate_locked()
             with open(self.path, "a") as f:
                 f.write(line)
 
@@ -102,6 +141,30 @@ if _env:  # pragma: no cover - exercised via subprocess in tests
 # ---------------------------------------------------------------------------
 
 
+def audit_segments(path: str) -> list[str]:
+    """Existing on-disk segments of a (possibly rotated) audit log,
+    oldest-first: ``[path.N, ..., path.1, path]``."""
+    rolled: list[str] = []
+    i = 1
+    while os.path.exists(f"{path}.{i}"):
+        rolled.append(f"{path}.{i}")
+        i += 1
+    segments = list(reversed(rolled))
+    if os.path.exists(path) or not segments:
+        segments.append(path)
+    return segments
+
+
+def read_audit_segments(path: str) -> list[dict]:
+    """Parse a rotated audit log across all its segments, in record
+    order (oldest rolled segment first, live file last)."""
+    records: list[dict] = []
+    for seg in audit_segments(path):
+        if os.path.exists(seg):
+            records.extend(read_audit(seg))
+    return records
+
+
 def read_audit(path: str) -> list[dict]:
     """Parse a JSONL audit file; raises ValueError on a malformed line."""
     records: list[dict] = []
@@ -123,11 +186,26 @@ def read_audit(path: str) -> list[dict]:
 _PICK_FIELDS = ("machine", "group", "m", "n", "k", "dtype_bytes")
 
 
+# Non-decision record kinds that legitimately share the audit stream:
+# the serving tier's budgeted measured sessions and the drift
+# sentinel's typed events (validated in depth by
+# ``repro.obs.sentinel.validate_sentinel``) — structurally they only
+# need a numeric timestamp here.
+_AUX_KINDS = ("adapt_measure",)
+_AUX_PREFIXES = ("sentinel_",)
+
+
 def validate_audit(records: list[dict]) -> list[str]:
     """Structural errors in audit records ([] == valid)."""
     errors: list[str] = []
     for i, rec in enumerate(records):
         kind = rec.get("kind")
+        if kind in _AUX_KINDS or (
+            isinstance(kind, str) and kind.startswith(_AUX_PREFIXES)
+        ):
+            if not isinstance(rec.get("ts"), (int, float)):
+                errors.append(f"record[{i}] ({kind}): no numeric 'ts'")
+            continue
         if kind not in ("pick", "measure"):
             errors.append(f"record[{i}]: unknown kind {kind!r}")
             continue
@@ -183,7 +261,7 @@ def replay(records, *, backend: str = "numpy") -> ReplayResult:
     from repro.core.workload import GemmShape
 
     if isinstance(records, str):
-        records = read_audit(records)
+        records = read_audit_segments(records)
 
     cache = AutotuneCache(path=os.devnull)
     cache.entries = {}
@@ -194,6 +272,14 @@ def replay(records, *, backend: str = "numpy") -> ReplayResult:
 
     for i, rec in enumerate(records):
         result.total += 1
+        kind = rec.get("kind")
+        if kind in _AUX_KINDS or (
+            isinstance(kind, str) and kind.startswith(_AUX_PREFIXES)
+        ):
+            result.skipped.append(
+                {"index": i, "reason": f"non-decision kind {kind!r}"}
+            )
+            continue
         machine = MACHINES.get(rec.get("machine"))
         if machine is None:
             result.skipped.append(
@@ -272,13 +358,17 @@ def replay(records, *, backend: str = "numpy") -> ReplayResult:
 
 __all__ = [
     "ENV_VAR",
+    "ENV_MAX_BYTES",
+    "ENV_KEEP",
     "AUDIT_FILENAME",
     "AuditLog",
     "default_audit_path",
     "enable_audit",
     "disable_audit",
     "get_audit",
+    "audit_segments",
     "read_audit",
+    "read_audit_segments",
     "validate_audit",
     "ReplayResult",
     "replay",

@@ -110,6 +110,9 @@ class Tracer:
         self._lock = threading.Lock()
         self._named: set[tuple] = set()
         self._t0 = time.perf_counter()
+        # Epoch anchor of ts==0: what lets merge_traces place this
+        # tracer's relative timestamps on a cross-host timeline.
+        self._epoch0 = time.time()
 
     # -- low-level event plumbing --------------------------------------
 
@@ -164,9 +167,18 @@ class Tracer:
     # -- export ---------------------------------------------------------
 
     def to_json(self) -> dict:
+        from repro.obs.metrics import host_identity  # lazy: no cycle at
+        # package-import time (obs/__init__ imports metrics first, but
+        # this runs long after import).
+
         with self._lock:
             events = list(self.events)
-        return {"traceEvents": events, "displayTimeUnit": "ms"}
+        return {
+            "traceEvents": events,
+            "displayTimeUnit": "ms",
+            "host": host_identity(),
+            "clock": {"epoch0_s": self._epoch0},
+        }
 
     def export(self, path: str | None = None) -> str:
         """Write the Chrome trace JSON; returns the path written."""
@@ -288,6 +300,92 @@ def validate_trace(obj) -> list[str]:
 
 
 # ---------------------------------------------------------------------------
+# Fleet merge: several hosts' exports -> one Perfetto timeline.
+# ---------------------------------------------------------------------------
+
+# Per-host pid stride in a merged trace: host i's original pid p becomes
+# i * _MERGE_PID_STRIDE + p, so process tracks from different hosts
+# never collide in the merged view (in-repo tracers use single-digit
+# pids; the sweep runner's per-shard pids stay well under the stride).
+_MERGE_PID_STRIDE = 10_000
+
+
+def merge_traces(traces) -> dict:
+    """Union per-host Chrome-trace exports onto one timeline.
+
+    Each input is a parsed ``Tracer.to_json()`` object.  Timestamps are
+    tracer-relative microseconds; the per-export ``clock.epoch0_s``
+    anchor (absent on pre-fleet-merge exports — those merge at offset
+    0) shifts every host onto the earliest tracer's clock, and pids are
+    namespaced per host (stride :data:`_MERGE_PID_STRIDE`) with a
+    ``process_name`` metadata row labelling the host, so the merged
+    JSON opens in Perfetto as one timeline with per-host process
+    groups.  The result revalidates under :func:`validate_trace`.
+    """
+    traces = list(traces)
+    if not traces:
+        raise ValueError("merge_traces: no traces given")
+    anchors = []
+    for t in traces:
+        clock = t.get("clock") if isinstance(t, dict) else None
+        anchors.append(
+            float(clock["epoch0_s"])
+            if isinstance(clock, dict)
+            and isinstance(clock.get("epoch0_s"), (int, float))
+            else None
+        )
+    known = [a for a in anchors if a is not None]
+    base = min(known) if known else 0.0
+
+    merged: list[dict] = []
+    hosts: list[dict] = []
+    for i, t in enumerate(traces):
+        events = t.get("traceEvents") or []
+        host = t.get("host") if isinstance(t.get("host"), dict) else {}
+        hosts.append(host or {"hostname": f"trace{i}"})
+        offset_us = (
+            (anchors[i] - base) * 1e6 if anchors[i] is not None else 0.0
+        )
+        label = "{}#{}".format(
+            host.get("hostname", f"trace{i}"), host.get("host_index", i)
+        )
+        seen_pids: set = set()
+        for ev in events:
+            ev = dict(ev)
+            pid = ev.get("pid", 0)
+            ev["pid"] = i * _MERGE_PID_STRIDE + (
+                pid if isinstance(pid, int) else 0
+            )
+            if ev.get("ph") != "M":
+                ev["ts"] = float(ev.get("ts", 0.0)) + offset_us
+            elif ev.get("name") == "process_name":
+                # Prefix the original process name with the host label
+                # so per-host groups read apart in the merged view.
+                args = dict(ev.get("args") or {})
+                args["name"] = f"{label} | {args.get('name', '')}"
+                ev["args"] = args
+            seen_pids.add(ev["pid"])
+            merged.append(ev)
+        # Hosts whose events never named their processes still get a
+        # labelled track.
+        named = {
+            e["pid"] for e in merged
+            if e.get("ph") == "M" and e.get("name") == "process_name"
+        }
+        for pid in sorted(seen_pids - named):
+            merged.append({
+                "name": "process_name", "ph": "M", "ts": 0.0,
+                "pid": pid, "tid": 0, "args": {"name": label},
+            })
+    return {
+        "traceEvents": merged,
+        "displayTimeUnit": "ms",
+        "merged_from": hosts,
+        "clock": {"epoch0_s": base},
+    }
+
+
+# ---------------------------------------------------------------------------
 # Environment hook: REPRO_TRACE=path enables at import, exports at exit.
 # ---------------------------------------------------------------------------
 
@@ -319,4 +417,5 @@ __all__ = [
     "instant",
     "counter",
     "validate_trace",
+    "merge_traces",
 ]

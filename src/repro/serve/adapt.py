@@ -67,7 +67,9 @@ from repro.core.schedule_types import Schedule
 from repro.core.workload import GemmShape, StepProfile
 from repro.obs import audit as _audit
 from repro.obs import metrics as _metrics
+from repro.obs import signature as _signature
 from repro.obs import trace as _trace
+from repro.obs.sentinel import Sentinel, SentinelConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,6 +89,19 @@ class AdaptConfig:
     fit_params: tuple[str, ...] = ("link_bw", "s_half")
     fit_steps: int = 120          # Adam steps per background re-fit
     gate_max_leaves: int = 8
+    # Drift sentinel (repro.obs.sentinel): monitors measured-tier
+    # residuals + gate agreement; an alarm kicks the Refitter awake so
+    # a refit runs at drift time, not at the next wall-clock interval.
+    sentinel: bool = True
+    sentinel_k: float = 0.5       # CUSUM reference (sigma units)
+    sentinel_h: float = 8.0       # CUSUM decision threshold
+    sentinel_min_samples: int = 8  # residuals before alarms arm
+    sentinel_agreement_floor: float = 0.5
+    # Deploy machine re-fits: patch fitted scalar MachineSpec params
+    # (e.g. link_bw) into the tier's machine so future analytic
+    # rankings/predictions use the calibrated values — what makes a
+    # drift-triggered refit actually shrink the residual.
+    deploy_fit: bool = True
 
     def __post_init__(self):
         if self.cache_size < 1:
@@ -274,19 +289,40 @@ class AdaptiveTier:
         self._refitter: Refitter | None = None
         self.gate_version = 0
         self.last_agreement: float | None = None
+        self.sentinel: Sentinel | None = (
+            Sentinel(SentinelConfig(
+                k=self.config.sentinel_k,
+                h=self.config.sentinel_h,
+                min_samples=self.config.sentinel_min_samples,
+                sigma0=self.config.default_sigma,
+                agreement_floor=self.config.sentinel_agreement_floor,
+            ))
+            if self.config.sentinel
+            else None
+        )
+        self.fit_deployed: list[str] = []
         self._warm_start()
 
     # -- lifecycle -------------------------------------------------------
 
     def start(self) -> "AdaptiveTier":
-        """Start the background re-fit thread (idempotent)."""
+        """Start the background re-fit thread (idempotent).
+
+        With a sentinel configured, its alarm hook kicks the re-fit
+        thread awake immediately — drift triggers a refit at alarm
+        time, not at the next wall-clock interval.
+        """
         if self._refitter is None or not self._refitter.is_alive():
             self._refitter = Refitter(self)
             self._refitter.start()
+        if self.sentinel is not None:
+            self.sentinel.on_alarm = self._refitter.kick
         return self
 
     def stop(self) -> None:
         """Stop the re-fit thread and flush the write-behind layer."""
+        if self.sentinel is not None:
+            self.sentinel.on_alarm = None
         if self._refitter is not None:
             self._refitter.stop()
             self._refitter = None
@@ -377,6 +413,14 @@ class AdaptiveTier:
             reg.counter("serve/adapt.decisions").inc()
             reg.counter(f"serve/adapt.pick.{tier}").inc()
             reg.histogram("serve/adapt.pick_seconds").observe(seconds)
+            stream = _signature.get_signatures()
+            if stream is not None:
+                stream.observe_decision(
+                    gemm, machine, dec.schedule,
+                    group=group, profile=profile, source=tier,
+                    model_total_s=dec.model_total_s,
+                    measured_total_s=dec.measured_total_s,
+                )
         except Exception:  # pragma: no cover - observability best-effort
             pass
         return dec
@@ -431,18 +475,25 @@ class AdaptiveTier:
             return None
         winner = min(timings, key=timings.get)
         best = float(timings[winner])
+        model_t = dict(ranked).get(winner)
+        # Every measured session is a predicted/measured pair — the
+        # drift sentinel's residual channel.
+        if self.sentinel is not None and model_t:
+            self.sentinel.observe_residual(float(model_t), best, key=key)
         self.tuner.cache.put(
             key,
             {
                 "schedule": winner.value,
                 "source": "measured",
-                "model_total_s": float(dict(ranked).get(winner, 0.0)) or None,
+                "model_total_s": float(model_t) if model_t else None,
                 "measured_total_s": best,
             },
             persist="defer",
         )
         dec = TuneDecision(
-            winner, "measured", measured_total_s=best, key=key,
+            winner, "measured",
+            model_total_s=float(model_t) if model_t else None,
+            measured_total_s=best, key=key,
             shortlist=tuple(
                 (s.value, float(t))
                 for s, t in sorted(timings.items(), key=lambda kv: kv[1])
@@ -510,7 +561,10 @@ class AdaptiveTier:
         respective stage ran, plus ``flushed``.  Never raises.
         """
         reg = _metrics.get_metrics()
-        out: dict = {}
+        drift = (
+            self.sentinel is not None and self.sentinel.should_refit()
+        )
+        out: dict = {"trigger": "drift" if drift else "interval"}
         try:
             out.update(self._refit_gate())
         except Exception:
@@ -528,6 +582,16 @@ class AdaptiveTier:
             reg.counter("serve/adapt.refits").inc()
         except Exception:  # pragma: no cover
             pass
+        # Close the sentinel loop: a drift-triggered cycle (or one that
+        # actually re-fit the machine model) resets the CUSUM and arms
+        # post-refit recovery tracking.  Interval cycles that did
+        # nothing model-relevant (the common idle case) don't spam
+        # refit events.
+        if self.sentinel is not None and (drift or "fit_sigma" in out):
+            try:
+                self.sentinel.record_refit(out, trigger=out["trigger"])
+            except Exception:  # pragma: no cover
+                pass
         return out
 
     def _grid_from_rows(self, rows):
@@ -605,6 +669,8 @@ class AdaptiveTier:
             self.gate_version += 1
             agreement = observe_gate_agreement(grid, gate=gate)
         self.last_agreement = agreement
+        if self.sentinel is not None:
+            self.sentinel.observe_agreement(agreement)
         # Persist the deployed gate beside the decisions (write-behind).
         try:
             import json as _json
@@ -639,11 +705,53 @@ class AdaptiveTier:
                 steps=self.config.fit_steps,
             )
             # RMS log-time error IS the error bar the exploration
-            # policy compares analytic gaps against.
+            # policy compares analytic gaps against — and the residual
+            # scale the drift sentinel standardizes by.
             sigma = math.sqrt(max(fit.loss, 0.0))
             self.policy.set_sigma(sigma)
+            if self.sentinel is not None:
+                self.sentinel.set_sigma(sigma)
             save_fit(fit, cache=self.tuner.cache)
-        return {"fit_sigma": sigma, "fit_records": len(records)}
+        out = {"fit_sigma": sigma, "fit_records": len(records)}
+        deployed = self._deploy_fit(fit)
+        if deployed:
+            out["fit_deployed"] = ",".join(deployed)
+        return out
+
+    def _deploy_fit(self, fit) -> list[str]:
+        """Patch fitted scalar MachineSpec params into the tier's
+        machine (atomic attribute swap — request threads see the old or
+        the new spec, never a torn one).
+
+        Only fitted params that are real :class:`~repro.core.machine.
+        MachineSpec` fields deploy this way (``link_bw`` is; ``s_half``
+        is a derived calibration array, consumed through the persisted
+        :class:`~repro.learn.fit.FitResult` instead).  The spec's name
+        is preserved, so measured records keep accumulating under the
+        same machine key.
+        """
+        if not self.config.deploy_fit:
+            return []
+        field_names = {
+            f.name for f in dataclasses.fields(type(self.machine))
+        }
+        patch = {}
+        for k, v in fit.fitted.items():
+            if k not in field_names:
+                continue
+            try:
+                patch[k] = float(v)  # accepts numpy/jax scalars too
+            except (TypeError, ValueError):
+                continue
+        if not patch:
+            return []
+        self.machine = dataclasses.replace(self.machine, **patch)
+        self.fit_deployed = sorted(patch)
+        try:
+            _metrics.get_metrics().counter("serve/adapt.fit_deploys").inc()
+        except Exception:  # pragma: no cover
+            pass
+        return self.fit_deployed
 
     # -- reporting -------------------------------------------------------
 
@@ -660,11 +768,18 @@ class AdaptiveTier:
             "explore_granted": self.policy.granted,
             "explore_denied": self.policy.denied,
             "persistent_dirty": self.tuner.cache.dirty,
+            "fit_deployed": list(self.fit_deployed),
+            "sentinel": (
+                None if self.sentinel is None else self.sentinel.state()
+            ),
         }
 
 
 class Refitter(threading.Thread):
-    """Daemon thread running :meth:`AdaptiveTier.refit_now` on a cadence.
+    """Daemon thread running :meth:`AdaptiveTier.refit_now` on a cadence
+    — or immediately when :meth:`kick`\\ ed (the drift sentinel's alarm
+    hook), so a detected drift is acted on at alarm time instead of
+    waiting out the wall-clock interval.
 
     ``stop()`` wakes the wait and joins; the final cycle's flush is the
     tier's (``AdaptiveTier.stop`` flushes after joining, so nothing
@@ -677,13 +792,26 @@ class Refitter(threading.Thread):
         # NB: not named ``_stop`` — Thread.join's internals call a
         # private ``_stop()`` method and an Event would shadow it.
         self._halt = threading.Event()
+        self._kick = threading.Event()
+        self.kicks = 0
+
+    def kick(self) -> None:
+        """Wake the thread for an immediate re-fit cycle (thread-safe;
+        coalesces — multiple kicks before the wake run one cycle)."""
+        self.kicks += 1
+        self._kick.set()
 
     def run(self) -> None:
-        while not self._halt.wait(self.tier.config.refit_interval_s):
+        while True:
+            self._kick.wait(self.tier.config.refit_interval_s)
+            self._kick.clear()
+            if self._halt.is_set():
+                return
             self.tier.refit_now()
 
     def stop(self, timeout: float = 10.0) -> None:
         self._halt.set()
+        self._kick.set()  # wake the wait so the halt is seen now
         self.join(timeout=timeout)
 
 

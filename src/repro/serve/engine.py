@@ -101,14 +101,26 @@ class DecodeEngine:
         reg = _metrics.get_metrics()
         steps_c = reg.counter("serve/steps")
         tokens_c = reg.counter("serve/tokens")
+        overlap_args = {}
         if self.adapt is not None:
             self.last_decision = self.adapt.pick_for_requests(
                 requests, self.cfg
             )
+            # Surface the batch's overlap decision on the run span so a
+            # merged fleet trace reads which schedule served which
+            # batch without joining against the audit log.  The hook is
+            # duck-typed (tests stub it), so only annotate when the
+            # decision actually carries a schedule.
+            sched = getattr(self.last_decision, "schedule", None)
+            if sched is not None:
+                overlap_args = {
+                    "overlap_schedule": sched.value,
+                    "overlap_tier": self.last_decision.source,
+                }
         with _trace.span(
             "serve/run", "serve",
             n_requests=len(requests), batch=self.batch,
-            max_prompt=max_prompt, max_new=max_new,
+            max_prompt=max_prompt, max_new=max_new, **overlap_args,
         ):
             for pos in range(max_prompt + max_new):
                 feed = []

@@ -513,6 +513,7 @@ def sweep_grid(
     with _trace.span(
         "sweep/run", "sweep", mode=mode, n_owned=len(owned),
         n_scenarios=len(sb), two_phase=two_phase,
+        host_index=host_index, host_count=host_count,
     ):
         for shard in owned:
             start, stop = plan.bounds[shard]

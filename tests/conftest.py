@@ -34,6 +34,9 @@ def _isolated_autotune_cache(tmp_path, monkeypatch):
     # Observability stays off unless a test turns it on explicitly.
     monkeypatch.delenv("REPRO_TRACE", raising=False)
     monkeypatch.delenv("REPRO_AUTOTUNE_AUDIT", raising=False)
+    monkeypatch.delenv("REPRO_SIGNATURES", raising=False)
+    monkeypatch.delenv("REPRO_AUTOTUNE_AUDIT_MAX_BYTES", raising=False)
+    monkeypatch.delenv("REPRO_AUTOTUNE_AUDIT_KEEP", raising=False)
 
     def _reset():
         tuner_mod = sys.modules.get("repro.autotune.tuner")
@@ -62,6 +65,9 @@ def _isolated_autotune_cache(tmp_path, monkeypatch):
         audit_mod = sys.modules.get("repro.obs.audit")
         if audit_mod is not None:
             audit_mod.disable_audit()
+        signature_mod = sys.modules.get("repro.obs.signature")
+        if signature_mod is not None:
+            signature_mod._STREAM = None
 
     _reset()
     yield

@@ -103,12 +103,62 @@ def hosts_compose_with_devices():
     assert_grid_identical(merged, ref, "hosts+devices ")
 
 
+def two_host_metrics_merge_exact():
+    # Fleet obs merge under a REAL two-host sweep: each "host" runs its
+    # owned shards against a fresh registry and exports an
+    # identity-stamped reservoir snapshot; the merged snapshot's
+    # counters must equal a single whole-sweep run bit for bit, and its
+    # percentiles must be nearest-rank over the union of the per-host
+    # reservoirs (exact here — counts are far below RESERVOIR_SIZE).
+    import math
+
+    from repro.obs import metrics as obs_metrics
+
+    sb = synthetic_batch(24, seed=15)
+    snaps, union = [], []
+    for host in (0, 1):
+        obs_metrics.reset_metrics()
+        sweep_grid(
+            sb, MACHINES, num_shards=4, host_index=host, host_count=2,
+            device_parallel=True, mode="gather",
+        )
+        snap = obs_metrics.get_metrics().snapshot(
+            reservoir=True, host={"host_index": host, "pid": 1000 + host},
+        )
+        union.extend(snap["histograms"]["sweep/shard_seconds"]["reservoir"])
+        snaps.append(snap)
+
+    obs_metrics.reset_metrics()
+    sweep_grid(sb, MACHINES, num_shards=4, device_parallel=True,
+               mode="gather")
+    ref = obs_metrics.get_metrics().snapshot()
+
+    merged = obs_metrics.merge_snapshots(snaps)
+    assert obs_metrics.validate_merged_snapshot(merged) == [], (
+        obs_metrics.validate_merged_snapshot(merged)
+    )
+    assert merged["hosts"] == 2
+    # Counters: the two hosts' shards partition the sweep exactly.
+    assert merged["counters"] == ref["counters"], (
+        merged["counters"], ref["counters"],
+    )
+    h = merged["histograms"]["sweep/shard_seconds"]
+    union.sort()
+    assert h["count"] == 4 == len(union)
+    assert "approx" not in h  # both inputs carried reservoirs
+    assert h["reservoir_n"] == 4
+    for q, want in (("p50", union[1]), ("p95", union[3])):
+        assert h[q] == want, (q, h[q], want)
+    assert math.isclose(h["sum"], sum(union), rel_tol=1e-12)
+
+
 def main():
     assert len(jax.devices()) == 2, jax.devices()
     check("uniform_device_sharded_exact", uniform_device_sharded_exact)
     check("ragged_device_sharded_exact", ragged_device_sharded_exact)
     check("divisible_count_exact", divisible_count_exact)
     check("hosts_compose_with_devices", hosts_compose_with_devices)
+    check("two_host_metrics_merge_exact", two_host_metrics_merge_exact)
     if failures:
         print("FAILED:", failures)
         sys.exit(1)

@@ -500,3 +500,110 @@ class TestDriftingStream:
             list(drifting_request_stream(10, steps=0))
         with pytest.raises(ValueError):
             list(drifting_request_stream(10, drift_every=0))
+
+
+class TestDriftSentinel:
+    """The closed loop the ISSUE pins down: injected drift (a degraded
+    link) trips the sentinel, the drift-triggered refit re-calibrates
+    the machine model, and the post-refit residual measurably shrinks."""
+
+    def _drift_tier(self, tmp_path, *, link_scale=0.45):
+        import dataclasses as dc
+
+        degraded = dc.replace(
+            TPU_V5E, link_bw=TPU_V5E.link_bw * link_scale
+        )
+        cfg = AdaptConfig(
+            explore_rate=0.0, explore_burst=1000.0,
+            refit_min_picks=10**9,  # isolate the machine-fit path
+            sentinel_min_samples=4, fit_steps=80,
+        )
+        tier = _tier(
+            tmp_path, clock=FakeClock(), config=cfg,
+            measure_fn=simulated_measure_fn(degraded, noise=0.0, seed=0),
+        )
+        tier.policy.set_sigma(10.0)  # every pick is ambiguous -> measured
+        return tier
+
+    @pytest.mark.autotune
+    def test_drift_alarm_refit_recovery(self, tmp_path):
+        tier = self._drift_tier(tmp_path)
+        assert tier.sentinel is not None
+        gemms = [
+            GemmShape(4096 * (i + 1), 8192, 8192, 2) for i in range(8)
+        ]
+        for g in gemms:
+            tier.pick(g)
+        # Every measured pick fed the sentinel a predicted-vs-measured
+        # residual; the 1/0.45 slowdown is ~0.8 in log space — far past
+        # the CUSUM threshold.
+        st = tier.sentinel.state()
+        assert st["alarmed"] == "residual"
+        assert st["ewma"] > 0.0  # measured slower than the model
+        assert tier.sentinel.should_refit()
+        pre_ewma = st["ewma"]
+
+        rep = tier.refit_now()
+        assert rep["trigger"] == "drift"
+        assert "fit_sigma" in rep
+        assert "link_bw" in rep.get("fit_deployed", ())
+        assert tier.machine.link_bw < TPU_V5E.link_bw  # calibrated down
+        assert tier.machine.name == TPU_V5E.name
+        assert not tier.sentinel.should_refit()  # latch cleared
+        refits = [
+            e for e in tier.sentinel.events
+            if e["kind"] == "sentinel_refit"
+        ]
+        assert len(refits) == 1 and refits[0]["trigger"] == "drift"
+
+        # Post-refit traffic: the fit shrank policy sigma, so re-open
+        # the measured tier and keep serving against the same degraded
+        # hardware — predictions now come from the calibrated machine.
+        tier.policy.set_sigma(10.0)
+        for i in range(6):
+            tier.pick(GemmShape(4096 * (i + 1), 8192, 8192 + 1024, 2))
+        recs = [
+            e for e in tier.sentinel.events
+            if e["kind"] == "sentinel_recovery"
+        ]
+        assert len(recs) == 1
+        rec = recs[0]
+        assert rec["samples"] >= 4
+        assert abs(rec["pre_refit_ewma"]) >= abs(pre_ewma) * 0.5
+        # The acceptance bar: residual measurably shrinks post-refit.
+        assert abs(rec["post_mean"]) < 0.5 * abs(rec["pre_refit_ewma"])
+
+    def test_sentinel_disabled_by_config(self, tmp_path):
+        tier = _tier(tmp_path, config=AdaptConfig(sentinel=False))
+        assert tier.sentinel is None
+        assert tier.stats()["sentinel"] is None
+        tier.pick(GEMM)  # measured path must not touch the sentinel
+        assert tier.refit_now()["trigger"] == "interval"
+
+    def test_stats_surface_sentinel_state(self, tmp_path):
+        tier = _tier(tmp_path)
+        st = tier.stats()["sentinel"]
+        assert st is not None
+        assert st["n"] == 0 and st["alarmed"] is None
+
+    def test_alarm_hook_wired_on_start(self, tmp_path):
+        tier = _tier(tmp_path)
+        assert tier.sentinel.on_alarm is None
+        with tier:
+            assert tier.sentinel.on_alarm == tier._refitter.kick
+        assert tier.sentinel.on_alarm is None  # unhooked on stop
+
+    def test_refitter_kick_runs_cycle_now(self, tmp_path):
+        import time as _time
+
+        cfg = AdaptConfig(refit_interval_s=60.0)  # interval never fires
+        tier = _tier(tmp_path, config=cfg)
+        reg = obs_metrics.get_metrics()
+        with tier:
+            tier._refitter.kick()
+            deadline = _time.monotonic() + 5.0
+            while (reg.counter("serve/adapt.refits").value < 1
+                   and _time.monotonic() < deadline):
+                _time.sleep(0.01)
+            assert reg.counter("serve/adapt.refits").value >= 1
+            assert tier._refitter.kicks == 1
